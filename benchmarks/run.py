@@ -1,0 +1,52 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run             # default (quick) pass
+    PYTHONPATH=src python -m benchmarks.run --steps 400 # closer to the paper
+    PYTHONPATH=src python -m benchmarks.run --only table1
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=120,
+                    help="fine-tuning steps per sweep point")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on benchmark name")
+    args = ap.parse_args()
+
+    from benchmarks import paper_tables as pt
+
+    benches = [
+        ("table1_glue_sweep", lambda: pt.table1_glue_sweep(args.steps)),
+        ("table2_squad_sweep", lambda: pt.table2_squad_sweep(args.steps)),
+        ("table3_vit_sweep", lambda: pt.table3_vit_sweep(args.steps)),
+        ("fig4_act_bits", lambda: pt.fig4_act_bits(args.steps)),
+        ("fig5_loss_traj", lambda: pt.fig5_loss_traj(max(args.steps, 150))),
+        ("fig1_throughput", pt.fig1_throughput),
+    ]
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in benches:
+        if args.only and args.only not in name:
+            continue
+        print(f"# --- {name} ---", file=sys.stderr, flush=True)
+        try:
+            for row in fn():
+                print(f"{row[0]},{row[1]:.1f},{row[2]}", flush=True)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} benchmark(s) failed")
+
+
+if __name__ == "__main__":
+    main()

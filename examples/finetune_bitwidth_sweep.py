@@ -1,0 +1,40 @@
+"""Paper reproduction driver: BERT-style bit-width sweep (Tables 1-2, Figs
+3-4) on the synthetic GLUE/SQuAD proxies.
+
+    PYTHONPATH=src python examples/finetune_bitwidth_sweep.py --task span \
+        --steps 200
+"""
+import argparse
+import sys
+
+sys.path.insert(0, ".")
+
+from benchmarks.tasks import FtConfig, finetune, sweep  # noqa: E402
+from repro.core.qconfig import QuantConfig  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--task", default="cls", choices=["cls", "span", "img"])
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--fig4", action="store_true",
+                    help="activation-bit-width sweep at w8/g8 (paper Fig. 4)")
+    args = ap.parse_args()
+
+    ft = FtConfig(steps=args.steps)
+    if args.fig4:
+        print("Fig. 4 — w8/g8, varying activation bits on the span task:")
+        for ab in (8, 10, 12, 16):
+            q = QuantConfig(weight_bits=8, act_bits=ab, grad_bits=8)
+            metric, _ = finetune("span", q, ft)
+            print(f"  act_bits={ab:<3d} EM={metric:.2f}")
+        return
+    print(f"bit-width sweep on task={args.task} ({args.steps} steps/point):")
+    res = sweep(args.task, ["fp32", "int16", "int12", "int10", "int8"], ft)
+    base = res["fp32"]
+    for p, m in res.items():
+        print(f"  {p:7s} metric={m:6.2f} drop={base - m:+.2f}")
+
+
+if __name__ == "__main__":
+    main()

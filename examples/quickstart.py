@@ -1,0 +1,40 @@
+"""Quickstart: fine-tune a small LM with integer forward+backward propagation
+and compare against the FP32 baseline — the paper's recipe in ~40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.core.qconfig import QuantConfig
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import lm
+from repro.train import optimizer as opt_lib, trainer
+
+
+def finetune(preset: str, steps: int = 30):
+    cfg = registry.get_config("qwen1.5-0.5b").reduced()
+    qcfg = QuantConfig.preset(preset)
+    key = jax.random.PRNGKey(0)
+    params = lm.lm_init(key, cfg)
+    opt_state = opt_lib.init(params)
+    opt_cfg = opt_lib.OptimizerConfig(lr=2e-3, weight_decay=0.0)
+    step = jax.jit(trainer.make_train_step(lm.lm_loss, cfg, qcfg, opt_cfg))
+    data = SyntheticLM(DataConfig(batch_size=8, seq_len=64, vocab=cfg.vocab))
+    losses = []
+    for i in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+        params, opt_state, m = step(params, opt_state, batch,
+                                    jax.random.fold_in(key, i))
+        losses.append(float(m["loss"]))
+    return losses
+
+
+if __name__ == "__main__":
+    for preset in ("fp32", "int16", "int8"):
+        losses = finetune(preset)
+        print(f"{preset:6s} first={losses[0]:.4f} last={losses[-1]:.4f} "
+              f"trajectory={['%.2f' % l for l in losses[::6]]}")
+    print("\nint16 should track fp32 closely; int8 (w8/a12/g8) slightly "
+          "shifted but converging — the paper's Figure 5 at smoke scale.")

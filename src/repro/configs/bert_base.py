@@ -1,0 +1,10 @@
+"""bert-base — the paper's primary fine-tuning subject (Devlin et al. 2018).
+
+12L d_model=768 12H d_ff=3072 vocab=30522, learned positions, post-LN-style
+encoder with GeLU; integer layers per the paper. Used by the reproduction
+benchmarks (GLUE/SQuAD proxies) — see ``repro.models.paper_models``.
+"""
+from repro.models.paper_models import bert_config
+
+CONFIG = bert_config(n_layers=12, d_model=768, n_heads=12, d_ff=3072,
+                     vocab=30522, name="bert-base")

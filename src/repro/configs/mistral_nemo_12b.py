@@ -1,0 +1,8 @@
+"""mistral-nemo-12b — dense GQA kv=8, 128k ctx [hf:mistralai/Mistral-Nemo-Base-2407; hf]."""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mistral-nemo-12b", family="dense",
+    n_layers=40, d_model=5120, n_heads=32, n_kv_heads=8, d_ff=14336,
+    vocab=131072, head_dim=128, rope_theta=1e6,
+)

@@ -1,0 +1,9 @@
+"""mixtral-8x7b — 8-expert top-2 MoE, SWA [arXiv:2401.04088; hf]."""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mixtral-8x7b", family="moe",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8, d_ff=14336,
+    vocab=32000, head_dim=128, sliding_window=4096,
+    moe_experts=8, moe_topk=2,
+)

@@ -1,0 +1,10 @@
+"""qwen2-moe-a2.7b — 60 routed experts top-4 + 4 shared [hf:Qwen/Qwen1.5-MoE-A2.7B; hf]."""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-moe-a2.7b", family="moe",
+    n_layers=24, d_model=2048, n_heads=16, n_kv_heads=16, d_ff=1408,
+    vocab=151936, head_dim=128,
+    moe_experts=60, moe_topk=4,
+    moe_shared_dff=5632,          # 4 shared experts = 4 x 1408
+)

@@ -1,0 +1,9 @@
+"""vit-base — the paper's image-classification subject (Dosovitskiy et al.
+2020). 12L d_model=768 12H d_ff=3072, patch 16, img 224; the patch embedding
+is the paper's integer *convolutional* layer (``int_ops.int_patch_embed``).
+Used by the CIFAR-proxy benchmark — see ``repro.models.paper_models``.
+"""
+from repro.models.paper_models import vit_config
+
+CONFIG = vit_config(n_layers=12, d_model=768, n_heads=12, d_ff=3072,
+                    img=224, patch=16, name="vit-base")

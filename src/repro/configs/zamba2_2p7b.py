@@ -1,0 +1,11 @@
+"""zamba2-2.7b — Mamba2 backbone + shared attention block [arXiv:2411.15242; hf]."""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="zamba2-2.7b", family="hybrid",
+    n_layers=54, d_model=2560, n_heads=32, n_kv_heads=32, d_ff=10240,
+    vocab=32000, head_dim=80,
+    ssm_state=64, ssm_expand=2, ssm_headdim=64, ssm_conv=4,
+    hybrid_attn_every=6,
+    subquadratic=True,     # SSM state is O(1); shared-attn KV is linear in S
+)

@@ -1,0 +1,211 @@
+"""b-bit dynamic fixed-point (DFX) mapping — the paper's numeric core.
+
+The *linear fixed-point mapping* of Ghaffari et al. (2022), as used by the
+paper, shares the **maximum IEEE-754 exponent** of a tensor across all its
+elements, shifts every mantissa right by the exponent gap, and rounds to
+``b-1`` magnitude bits plus a sign bit.  Arithmetically this is exactly
+
+    e_scale = exponent of max|x|          (frexp convention: max|x| in [0.5,1)·2^e)
+    delta   = 2^(e_scale - b + 1)         (the quantization step)
+    m_i     = round(x_i / delta)          with |m_i| <= 2^(b-1)
+
+and the *non-linear inverse mapping* is ``x̂_i = m_i · delta`` (the paper's
+per-element renormalization of mantissa/exponent produces the same value; we
+use the arithmetic form, which is TPU-friendly — see DESIGN.md §2).
+
+Proposition 1 of the paper bounds the mapping error by
+``|x̂_i - x_i| <= 2^(e_scale_ieee - b + 2) = delta`` and its variance by
+``delta²`` — property-tested in ``tests/test_dfx_properties.py``.
+
+A ``DfxTensor`` carries the integer mantissa and the scale *exponent*
+(``value = m · 2^exp``), so an integer matmul of two DfxTensors produces an
+integer mantissa whose scale exponent is the **sum** of the input exponents —
+the "single add" of the paper's Figure 2.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def storage_dtype(bits: int):
+    """Narrowest signed-integer dtype that holds a ``bits``-bit mantissa.
+
+    Narrow storage is a real memory win: residual activations saved for the
+    backward pass are int8/int16 mantissas instead of FP32 (4x/2x smaller) —
+    this shows up directly in the dry-run ``memory_analysis``.
+    """
+    if bits <= 8:
+        return jnp.int8
+    if bits <= 16:
+        return jnp.int16
+    return jnp.int32
+
+
+class DfxTensor(NamedTuple):
+    """Dynamic fixed-point tensor: ``value = m * 2.0**exp``.
+
+    ``m``   — integer mantissa (narrowest int dtype that fits ``b`` bits)
+    ``exp`` — scale exponent, int32. Shape broadcasts against ``m`` (scalar
+              for per-tensor scale; keep-dims shape for per-axis scales).
+    """
+
+    m: jax.Array
+    exp: jax.Array
+
+    @property
+    def shape(self):  # convenience
+        return self.m.shape
+
+
+def _scale_exponent(x: jax.Array, reduce_axes: Optional[Sequence[int]]) -> jax.Array:
+    """Exponent ``e`` with ``max|x| <= 2**e`` (frexp convention), per scale group.
+
+    Zero tensors get exponent 0 (mantissas are all-zero anyway, any exponent
+    is exact).
+    """
+    absmax = jnp.max(jnp.abs(x), axis=reduce_axes, keepdims=reduce_axes is not None)
+    # frexp: absmax = f * 2**e with f in [0.5, 1). Exact for finite inputs.
+    _, e = jnp.frexp(absmax)
+    return jnp.where(absmax > 0, e, 0).astype(jnp.int32)
+
+
+def _round_to_nearest(y: jax.Array) -> jax.Array:
+    # IEEE round-half-to-even, matching hardware RN.
+    return jnp.round(y)
+
+
+def _round_stochastic(y: jax.Array, key: jax.Array) -> jax.Array:
+    u = jax.random.uniform(key, y.shape, dtype=y.dtype)
+    return jnp.floor(y + u)
+
+
+def quantize(
+    x: jax.Array,
+    bits: int,
+    *,
+    stochastic: bool = False,
+    key: Optional[jax.Array] = None,
+    reduce_axes: Optional[Sequence[int]] = None,
+) -> DfxTensor:
+    """Linear fixed-point mapping: FP32 tensor → b-bit DFX mantissa + scale.
+
+    ``reduce_axes=None`` shares one scale over the whole tensor (the paper's
+    per-tensor mapping).  Passing a subset of axes yields per-channel /
+    per-row scales (beyond-paper extension; the axes listed are the ones the
+    scale is shared *over*).
+    """
+    if stochastic and key is None:
+        raise ValueError("stochastic rounding requires a PRNG key")
+    x = x.astype(jnp.float32)
+    e = _scale_exponent(x, reduce_axes)
+    # step = 2**(e - bits + 1); scale mantissa so |m| <= 2**(bits-1).
+    exp = (e - (bits - 1)).astype(jnp.int32)
+    y = x * jnp.exp2(-exp.astype(jnp.float32))
+    y = _round_stochastic(y, key) if stochastic else _round_to_nearest(y)
+    # Clip the (rare) max element that rounds up to 2**(b-1) so the mantissa
+    # fits signed-b-bit storage; clip error < step, inside Prop. 1's bound.
+    lim = float(2 ** (bits - 1) - 1)
+    m = jnp.clip(y, -lim, lim).astype(storage_dtype(bits))
+    return DfxTensor(m=m, exp=exp)
+
+
+def dequantize(t: DfxTensor, dtype=jnp.float32) -> jax.Array:
+    """Non-linear inverse mapping: DFX → floating point (exact)."""
+    return (t.m.astype(dtype) * jnp.exp2(t.exp.astype(dtype)))
+
+
+def quantize_dequantize(
+    x: jax.Array,
+    bits: int,
+    *,
+    stochastic: bool = False,
+    key: Optional[jax.Array] = None,
+    reduce_axes: Optional[Sequence[int]] = None,
+) -> jax.Array:
+    """Fake-quant helper (map + inverse-map) used for non-matmul tensors."""
+    return dequantize(quantize(x, bits, stochastic=stochastic, key=key,
+                               reduce_axes=reduce_axes))
+
+
+# ---------------------------------------------------------------------------
+# Integer contractions on DFX tensors
+# ---------------------------------------------------------------------------
+
+#: Largest mantissa-bit budget for which an f32 MAC chain is *bit-exact*
+#: (int32 limb kernels take over beyond this on TPU; see kernels/bfp_matmul).
+_EXACT_F32_BITS = 24
+
+
+def acc_dtype(bits_a: int, bits_b: int, contraction: int) -> jnp.dtype:
+    """Accumulator dtype that keeps the integer matmul exact.
+
+    ``bits_a + bits_b - 2 + ceil(log2(K))`` bits are needed.  Up to 24 we may
+    accumulate in f32 exactly; up to 52 in f64; otherwise int32 limb splitting
+    (Pallas kernel) is required.  On the CPU simulation path we use f32
+    whenever the *products* are exact (<=24 bits) and accept f32 accumulation
+    rounding beyond that — documented in DESIGN.md §2; the Pallas kernel is
+    the exact path.
+    """
+    need = bits_a + bits_b - 2 + max(1, int(np.ceil(np.log2(max(contraction, 2)))))
+    return jnp.float32 if need <= _EXACT_F32_BITS else jnp.float32  # sim path
+
+
+def dfx_dot_general(
+    a: DfxTensor,
+    b: DfxTensor,
+    dimension_numbers,
+    preferred_element_type=jnp.float32,
+) -> jax.Array:
+    """Integer ``dot_general`` of two DFX tensors, dequantized output.
+
+    The mantissa contraction is integer-valued; the output scale is the sum
+    of the two input scale exponents (paper Fig. 2: "a single add").  Scales
+    must be per-tensor or constant along the contracted axes.
+    """
+    prod = jax.lax.dot_general(
+        a.m.astype(jnp.float32), b.m.astype(jnp.float32),
+        dimension_numbers=dimension_numbers,
+        preferred_element_type=preferred_element_type,
+    )
+    # Per-tensor scales broadcast trivially. Per-axis scales: caller must
+    # pre-broadcast exponents to the output shape (int_ops does this).
+    out_exp = (a.exp + b.exp).astype(jnp.float32)
+    return prod * jnp.exp2(_broadcast_out_exp(out_exp, prod.shape))
+
+
+def _broadcast_out_exp(out_exp: jax.Array, out_shape) -> jax.Array:
+    if out_exp.ndim == 0 or out_exp.shape == tuple(out_shape):
+        return out_exp
+    # Squeeze kept-dims of size 1 and rely on trailing broadcast when
+    # possible; otherwise the caller must align shapes explicitly.
+    squeezed = jnp.squeeze(out_exp)
+    if squeezed.ndim == 0:
+        return squeezed
+    return out_exp
+
+
+def dfx_matmul(a: DfxTensor, b: DfxTensor) -> jax.Array:
+    """``a @ b`` for stacked matrices: contracts last dim of a, first of b."""
+    nd_a = a.m.ndim
+    dn = (((nd_a - 1,), (0,)), ((), ()))
+    return dfx_dot_general(a, b, dn)
+
+
+# ---------------------------------------------------------------------------
+# Error-bound helpers (Proposition 1) — used by property tests and monitors
+# ---------------------------------------------------------------------------
+
+def error_bound(x: jax.Array, bits: int) -> jax.Array:
+    """Prop. 1 bound on |x̂ - x|: the quantization step ``2^(e_scale-b+1)``
+    (RN halves it; stochastic rounding meets it)."""
+    e = _scale_exponent(x, None)
+    return jnp.exp2((e - (bits - 1)).astype(jnp.float32))
+
+
+def variance_bound(x: jax.Array, bits: int) -> jax.Array:
+    """Prop. 1: V{delta} <= 2^(2(e_scale_ieee - b + 2)) = step^2."""
+    return error_bound(x, bits) ** 2

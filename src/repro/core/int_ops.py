@@ -1,0 +1,373 @@
+"""Integer-only layers: linear / embedding / layer-norm / rms-norm / conv.
+
+Each layer performs BOTH forward propagation and gradient computation with
+integer arithmetic on b-bit dynamic fixed-point mantissas (paper: Fig. 2 and
+"Integer-only Layers"):
+
+    forward:   q(X)·q(W)            — integer matmul, output scale = add
+    backward:  dX = q(G)·q(W)ᵀ      — integer matmul
+               dW = q(X)ᵀ·q(G)      — integer matmul, q(G) stochastically
+                                      rounded (Assumption 2 unbiasedness)
+
+Residuals saved for the backward pass are the *quantized* mantissas
+(int8/int16), which is a 4x/2x activation-memory saving over FP32 — visible
+in the dry-run memory analysis.
+
+Precision-critical ops stay FP32 per the paper: softmax, non-linear
+activations, the rsqrt inside the normalization layers, and the optimizer
+update.  When ``cfg.enabled`` is False every layer degrades to its exact FP32
+reference implementation (the paper's baseline) — same code path for both.
+
+PRNG: layers take an optional ``key``. When ``cfg.stochastic_grad`` and a key
+is provided, backward gradient quantization uses stochastic rounding;
+otherwise round-to-nearest (used at serve time, where there is no backward).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dfx
+from repro.core.qconfig import QuantConfig
+
+Array = jax.Array
+
+
+def _float0(x):
+    return np.zeros(np.shape(x), dtype=jax.dtypes.float0)
+
+
+def _quant_grad(g: Array, cfg: QuantConfig, key) -> dfx.DfxTensor:
+    stoch = cfg.stochastic_grad and key is not None
+    return dfx.quantize(g, cfg.grad_bits, stochastic=stoch, key=key)
+
+
+#: When True, FSDP-sharded weights are quantized *shard-locally* and the
+#: int8/int16 MANTISSAS are what the all-gather moves (4x/2x fewer bytes on
+#: the wire than gathering FP32 then quantizing) — the paper's mapping
+#: promoted to the FSDP collective. Enabled via dryrun --variant q_gather;
+#: measured in EXPERIMENTS.md §Perf.
+QUANTIZED_WEIGHT_GATHER = False
+
+
+def _maybe_gather_quantized(qw: dfx.DfxTensor) -> dfx.DfxTensor:
+    if not QUANTIZED_WEIGHT_GATHER:
+        return qw
+    from repro import sharding as _sh
+    spec = [None] * (qw.m.ndim - 1) + ["model"]
+    # optimization_barrier on BOTH sides of the reshard: XLA's algebraic
+    # simplifier otherwise swaps the narrow-int convert with the all-gather
+    # and moves FP32 over the wire (verified in the compiled HLO).
+    m = jax.lax.optimization_barrier(qw.m)
+    m = _sh.constrain(m, *spec)
+    m = jax.lax.optimization_barrier(m)
+    return dfx.DfxTensor(m=m, exp=qw.exp)
+
+
+# =========================================================================
+# Linear
+# =========================================================================
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def int_linear(x: Array, w: Array, b: Optional[Array], key, cfg: QuantConfig) -> Array:
+    """``y = x @ w (+ b)`` with integer forward and integer backward.
+
+    x: (..., K), w: (K, N), b: (N,) or None. ``key`` may be None (RN rounding).
+    """
+    y, _ = _int_linear_fwd(x, w, b, key, cfg)
+    return y
+
+
+def _int_linear_fwd(x, w, b, key, cfg: QuantConfig):
+    if not cfg.enabled:
+        y = jnp.einsum("...k,kn->...n", x, w)
+        if b is not None:
+            y = y + b
+        return y, (x, w, b is not None, key)
+    kf = None
+    if cfg.stochastic_fwd and key is not None:
+        key, kf = jax.random.split(key)
+    qx = dfx.quantize(x, cfg.act_bits, stochastic=kf is not None, key=kf)
+    qw = _maybe_gather_quantized(dfx.quantize(w, cfg.weight_bits))
+    y = dfx.dfx_matmul(qx, qw)
+    if b is not None:
+        y = y + b  # O(N) bias add, not compute-intensive (kept FP32)
+    return y, (qx, qw, b is not None, key)
+
+
+def _int_linear_bwd(cfg: QuantConfig, res, g):
+    if not cfg.enabled:
+        x, w, has_b, key = res
+        dx = jnp.einsum("...n,kn->...k", g, w)
+        dw = jnp.einsum("...k,...n->kn", x, g)
+        db = g.reshape(-1, g.shape[-1]).sum(0) if has_b else None
+        return dx, dw, db, _float0(key) if key is not None else None
+
+    qx, qw, has_b, key = res
+    qg = _quant_grad(g, cfg, key)
+    # dX = q(G) · q(W)ᵀ  — integer matmul (contract N)
+    nd = qg.m.ndim
+    dx = dfx.dfx_dot_general(qg, qw, (((nd - 1,), (1,)), ((), ())))
+    # dW = q(X)ᵀ · q(G) — integer matmul (contract all batch dims)
+    batch_axes = tuple(range(nd - 1))
+    dw = dfx.dfx_dot_general(qx, qg, ((batch_axes, batch_axes), ((), ())))
+    db = g.reshape(-1, g.shape[-1]).sum(0) if has_b else None
+    return dx, dw, db, _float0(key) if key is not None else None
+
+
+int_linear.defvjp(_int_linear_fwd, _int_linear_bwd)
+
+
+# =========================================================================
+# Batched (per-expert) linear — MoE expert FFNs with per-expert DFX scales
+# =========================================================================
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def int_batched_linear(x: Array, w: Array, key, cfg: QuantConfig) -> Array:
+    """``y[e] = x[e] @ w[e]`` with integer fwd/bwd and per-expert scales.
+
+    x: (E, C, K), w: (E, K, N) -> (E, C, N).
+    """
+    y, _ = _int_blinear_fwd(x, w, key, cfg)
+    return y
+
+
+_BATCH_DN = (((2,), (1,)), ((0,), (0,)))          # contract K, batch E
+
+
+def _int_blinear_fwd(x, w, key, cfg: QuantConfig):
+    if not cfg.enabled:
+        return jnp.einsum("eck,ekn->ecn", x, w), (x, w, key)
+    qx = dfx.quantize(x, cfg.act_bits, reduce_axes=(1, 2))    # scale per expert
+    qw = dfx.quantize(w, cfg.weight_bits, reduce_axes=(1, 2))
+    y = _batched_dfx_dot(qx, qw, _BATCH_DN)
+    return y, (qx, qw, key)
+
+
+def _batched_dfx_dot(a: dfx.DfxTensor, b: dfx.DfxTensor, dn) -> Array:
+    prod = jax.lax.dot_general(a.m.astype(jnp.float32), b.m.astype(jnp.float32),
+                               dimension_numbers=dn,
+                               preferred_element_type=jnp.float32)
+    out_exp = (a.exp + b.exp).astype(jnp.float32)             # (E, 1, 1)
+    return prod * jnp.exp2(out_exp.reshape(-1, 1, 1))
+
+
+def _int_blinear_bwd(cfg: QuantConfig, res, g):
+    if not cfg.enabled:
+        x, w, key = res
+        dx = jnp.einsum("ecn,ekn->eck", g, w)
+        dw = jnp.einsum("eck,ecn->ekn", x, g)
+        return dx, dw, _float0(key) if key is not None else None
+    qx, qw, key = res
+    stoch = cfg.stochastic_grad and key is not None
+    qg = dfx.quantize(g, cfg.grad_bits, stochastic=stoch, key=key,
+                      reduce_axes=(1, 2))
+    # dX[e] = G[e] · W[e]ᵀ ; dW[e] = X[e]ᵀ · G[e] — integer batched matmuls
+    dx = _batched_dfx_dot(qg, qw, (((2,), (2,)), ((0,), (0,))))
+    dw = _batched_dfx_dot(qx, qg, (((1,), (1,)), ((0,), (0,))))
+    return dx, dw, _float0(key) if key is not None else None
+
+
+int_batched_linear.defvjp(_int_blinear_fwd, _int_blinear_bwd)
+
+
+# =========================================================================
+# Embedding
+# =========================================================================
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def int_embedding(table: Array, ids: Array, key, cfg: QuantConfig) -> Array:
+    """Embedding lookup from a b-bit quantized table; integer scatter-add bwd."""
+    y, _ = _int_embedding_fwd(table, ids, key, cfg)
+    return y
+
+
+def _int_embedding_fwd(table, ids, key, cfg: QuantConfig):
+    if not cfg.enabled or not cfg.int_embedding:
+        return table[ids], (table.shape, ids, key)
+    qt = dfx.quantize(table, cfg.weight_bits)
+    # Gather integer mantissas, then inverse-map (a gather is index movement,
+    # integer end-to-end).
+    y = qt.m[ids].astype(jnp.float32) * jnp.exp2(qt.exp.astype(jnp.float32))
+    return y, (table.shape, ids, key)
+
+
+def _int_embedding_bwd(cfg: QuantConfig, res, g):
+    table_shape, ids, key = res
+    if not cfg.enabled or not cfg.int_embedding:
+        gq = g
+    else:
+        gq = dfx.dequantize(_quant_grad(g, cfg, key))
+    dt = jnp.zeros(table_shape, jnp.float32).at[ids].add(gq)
+    return (dt, _float0(ids), _float0(key) if key is not None else None)
+
+
+int_embedding.defvjp(_int_embedding_fwd, _int_embedding_bwd)
+
+
+# =========================================================================
+# Layer norm (and RMS norm)
+# =========================================================================
+# The reductions (sums for mean/var, and the three backward reductions) are
+# performed on integer-valued quantized tensors — exact integer arithmetic.
+# The rsqrt stays FP32 (precision-critical, same category as softmax in the
+# paper's recipe); Ghaffari et al. 2022 additionally integerize the sqrt via
+# Newton iterations — we document this as an FP32-kept op in DESIGN.md.
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def int_layernorm(x: Array, gamma: Array, beta: Array, key,
+                  cfg: QuantConfig, eps: float = 1e-5) -> Array:
+    y, _ = _int_ln_fwd(x, gamma, beta, key, cfg, eps)
+    return y
+
+
+def _int_ln_fwd(x, gamma, beta, key, cfg: QuantConfig, eps):
+    if cfg.enabled and cfg.int_layernorm:
+        xq = dfx.quantize(x, cfg.act_bits)
+        xv = dfx.dequantize(xq)
+        gq = dfx.quantize(gamma, cfg.weight_bits)
+        gv = dfx.dequantize(gq)
+        res_x = xq
+    else:
+        xv, gv = x, gamma
+        res_x = x
+    mu = jnp.mean(xv, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xv - mu), axis=-1, keepdims=True)
+    rstd = jax.lax.rsqrt(var + eps)             # FP32 (precision-critical)
+    xn = (xv - mu) * rstd
+    y = xn * gv + beta
+    return y, (res_x, gv, rstd, mu, key)
+
+
+def _int_ln_bwd(cfg: QuantConfig, eps, res, g):
+    xr, gv, rstd, mu, key = res
+    if cfg.enabled and cfg.int_layernorm:
+        xv = dfx.dequantize(xr)
+        gq = dfx.dequantize(_quant_grad(g, cfg, key))
+    else:
+        xv, gq = xr, g
+    xn = (xv - mu) * rstd
+    dgamma = jnp.sum(gq * xn, axis=tuple(range(gq.ndim - 1)))
+    dbeta = jnp.sum(gq, axis=tuple(range(gq.ndim - 1)))
+    gg = gq * gv
+    mean_gg = jnp.mean(gg, axis=-1, keepdims=True)
+    mean_ggxn = jnp.mean(gg * xn, axis=-1, keepdims=True)
+    dx = rstd * (gg - mean_gg - xn * mean_ggxn)
+    return dx, dgamma, dbeta, _float0(key) if key is not None else None
+
+
+int_layernorm.defvjp(_int_ln_fwd, _int_ln_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def int_rmsnorm(x: Array, gamma: Array, key, cfg: QuantConfig,
+                eps: float = 1e-6) -> Array:
+    y, _ = _int_rms_fwd(x, gamma, key, cfg, eps)
+    return y
+
+
+def _int_rms_fwd(x, gamma, key, cfg: QuantConfig, eps):
+    if cfg.enabled and cfg.int_layernorm:
+        xq = dfx.quantize(x, cfg.act_bits)
+        xv = dfx.dequantize(xq)
+        gv = dfx.quantize_dequantize(gamma, cfg.weight_bits)
+        res_x = xq
+    else:
+        xv, gv = x, gamma
+        res_x = x
+    ms = jnp.mean(jnp.square(xv), axis=-1, keepdims=True)
+    rstd = jax.lax.rsqrt(ms + eps)
+    y = xv * rstd * gv
+    return y, (res_x, gv, rstd, key)
+
+
+def _int_rms_bwd(cfg: QuantConfig, eps, res, g):
+    xr, gv, rstd, key = res
+    if cfg.enabled and cfg.int_layernorm:
+        xv = dfx.dequantize(xr)
+        gq = dfx.dequantize(_quant_grad(g, cfg, key))
+    else:
+        xv, gq = xr, g
+    xn = xv * rstd
+    dgamma = jnp.sum(gq * xn, axis=tuple(range(gq.ndim - 1)))
+    gg = gq * gv
+    mean_ggxn = jnp.mean(gg * xn, axis=-1, keepdims=True)
+    dx = rstd * (gg - xn * mean_ggxn)
+    return dx, dgamma, _float0(key) if key is not None else None
+
+
+int_rmsnorm.defvjp(_int_rms_fwd, _int_rms_bwd)
+
+
+# =========================================================================
+# Convolutions
+# =========================================================================
+
+def int_patch_embed(images: Array, w: Array, b: Optional[Array], key,
+                    cfg: QuantConfig, patch: int) -> Array:
+    """ViT patch embedding = non-overlapping conv = reshape + int_linear.
+
+    images: (B, H, W, C); w: (patch*patch*C, D).
+    """
+    B, H, W, C = images.shape
+    x = images.reshape(B, H // patch, patch, W // patch, patch, C)
+    x = x.transpose(0, 1, 3, 2, 4, 5).reshape(B, (H // patch) * (W // patch), -1)
+    return int_linear(x, w, b, key, cfg)
+
+
+def int_conv1d_depthwise(x: Array, w: Array, key, cfg: QuantConfig) -> Array:
+    """Causal depthwise conv1d (Mamba frontend), integer fwd/bwd.
+
+    x: (B, L, D); w: (K, D). Implemented as a sum of K shifted integer
+    elementwise products — each product is an integer multiply of two DFX
+    mantissas, so forward and backward stay integer (backward follows from
+    int_linear-style custom_vjp on the unrolled form).
+    """
+    K = w.shape[0]
+    if not cfg.enabled:
+        pads = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+        return sum(pads[:, k:k + x.shape[1], :] * w[k] for k in range(K))
+    return _int_dwconv(x, w, key, cfg, K)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _int_dwconv(x, w, key, cfg: QuantConfig, K: int):
+    y, _ = _int_dwconv_fwd(x, w, key, cfg, K)
+    return y
+
+
+def _int_dwconv_fwd(x, w, key, cfg: QuantConfig, K: int):
+    qx = dfx.quantize(x, cfg.act_bits)
+    qw = dfx.quantize(w, cfg.weight_bits)
+    xm = qx.m.astype(jnp.float32)
+    wm = qw.m.astype(jnp.float32)
+    pads = jnp.pad(xm, ((0, 0), (K - 1, 0), (0, 0)))
+    acc = sum(pads[:, k:k + x.shape[1], :] * wm[k] for k in range(K))
+    scale = jnp.exp2((qx.exp + qw.exp).astype(jnp.float32))
+    return acc * scale, (qx, qw, key)
+
+
+def _int_dwconv_bwd(cfg: QuantConfig, K: int, res, g):
+    qx, qw, key = res
+    qg = _quant_grad(g, cfg, key)
+    gm = qg.m.astype(jnp.float32)
+    xm = qx.m.astype(jnp.float32)
+    wm = qw.m.astype(jnp.float32)
+    L = gm.shape[1]
+    gpad = jnp.pad(gm, ((0, 0), (0, K - 1), (0, 0)))
+    # dx[l] = sum_k g[l + K-1-k ... ] — correlate
+    dxm = sum(gpad[:, (K - 1 - k):(K - 1 - k) + L, :] * wm[k] for k in range(K))
+    dx = dxm * jnp.exp2((qg.exp + qw.exp).astype(jnp.float32))
+    xpad = jnp.pad(xm, ((0, 0), (K - 1, 0), (0, 0)))
+    dwm = jnp.stack([
+        jnp.sum(xpad[:, k:k + L, :] * gm, axis=(0, 1)) for k in range(K)
+    ])
+    dw = dwm * jnp.exp2((qx.exp + qg.exp).astype(jnp.float32))
+    return dx, dw, _float0(key) if key is not None else None
+
+
+_int_dwconv.defvjp(_int_dwconv_fwd, _int_dwconv_bwd)

@@ -1,0 +1,95 @@
+"""Quantization configuration for b-bit dynamic fixed-point (DFX) training.
+
+The paper's control knobs are the bit-widths of the three tensor classes that
+flow through an integer layer:
+
+* ``weight_bits``  — parameters (paper: 8..16)
+* ``act_bits``     — input activations (paper: must be >= 12 when weights are 8-bit)
+* ``grad_bits``    — upstream gradients quantized in the backward pass
+
+plus the rounding mode of the backward pass (paper: stochastic rounding, which
+makes the DFX gradient an unbiased estimator — Assumption 2).
+
+``QuantConfig`` is a frozen pytree-leafless dataclass threaded through every
+integer layer; ``enabled=False`` short-circuits to the FP32 baseline so the
+same model code runs both the paper's method and its baseline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Static configuration of the b-bit dynamic fixed-point mapping."""
+
+    enabled: bool = True
+    weight_bits: int = 16
+    act_bits: int = 16
+    grad_bits: int = 16
+    #: stochastic rounding for gradient quantization (paper requires it for
+    #: the unbiasedness assumption; forward uses round-to-nearest).
+    stochastic_grad: bool = True
+    #: also stochastically round the forward mappings (off in the paper).
+    stochastic_fwd: bool = False
+    #: block size for per-block scales (None => per-tensor scale, the paper's
+    #: setting). Per-block is a beyond-paper extension evaluated in §Perf.
+    block_size: Optional[int] = None
+    #: quantize the layer-norm statistics path (paper: yes, LN is integer).
+    int_layernorm: bool = True
+    #: quantize embedding tables / lookups (paper: yes).
+    int_embedding: bool = True
+
+    def __post_init__(self):
+        for name in ("weight_bits", "act_bits", "grad_bits"):
+            b = getattr(self, name)
+            if not (2 <= b <= 24):
+                raise ValueError(f"{name}={b} outside supported range [2, 24]")
+        if self.block_size is not None and self.block_size < 8:
+            raise ValueError("block_size must be >= 8 (VMEM lane alignment)")
+
+    # -- presets matching the paper's experimental grid -------------------
+    @staticmethod
+    def fp32() -> "QuantConfig":
+        """FP32 baseline (quantization disabled)."""
+        return QuantConfig(enabled=False)
+
+    @staticmethod
+    def int16() -> "QuantConfig":
+        return QuantConfig(weight_bits=16, act_bits=16, grad_bits=16)
+
+    @staticmethod
+    def int12() -> "QuantConfig":
+        return QuantConfig(weight_bits=12, act_bits=12, grad_bits=12)
+
+    @staticmethod
+    def int10() -> "QuantConfig":
+        return QuantConfig(weight_bits=10, act_bits=10, grad_bits=10)
+
+    @staticmethod
+    def int8() -> "QuantConfig":
+        """Paper's headline low-bit setting: int8 weights/grads, int12 acts."""
+        return QuantConfig(weight_bits=8, act_bits=12, grad_bits=8)
+
+    @staticmethod
+    def int8_naive() -> "QuantConfig":
+        """w8 a8 g8 — the diverging configuration of Figure 4."""
+        return QuantConfig(weight_bits=8, act_bits=8, grad_bits=8)
+
+    @staticmethod
+    def preset(name: str) -> "QuantConfig":
+        table = {
+            "fp32": QuantConfig.fp32,
+            "int16": QuantConfig.int16,
+            "int12": QuantConfig.int12,
+            "int10": QuantConfig.int10,
+            "int8": QuantConfig.int8,
+            "int8_naive": QuantConfig.int8_naive,
+        }
+        if name not in table:
+            raise KeyError(f"unknown quant preset {name!r}; have {sorted(table)}")
+        return table[name]()
+
+
+PRESETS = ("fp32", "int16", "int12", "int10", "int8", "int8_naive")

@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: the shift-and-round pass of the DFX linear mapping.
+
+Two-pass structure (DESIGN.md §2): pass 1 is the max-abs exponent reduction
+(left to XLA — a bandwidth-bound reduce the compiler already fuses); pass 2
+(this kernel) streams the tensor once through VMEM doing
+
+    m = clip(round(x * 2^-exp  [+ u]), ±(2^(b-1)-1)) -> int8/int16
+
+with optional stochastic rounding (``u`` uniform noise; on real TPU this is
+generated in-kernel by ``pltpu.prng_random_bits`` — the noise input path is
+used for interpret-mode validation and bit-exact cross-checks).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _quant_kernel(x_ref, exp_ref, o_ref, *, bits: int):
+    scale = jnp.exp2(-exp_ref[0].astype(jnp.float32))
+    y = jnp.round(x_ref[...] * scale)
+    lim = float(2 ** (bits - 1) - 1)
+    o_ref[...] = jnp.clip(y, -lim, lim).astype(o_ref.dtype)
+
+
+def _quant_kernel_stoch(x_ref, exp_ref, u_ref, o_ref, *, bits: int):
+    scale = jnp.exp2(-exp_ref[0].astype(jnp.float32))
+    y = jnp.floor(x_ref[...] * scale + u_ref[...])
+    lim = float(2 ** (bits - 1) - 1)
+    o_ref[...] = jnp.clip(y, -lim, lim).astype(o_ref.dtype)
+
+
+def _out_dtype(bits: int):
+    return jnp.int8 if bits <= 8 else (jnp.int16 if bits <= 16 else jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "br", "interpret"))
+def dfx_quantize(
+    x: jax.Array,            # (M, N) float32
+    exp: jax.Array,          # scalar int32 (e_max - bits + 1)
+    *,
+    bits: int,
+    u: jax.Array | None = None,   # (M, N) uniform [0,1) noise, optional
+    br: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    M, N = x.shape
+    assert M % br == 0, (M, br)
+    grid = (M // br,)
+    exp = jnp.reshape(exp, (1,)).astype(jnp.int32)
+    common = dict(
+        grid=grid,
+        out_specs=pl.BlockSpec((br, N), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, N), _out_dtype(bits)),
+        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )
+    if u is None:
+        return pl.pallas_call(
+            functools.partial(_quant_kernel, bits=bits),
+            in_specs=[pl.BlockSpec((br, N), lambda i: (i, 0)),
+                      pl.BlockSpec(memory_space=pl.ANY)],
+            **common,
+        )(x, exp)
+    return pl.pallas_call(
+        functools.partial(_quant_kernel_stoch, bits=bits),
+        in_specs=[pl.BlockSpec((br, N), lambda i: (i, 0)),
+                  pl.BlockSpec(memory_space=pl.ANY),
+                  pl.BlockSpec((br, N), lambda i: (i, 0))],
+        **common,
+    )(x, exp, u)

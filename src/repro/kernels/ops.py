@@ -1,0 +1,137 @@
+"""jit'd public wrappers over the Pallas kernels.
+
+Adds the pieces that keep the kernels simple:
+
+* **int8 limb decomposition** for mantissas wider than 8 bits — the TPU MXU
+  multiplies int8×int8; a b<=16-bit mantissa is split into a hi int8 limb
+  (signed) and a lo uint8-ish limb carried in int8 with offset arithmetic:
+  ``m = hi * 2^7 + lo`` with ``lo in [-64, 63]``-style balanced digits so
+  every limb product fits the int8 MXU path.  ``X@W`` then becomes up to 9
+  kernel invocations; each partial is bit-exact int32, the cross-limb combine
+  is an f32 epilogue (rounding ~1 ulp of the largest partial — DESIGN.md §2).
+* shape padding to MXU tile multiples, and un-padding of the result;
+* automatic ``interpret=True`` when not running on real TPU hardware.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bfp_matmul import bfp_matmul
+from repro.kernels.dfx_quant import dfx_quantize
+from repro.kernels.int_layernorm import int_layernorm_fwd
+
+#: balanced-digit base: |hi| <= 2^(b-8), |lo| < 2^7 — both in int8 range and
+#: hi*lo products stay within the MXU's int8 operand contract for b <= 15;
+#: for b == 16 the hi limb spans int9, carried via a second split (4 limbs).
+_LIMB_BITS = 7
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _split_limbs(m: jax.Array, bits: int):
+    """Split an integer mantissa tensor into int8 limbs (balanced digits).
+
+    Returns a list of (limb_int8, shift) with ``m = sum(limb * 2**shift)``.
+    """
+    if bits <= 8:
+        return [(m.astype(jnp.int8), 0)]
+    m32 = m.astype(jnp.int32)
+    limbs = []
+    shift = 0
+    while bits > 0:
+        take = min(_LIMB_BITS, bits)
+        base = 1 << _LIMB_BITS
+        # Balanced remainder in [-base/2, base/2): keeps limbs centred so the
+        # carry into the next limb is exact integer arithmetic.
+        lo = ((m32 + base // 2) % base) - base // 2
+        m32 = (m32 - lo) // base
+        limbs.append((lo.astype(jnp.int8), shift))
+        shift += _LIMB_BITS
+        bits -= take
+    return limbs
+
+
+def dfx_matmul_tiled(
+    xm: jax.Array, x_exp: jax.Array, x_bits: int,
+    wm: jax.Array, w_exp: jax.Array, w_bits: int,
+    *, interpret: bool | None = None,
+) -> jax.Array:
+    """Integer DFX matmul via the Pallas kernel, with limb decomposition.
+
+    xm: (M, K) int mantissas, wm: (K, N). Returns FP32 ``(x·w)`` dequantized.
+    """
+    if interpret is None:
+        interpret = not on_tpu()
+    M, K = xm.shape
+    _, N = wm.shape
+    bm, bn, bk = _pick_blocks(M, N, K)
+    xm, wm = _pad2(xm, bm, bk), _pad2(wm, bk, bn)
+    out_exp = (x_exp + w_exp).astype(jnp.int32)
+    x_limbs = _split_limbs(xm, x_bits)
+    w_limbs = _split_limbs(wm, w_bits)
+    out = None
+    for xl, xs in x_limbs:
+        for wl, ws in w_limbs:
+            part = bfp_matmul(xl, wl, out_exp, bm=bm, bn=bn, bk=bk,
+                              interpret=interpret)
+            part = part * (2.0 ** (xs + ws))
+            out = part if out is None else out + part
+    return out[:M, :N]
+
+
+def _pick_blocks(M: int, N: int, K: int):
+    bm = 128 if M >= 128 else _round_up_pow2(M, 8)
+    bn = 128 if N >= 128 else _round_up_pow2(N, 128)
+    bk = 128 if K >= 128 else _round_up_pow2(K, 128)
+    return bm, bn, bk
+
+
+def _round_up_pow2(x: int, mult: int) -> int:
+    r = ((x + mult - 1) // mult) * mult
+    return max(r, mult)
+
+
+def _pad2(a: jax.Array, r: int, c: int) -> jax.Array:
+    M, N = a.shape
+    pm = (-M) % r
+    pn = (-N) % c
+    if pm or pn:
+        a = jnp.pad(a, ((0, pm), (0, pn)))
+    return a
+
+
+def quantize_pallas(x: jax.Array, exp: jax.Array, bits: int,
+                    u: jax.Array | None = None,
+                    interpret: bool | None = None) -> jax.Array:
+    """2-D wrapper over the quantize kernel with row padding."""
+    if interpret is None:
+        interpret = not on_tpu()
+    M, N = x.shape
+    br = min(256, _round_up_pow2(M, 8))
+    pm = (-M) % br
+    if pm:
+        x = jnp.pad(x, ((0, pm), (0, 0)))
+        if u is not None:
+            u = jnp.pad(u, ((0, pm), (0, 0)))
+    out = dfx_quantize(x, exp, bits=bits, u=u, br=br, interpret=interpret)
+    return out[:M]
+
+
+def layernorm_pallas(xm: jax.Array, x_exp: jax.Array, gamma: jax.Array,
+                     beta: jax.Array, eps: float = 1e-5,
+                     interpret: bool | None = None) -> jax.Array:
+    if interpret is None:
+        interpret = not on_tpu()
+    R, D = xm.shape
+    br = min(8, _round_up_pow2(R, 8))
+    pr = (-R) % br
+    if pr:
+        xm = jnp.pad(xm, ((0, pr), (0, 0)))
+    out = int_layernorm_fwd(xm, x_exp, gamma, beta, br=br, eps=eps,
+                            interpret=interpret)
+    return out[:R]

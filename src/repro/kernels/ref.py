@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each function mirrors the semantics of the corresponding kernel exactly —
+tests sweep shapes/dtypes and ``assert_allclose`` kernel-vs-oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bfp_matmul_ref(xm: jax.Array, wm: jax.Array, out_exp: jax.Array) -> jax.Array:
+    """Integer mantissa matmul with fused dequant: ``(xm @ wm) * 2**out_exp``.
+
+    xm: (M, K) int8/int16 mantissas; wm: (K, N); out_exp: scalar int32.
+    Accumulation is exact integer (int32).
+    """
+    acc = jax.lax.dot_general(
+        xm.astype(jnp.int32), wm.astype(jnp.int32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * jnp.exp2(out_exp.astype(jnp.float32))
+
+
+def dfx_quantize_ref(x: jax.Array, exp: jax.Array, bits: int,
+                     u: jax.Array | None = None) -> jax.Array:
+    """Shift-and-round pass of the linear fixed-point mapping.
+
+    ``exp`` is the precomputed scale exponent (``e_max - bits + 1``); ``u`` is
+    optional uniform noise in [0,1) enabling stochastic rounding.
+    Returns the integer mantissa in the narrowest fitting dtype.
+    """
+    y = x.astype(jnp.float32) * jnp.exp2(-exp.astype(jnp.float32))
+    y = jnp.floor(y + u) if u is not None else jnp.round(y)
+    lim = float(2 ** (bits - 1) - 1)
+    dt = jnp.int8 if bits <= 8 else (jnp.int16 if bits <= 16 else jnp.int32)
+    return jnp.clip(y, -lim, lim).astype(dt)
+
+
+def int_layernorm_ref(xm: jax.Array, x_exp: jax.Array, gamma: jax.Array,
+                      beta: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """Fused integer layer-norm forward.
+
+    Statistics are integer sums over the mantissas (scale factors cancel in
+    the normalized value up to the eps term, which we apply in the *value*
+    domain to match int_ops semantics); affine params are FP32.
+    xm: (..., D) integer mantissas, x_exp scalar.
+    """
+    xv = xm.astype(jnp.float32) * jnp.exp2(x_exp.astype(jnp.float32))
+    mu = jnp.mean(xv, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xv - mu), axis=-1, keepdims=True)
+    xn = (xv - mu) * jax.lax.rsqrt(var + eps)
+    return xn * gamma + beta

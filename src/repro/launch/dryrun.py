@@ -1,0 +1,512 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST precede every other import (jax locks the device count on first
+# init). Placeholder CPU devices let ``jax.make_mesh`` build the production
+# 16x16 / 2x16x16 meshes so every (arch x shape) cell can be lowered,
+# compiled, and analysed without hardware.
+
+"""Multi-pod dry-run driver (brief: MULTI-POD DRY-RUN steps 2-4).
+
+For every (architecture x input-shape) cell:
+    lowered  = jit(entry_fn, in_shardings, out_shardings).lower(*input_specs)
+    compiled = lowered.compile()
+    record   memory_analysis(), cost_analysis(), per-collective bytes
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                    # all cells, both meshes
+    PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x7b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --multi-pod-only
+Results land in experiments/dryrun/<mesh>/<arch>__<shape>.json.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import sharding
+from repro.configs import registry
+from repro.core.qconfig import QuantConfig
+from repro.launch.mesh import make_production_mesh
+from repro.models import encdec, lm
+from repro.models.config import SHAPES, shape_applicable
+from repro.train import optimizer as opt_lib
+from repro.train import trainer
+
+
+# ---------------------------------------------------------------------------
+# HLO collective accounting
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-buffer sizes of every collective op, by op kind.
+
+    HLO lines look like ``%x = f32[8,16]{1,0} all-gather(...)`` (possibly a
+    tuple type). ``-start`` variants are counted; ``-done`` ops (which repeat
+    the buffer) are not.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        lhs, rhs = s.split("=", 1)
+        rhs = rhs.strip()
+        m = re.match(r"^(\([^)]*\)|[\w\[\],{}:#\* ]+?)\s+([\w-]+)\(", rhs)
+        if not m:
+            continue
+        opname = m.group(2)
+        base = opname.replace("-start", "")
+        if base in out and not opname.endswith("-done"):
+            out[base] += _shape_bytes(m.group(1))
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+_DOT_RE = re.compile(
+    r"%?[\w.-]+ = \S+\[([\d,]+)\]\S* (dot|convolution)\(%?([\w.-]+), "
+    r"%?([\w.-]+)\)(.*)$")
+_SHAPE_DEF_RE = re.compile(r"\s*%?([\w.-]+) = (\S+\[[\d,]*\])")
+
+
+def dot_flops(hlo_text: str) -> float:
+    """Sum 2*out_elems*contraction over every dot/conv in the module — the
+    MXU (matmul) flops. XLA:CPU's aggregate `flops` metric overcounts fusion
+    regions by orders of magnitude around scatter/gather dispatch (measured:
+    440x on the MoE dispatch), so the roofline compute term uses this count;
+    the raw metric is kept alongside as `flops_xla`."""
+    shapes = {}
+    for line in hlo_text.splitlines():
+        m = _SHAPE_DEF_RE.match(line)
+        if m:
+            shapes[m.group(1)] = m.group(2)
+    total = 0.0
+    for line in hlo_text.splitlines():
+        m = _DOT_RE.match(line.strip())
+        if not m:
+            continue
+        out_elems = 1
+        for d in m.group(1).split(","):
+            out_elems *= int(d)
+        lhs_shape = shapes.get(m.group(3), "")
+        dims = re.findall(r"\[([\d,]+)\]", lhs_shape)
+        cm = re.search(r"lhs_contracting_dims=\{([\d,]+)\}", m.group(5))
+        contract = 1
+        if dims and cm:
+            ld = [int(d) for d in dims[0].split(",")]
+            for ci in cm.group(1).split(","):
+                contract *= ld[int(ci)]
+        elif "convolution" in line:
+            contract = 1  # convs are negligible here (stub frontends)
+        total += 2.0 * out_elems * contract
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Cell construction
+# ---------------------------------------------------------------------------
+
+def _batch_sharding(mesh, leaf) -> NamedSharding:
+    """Leading-dim batch sharding with divisibility fallback (batch=1 cells
+    like long_500k replicate)."""
+    axes = sharding.batch_axes(mesh)
+    size = int(np.prod([mesh.shape[a] for a in axes]))
+    if leaf.shape and leaf.shape[0] % size == 0:
+        return NamedSharding(mesh, P(axes))
+    return NamedSharding(mesh, P())
+
+
+def _cache_shardings(cache: Any, mesh) -> Any:
+    """NamedShardings for a decode-cache pytree (mirrors lm._constrain_cache)."""
+    batch = sharding.batch_axes(mesh)
+
+    def spec(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else ""
+        nd = len(leaf.shape)
+        if name in ("k", "v"):
+            raw = [None, batch, None, None, "model"]
+        elif name == "ssm":
+            raw = [None, batch, "model", None, None]
+        elif name in ("conv_x", "conv_BC"):
+            raw = [None, batch, None, "model"]
+        elif name == "index" or nd == 0:
+            return NamedSharding(mesh, P())
+        else:
+            raw = [batch] + [None] * (nd - 1)
+        clean = []
+        for dim, want in zip(leaf.shape, raw):
+            names = (want,) if isinstance(want, str) else tuple(want or ())
+            names = tuple(n for n in names if n in mesh.axis_names)
+            size = int(np.prod([mesh.shape[n] for n in names])) if names else 1
+            clean.append((names if len(names) > 1 else names[0]) if names and dim % size == 0 else None)
+        return NamedSharding(mesh, P(*clean))
+
+    return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+def analysis_configs(cfg):
+    """Two reduced-depth configs (1 and 2 repeating units) + unit count, for
+    the loop-cost extrapolation: XLA cost_analysis counts a while-loop body
+    once, so we lower tiny unrolled variants and scale the per-unit delta."""
+    import dataclasses
+    if cfg.enc_dec:
+        assert cfg.n_enc_layers == cfg.n_layers
+        c1 = dataclasses.replace(cfg, n_layers=1, n_enc_layers=1)
+        c2 = dataclasses.replace(cfg, n_layers=2, n_enc_layers=2)
+        return c1, c2, cfg.n_layers
+    if cfg.family == "hybrid":
+        e = cfg.hybrid_attn_every
+        c1 = dataclasses.replace(cfg, n_layers=e)
+        c2 = dataclasses.replace(cfg, n_layers=2 * e)
+        return c1, c2, cfg.n_layers // e
+    c1 = dataclasses.replace(cfg, n_layers=1)
+    c2 = dataclasses.replace(cfg, n_layers=2)
+    return c1, c2, cfg.n_layers
+
+
+def build_cell(arch: str, shape: str, mesh, qcfg: QuantConfig, cfg=None):
+    """Returns (fn, example_args (ShapeDtypeStructs), in_shardings,
+    out_shardings, donate)."""
+    cfg = cfg or registry.get_config(arch)
+    S, B, kind = SHAPES[shape]
+    fsdp = registry.use_fsdp(arch)
+    rep = NamedSharding(mesh, P())
+    batch_axes = sharding.batch_axes(mesh)
+    key_s = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+
+    if cfg.enc_dec:
+        init_fn, loss_fn = encdec.encdec_init, encdec.encdec_loss
+    else:
+        init_fn, loss_fn = lm.lm_init, lm.lm_loss
+
+    params_s = jax.eval_shape(lambda k: init_fn(k, cfg), key_s)
+    pspecs = sharding.param_pspecs(params_s, mesh, fsdp=fsdp)
+    specs_in = registry.input_specs(cfg, shape)
+
+    if kind == "train":
+        opt_cfg = opt_lib.OptimizerConfig()
+        step = trainer.make_train_step(loss_fn, cfg, qcfg, opt_cfg)
+        opt_s = jax.eval_shape(opt_lib.init, params_s)
+        opt_specs = opt_lib.OptState(step=rep, m=pspecs, v=pspecs)
+        batch_specs = jax.tree.map(
+            lambda l: _batch_sharding(mesh, l), specs_in)
+        args = (params_s, opt_s, specs_in, key_s)
+        in_sh = (pspecs, opt_specs, batch_specs, rep)
+        out_sh = (pspecs, opt_specs, rep)
+        return step, args, in_sh, out_sh, (0, 1)
+
+    if kind == "prefill":
+        if cfg.enc_dec:
+            def fn(params, batch):
+                enc = encdec.encode(params, batch["frames"], cfg, qcfg, None)
+                cross = encdec.encdec_precompute_cross(params, enc, cfg, qcfg)
+                return enc, cross
+        else:
+            def fn(params, batch):
+                logits, _ = lm.lm_prefill(
+                    params, batch["tokens"], cfg, qcfg,
+                    prefix_embeds=batch.get("patch_embeds"))
+                return logits
+        batch_specs = jax.tree.map(
+            lambda l: _batch_sharding(mesh, l), specs_in)
+        args = (params_s, specs_in)
+        return fn, args, (pspecs, batch_specs), None, ()
+
+    # decode
+    cache_s = specs_in["cache"]
+    cache_sh = _cache_shardings(cache_s, mesh)
+    tok_sh = _batch_sharding(mesh, specs_in["token"])
+    if cfg.enc_dec:
+        cross_s = specs_in["cross_kv"]
+        cross_sh = jax.tree.map(
+            lambda s: NamedSharding(mesh, P(None, batch_axes, None, None, None)),
+            cross_s)
+
+        def fn(params, token, cache, cross):
+            return encdec.encdec_decode_step(params, token, cache, cross,
+                                             cfg, qcfg)
+
+        args = (params_s, specs_in["token"], cache_s, cross_s)
+        in_sh = (pspecs, tok_sh, cache_sh, cross_sh)
+        btok = tok_sh.spec[0] if len(tok_sh.spec) else None
+        out_logits = NamedSharding(mesh, P(btok, None, "model"))
+        out_sh = (out_logits, cache_sh)
+        return fn, args, in_sh, out_sh, (2,)
+
+    def fn(params, token, cache):
+        return lm.lm_decode_step(params, token, cache, cfg, qcfg)
+
+    args = (params_s, specs_in["token"], cache_s)
+    in_sh = (pspecs, tok_sh, cache_sh)
+    btok = tok_sh.spec[0] if len(tok_sh.spec) else None
+    out_logits = NamedSharding(mesh, P(btok, None, "model"))
+    out_sh = (out_logits, cache_sh)
+    return fn, args, in_sh, out_sh, (2,)
+
+
+def _cost_of(arch: str, shape: str, mesh, qcfg: QuantConfig, cfg):
+    """Lower one reduced config with every scan unrolled; return
+    (cost dict, collective-bytes dict) per device."""
+    from repro import utils
+    with utils.analysis_unroll():
+        fn, args, in_sh, out_sh, donate = build_cell(arch, shape, mesh, qcfg,
+                                                     cfg=cfg)
+        with mesh:
+            compiled = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                               donate_argnums=donate).lower(*args).compile()
+            ca = compiled.cost_analysis() or {}
+            txt = compiled.as_text()
+            coll = collective_bytes(txt)
+    cost = {"flops": dot_flops(txt),          # matmul flops (see dot_flops)
+            "flops_xla": ca.get("flops", 0.0),
+            "bytes_accessed": ca.get("bytes accessed", 0.0),
+            "transcendentals": ca.get("transcendentals", 0.0)}
+    return cost, coll
+
+
+def extrapolated_costs(arch: str, shape: str, mesh, qcfg: QuantConfig):
+    """Per-device cost/collectives for the FULL depth via the 2-point
+    unrolled extrapolation: total = C1 + (units - 1) * (C2 - C1)."""
+    cfg = registry.get_config(arch)
+    c1, c2, units = analysis_configs(cfg)
+    cost1, coll1 = _cost_of(arch, shape, mesh, qcfg, c1)
+    cost2, coll2 = _cost_of(arch, shape, mesh, qcfg, c2)
+
+    def extrap(a, b):
+        out = {}
+        for k in a:
+            va, vb = a.get(k) or 0, b.get(k) or 0
+            out[k] = va + (units - 1) * max(vb - va, 0)
+        return out
+
+    cost = extrap(cost1, cost2)
+    coll = extrap(coll1, coll2)
+    cost["extrapolated_from_units"] = [1, 2, units]
+    return cost, coll
+
+
+# ---------------------------------------------------------------------------
+# Runner
+# ---------------------------------------------------------------------------
+
+VARIANTS = ("baseline", "remat_dots", "no_sp", "q_gather",
+            "remat_dots+q_gather")
+
+
+def _apply_variant(variant: str):
+    """Returns a restore-fn after flipping the perf knobs for a variant."""
+    from repro import utils as u
+    from repro.core import int_ops
+    prev = (u.CHECKPOINT_POLICY, sharding.SEQUENCE_SHARDING,
+            int_ops.QUANTIZED_WEIGHT_GATHER)
+    for part in variant.split("+"):
+        if part == "remat_dots":
+            u.CHECKPOINT_POLICY = "dots"
+        elif part == "no_sp":
+            sharding.SEQUENCE_SHARDING = False
+        elif part == "q_gather":
+            int_ops.QUANTIZED_WEIGHT_GATHER = True
+
+    def restore():
+        (u.CHECKPOINT_POLICY, sharding.SEQUENCE_SHARDING,
+         int_ops.QUANTIZED_WEIGHT_GATHER) = prev
+
+    return restore
+
+
+def run_cell(arch: str, shape: str, mesh, mesh_name: str,
+             qcfg: QuantConfig, outdir: str,
+             analyze: bool = True, variant: str = "baseline") -> Dict[str, Any]:
+    cfg = registry.get_config(arch)
+    ok, why = shape_applicable(cfg, shape)
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                           "quant": dataclass_dict(qcfg), "variant": variant}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return _write(rec, outdir)
+    t0 = time.time()
+    restore_variant = _apply_variant(variant)
+    try:
+        sharding.set_mesh(mesh)
+        fn, args, in_sh, out_sh, donate = build_cell(arch, shape, mesh, qcfg)
+        with mesh:
+            jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            ma = compiled.memory_analysis()
+            ca = compiled.cost_analysis() or {}
+            txt = compiled.as_text()
+        if analyze:   # roofline terms are reported for the single-pod mesh
+            cost, coll = extrapolated_costs(arch, shape, mesh, qcfg)
+        else:
+            cost, coll = None, None
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+            memory={
+                "argument_bytes_per_device": getattr(ma, "argument_size_in_bytes", None),
+                "output_bytes_per_device": getattr(ma, "output_size_in_bytes", None),
+                "temp_bytes_per_device": getattr(ma, "temp_size_in_bytes", None),
+                "alias_bytes_per_device": getattr(ma, "alias_size_in_bytes", None),
+            },
+            # raw cost of the rolled module (loop bodies counted ONCE — kept
+            # for reference; use `cost` for roofline terms)
+            cost_rolled={
+                "flops": ca.get("flops"),
+                "bytes_accessed": ca.get("bytes accessed"),
+                "transcendentals": ca.get("transcendentals"),
+            },
+            cost=cost,
+            collectives_rolled=collective_bytes(txt),
+            collectives=coll,
+            model_params=cfg.param_count(),
+            active_params=cfg.active_param_count(),
+        )
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    finally:
+        sharding.set_mesh(None)
+        restore_variant()
+    return _write(rec, outdir)
+
+
+def dataclass_dict(qcfg: QuantConfig) -> Dict[str, Any]:
+    import dataclasses
+    return dataclasses.asdict(qcfg)
+
+
+def _write(rec: Dict[str, Any], outdir: str) -> Dict[str, Any]:
+    os.makedirs(outdir, exist_ok=True)
+    suffix = "" if rec.get("variant", "baseline") == "baseline" \
+        else f"__{rec['variant']}"
+    path = os.path.join(outdir, f"{rec['arch']}__{rec['shape']}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(registry.ARCH_IDS))
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--quant", default="int8", choices=["fp32", "int16", "int12",
+                                                        "int10", "int8"])
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--outdir", default="experiments/dryrun")
+    ap.add_argument("--variant", default="baseline", choices=list(VARIANTS))
+    ap.add_argument("--analysis-only", action="store_true",
+                    help="recompute extrapolated cost/collective fields into "
+                         "existing JSONs (skips the full-depth compile)")
+    ap.add_argument("--resume", action="store_true",
+                    help="skip cells whose JSON already exists with status ok/skipped")
+    args = ap.parse_args()
+
+    qcfg = QuantConfig.preset(args.quant)
+    archs = [args.arch] if args.arch else list(registry.ARCH_IDS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = []
+    if not args.multi_pod_only:
+        meshes.append(("pod16x16", make_production_mesh(multi_pod=False)))
+    if not args.single_pod_only:
+        meshes.append(("pods2x16x16", make_production_mesh(multi_pod=True)))
+
+    n_ok = n_skip = n_err = 0
+    for mesh_name, mesh in meshes:
+        for arch in archs:
+            for shape in shapes:
+                outdir = os.path.join(args.outdir, mesh_name)
+                if args.analysis_only:
+                    pre = os.path.join(outdir, f"{arch}__{shape}.json")
+                    if not os.path.exists(pre):
+                        continue
+                    old = json.load(open(pre))
+                    if old.get("status") != "ok" or old.get("cost") is None:
+                        continue
+                    restore_v = _apply_variant(args.variant)
+                    try:
+                        sharding.set_mesh(mesh)
+                        cost, coll = extrapolated_costs(arch, shape, mesh, qcfg)
+                        old["cost"], old["collectives"] = cost, coll
+                        _write(old, outdir)
+                        print(f"[{mesh_name}] {arch:24s} {shape:12s} "
+                              f"reanalyzed dot_flops/dev={cost['flops']:.3g}",
+                              flush=True)
+                        n_ok += 1
+                    except Exception as e:
+                        print(f"[{mesh_name}] {arch:24s} {shape:12s} "
+                              f"REANALYSIS ERROR {e}", flush=True)
+                        n_err += 1
+                    finally:
+                        sharding.set_mesh(None)
+                        restore_v()
+                    continue
+                if args.resume:
+                    pre = os.path.join(outdir, f"{arch}__{shape}.json")
+                    if os.path.exists(pre):
+                        old = json.load(open(pre))
+                        if old.get("status") in ("ok", "skipped"):
+                            print(f"[{mesh_name}] {arch:24s} {shape:12s} "
+                                  f"cached", flush=True)
+                            n_ok += old["status"] == "ok"
+                            n_skip += old["status"] == "skipped"
+                            continue
+                rec = run_cell(arch, shape, mesh, mesh_name, qcfg,
+                               outdir, analyze=mesh_name == "pod16x16",
+                               variant=args.variant)
+                tag = rec["status"]
+                n_ok += tag == "ok"
+                n_skip += tag == "skipped"
+                n_err += tag == "error"
+                extra = ""
+                if tag == "ok":
+                    c = rec.get("cost") or rec.get("cost_rolled") or {}
+                    co = rec.get("collectives") or rec.get("collectives_rolled") or {}
+                    extra = (f"compile={rec['compile_s']}s "
+                             f"flops/dev={(c.get('flops') or 0):.3g} "
+                             f"coll={(co.get('total') or 0):.3g}B")
+                elif tag == "error":
+                    extra = rec["error"][:120]
+                print(f"[{mesh_name}] {arch:24s} {shape:12s} {tag:8s} {extra}",
+                      flush=True)
+    print(f"done: ok={n_ok} skipped={n_skip} errors={n_err}")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,140 @@
+"""Training launcher: end-to-end driver wiring every substrate layer.
+
+    PYTHONPATH=src python -m repro.launch.train \
+        --arch qwen1.5-0.5b --reduced --steps 200 --quant int8 \
+        --batch 8 --seq 256 --ckpt-dir /tmp/ckpt
+
+On real hardware the same driver runs per-host (jax.distributed initializes
+from the cluster env); in this container it runs on CPU with ``--reduced``
+configs. Demonstrates: mesh setup, sharded init, jit'd train step, data
+pipeline with resumable state, atomic checkpointing, fault-tolerant step
+loop, optional int8 cross-pod gradient compression.
+"""
+from __future__ import annotations
+
+import argparse
+import logging
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import sharding
+from repro.configs import registry
+from repro.core.qconfig import QuantConfig
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.launch.mesh import make_host_mesh
+from repro.models import encdec, lm
+from repro.train import checkpoint, fault, optimizer as opt_lib, trainer
+
+log = logging.getLogger("repro.train")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b",
+                    choices=list(registry.ARCH_IDS))
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-scale config (CPU)")
+    ap.add_argument("--quant", default="int8")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    logging.basicConfig(level=logging.INFO)
+    cfg = registry.get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    qcfg = QuantConfig.preset(args.quant)
+    mesh = make_host_mesh(args.model_parallel)
+    sharding.set_mesh(mesh)
+
+    if cfg.enc_dec:
+        init_fn = lambda k: encdec.encdec_init(k, cfg)  # noqa: E731
+        loss_fn = encdec.encdec_loss
+    else:
+        init_fn = lambda k: lm.lm_init(k, cfg)          # noqa: E731
+        loss_fn = lm.lm_loss
+
+    key = jax.random.PRNGKey(0)
+    params, opt_state, pspecs = trainer.init_train_state(
+        init_fn, key, mesh, fsdp=registry.use_fsdp(args.arch))
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    log.info("arch=%s params=%.2fM quant=%s mesh=%s",
+             cfg.name, n_params / 1e6, args.quant, dict(mesh.shape))
+
+    opt_cfg = opt_lib.OptimizerConfig(lr=args.lr, total_steps=args.steps)
+    tcfg = trainer.TrainConfig(microbatches=args.microbatches)
+    step_fn = trainer.jit_train_step(
+        trainer.make_train_step(loss_fn, cfg, qcfg, opt_cfg, tcfg),
+        mesh, pspecs)
+
+    data = SyntheticLM(DataConfig(batch_size=args.batch, seq_len=args.seq,
+                                  vocab=cfg.vocab))
+
+    start = 0
+    if args.ckpt_dir:
+        latest = checkpoint.latest_step(args.ckpt_dir)
+        if latest is not None:
+            like = {"params": params, "opt": opt_state, "data": data.state()}
+            shard_like = {"params": pspecs,
+                          "opt": opt_lib.OptState(step=None, m=pspecs, v=pspecs),
+                          "data": None}
+            state = checkpoint.restore(args.ckpt_dir, latest, like,
+                                       shardings=None)
+            params, opt_state = state["params"], state["opt"]
+            data.restore(state["data"])
+            start = latest
+            log.info("restored step %d", latest)
+
+    def make_batch(raw):
+        if cfg.enc_dec:
+            B = raw["tokens"].shape[0]
+            frames = np.random.default_rng(0).standard_normal(
+                (B, args.seq, cfg.d_model)).astype(np.float32)
+            return {"frames": frames, **raw}
+        if cfg.vlm_prefix:
+            B = raw["tokens"].shape[0]
+            pe = np.zeros((B, cfg.vlm_prefix, cfg.d_model), np.float32)
+            return {"patch_embeds": pe, **raw}
+        return raw
+
+    state = (params, opt_state)
+
+    def one_step(state, step):
+        params, opt_state = state
+        batch = make_batch(next(data))
+        k = jax.random.fold_in(key, step)
+        params, opt_state, metrics = step_fn(params, opt_state, batch, k)
+        if step % args.log_every == 0:
+            m = {k_: float(v) for k_, v in metrics.items()}
+            log.info("step %d loss=%.4f gnorm=%.3f", step, m.get("loss", -1),
+                     m.get("grad_norm", -1))
+        return params, opt_state
+
+    def save_state(state, step):
+        if args.ckpt_dir:
+            checkpoint.save(args.ckpt_dir, step,
+                            {"params": state[0], "opt": state[1],
+                             "data": data.state()})
+            log.info("checkpointed step %d", step)
+
+    t0 = time.time()
+    state = fault.run_with_recovery(
+        one_step, state, start_step=start, num_steps=args.steps,
+        save_fn=save_state, save_every=args.ckpt_every)
+    log.info("done: %d steps in %.1fs", args.steps, time.time() - t0)
+    if args.ckpt_dir:
+        save_state(state, start + args.steps)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,352 @@
+"""Composable transformer blocks built on the integer layers.
+
+Every projection goes through ``int_ops`` (the paper's integer fwd+bwd
+layers); softmax / SiLU / GeLU / RoPE stay FP32 per the paper's recipe.
+
+Attention is flash-style (lax.scan over KV chunks, online softmax) so no
+S×S score tensor is ever materialized — required for the 32k/500k shapes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import utils
+from repro.core import int_ops
+from repro.core.qconfig import QuantConfig
+from repro.models.config import ArchConfig
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+_BIG_NEG = -1e30
+
+
+def _init(key, shape, scale=0.02):
+    return (jax.random.normal(key, shape) * scale).astype(jnp.float32)
+
+
+def subkey(key: Optional[Array], i) -> Optional[Array]:
+    if key is None:
+        return None
+    if isinstance(i, int):
+        i = i & 0xFFFFFFFF            # map negative tags into uint32 space
+    return jax.random.fold_in(key, i)
+
+
+# =========================================================================
+# RoPE (FP32, precision-critical positional map)
+# =========================================================================
+
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (B, S, H, hd); positions: (B, S) or (S,)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32) * (jnp.log(theta) / half))
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs       # (B, S, half)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+# =========================================================================
+# Flash attention (online softmax over KV chunks)
+# =========================================================================
+
+def flash_attention(
+    q: Array,              # (B, Sq, Hkv, G, hd)
+    k: Array,              # (B, Sk, Hkv, hd)
+    v: Array,              # (B, Sk, Hkv, hd)
+    *,
+    causal: bool,
+    q_offset: Array | int = 0,
+    window: Optional[int] = None,
+    chunk: int = 1024,
+) -> Array:
+    """Returns (B, Sq, Hkv, G, hd). FP32 softmax (paper-kept op)."""
+    B, Sq, Hkv, G, hd = q.shape
+    Sk = k.shape[1]
+    chunk = min(chunk, Sk)
+    assert Sk % chunk == 0, (Sk, chunk)
+    n_chunks = Sk // chunk
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    q = q.astype(jnp.float32) * scale
+    qpos = q_offset + jnp.arange(Sq)
+
+    def body(carry, c):
+        m, l, acc = carry
+        kc = jax.lax.dynamic_slice_in_dim(k, c * chunk, chunk, axis=1)
+        vc = jax.lax.dynamic_slice_in_dim(v, c * chunk, chunk, axis=1)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", q, kc.astype(jnp.float32))
+        kpos = c * chunk + jnp.arange(chunk)
+        ok = jnp.ones((Sq, chunk), bool)
+        if causal:
+            ok &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            ok &= kpos[None, :] > (qpos[:, None] - window)
+        s = jnp.where(ok[None, None, None], s, _BIG_NEG)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.where(ok[None, None, None], jnp.exp(s - m_new[..., None]), 0.0)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p, vc.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, Hkv, G, Sq), _BIG_NEG, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, Sq, hd), jnp.float32)
+    (m, l, acc), _ = utils.scan(body, (m0, l0, a0), jnp.arange(n_chunks))
+    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    return out.transpose(0, 3, 1, 2, 4)          # (B, Sq, Hkv, G, hd)
+
+
+def _decode_attention(q: Array, k: Array, v: Array, index,
+                      window: Optional[int]) -> Array:
+    """One-query attention over a cache. q: (B, 1, Hkv, G, hd);
+    k/v: (B, Smax, Hkv, hd); positions > index are masked out."""
+    B, _, Hkv, G, hd = q.shape
+    Smax = k.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    kpos = jnp.arange(Smax)
+    ok = kpos <= index
+    if window is not None:
+        ok &= kpos > (index - window)
+    s = jnp.where(ok[None, None, None, None], s, _BIG_NEG)
+    p = jax.nn.softmax(s, axis=-1)                  # FP32 softmax (kept op)
+    o = jnp.einsum("bhgqk,bkhd->bhgqd", p, v.astype(jnp.float32))
+    return o.transpose(0, 3, 1, 2, 4)
+
+
+# =========================================================================
+# Attention layer (GQA, optional sliding window, KV cache for decode)
+# =========================================================================
+
+def attention_init(key, cfg: ArchConfig) -> Params:
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _init(ks[0], (D, H * hd)),
+        "wk": _init(ks[1], (D, KV * hd)),
+        "wv": _init(ks[2], (D, KV * hd)),
+        "wo": _init(ks[3], (H * hd, D)),
+    }
+    if cfg.qkv_bias:
+        p.update(bq=jnp.zeros((H * hd,)), bk=jnp.zeros((KV * hd,)),
+                 bv=jnp.zeros((KV * hd,)))
+    return p
+
+
+def attention_apply(
+    p: Params, x: Array, cfg: ArchConfig, qcfg: QuantConfig,
+    key: Optional[Array],
+    *,
+    causal: bool = True,
+    positions: Array | None = None,
+    kv_cache: Optional[Tuple[Array, Array]] = None,   # (k, v): (B, Smax, KV, hd)
+    cache_index: Array | int = 0,
+    kv_override: Optional[Tuple[Array, Array]] = None,  # cross-attention
+    use_rope: bool = True,
+) -> Tuple[Array, Optional[Tuple[Array, Array]]]:
+    """Returns (out, updated_cache). x: (B, S, D)."""
+    B, S, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    G = H // KV
+    bq = p.get("bq")
+    q = int_ops.int_linear(x, p["wq"], bq, subkey(key, 0), qcfg)
+    q = q.reshape(B, S, KV, G, hd)
+    if kv_override is None:
+        k = int_ops.int_linear(x, p["wk"], p.get("bk"), subkey(key, 1), qcfg)
+        v = int_ops.int_linear(x, p["wv"], p.get("bv"), subkey(key, 2), qcfg)
+        k = k.reshape(B, S, KV, hd)
+        v = v.reshape(B, S, KV, hd)
+    else:
+        k, v = kv_override
+
+    if positions is None:
+        positions = cache_index + jnp.arange(S)
+        positions = jnp.broadcast_to(positions[None], (B, S))
+    if use_rope:
+        q = rope(q.reshape(B, S, H, hd), positions, cfg.rope_theta).reshape(
+            B, S, KV, G, hd)
+        if kv_override is None:
+            k = rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if kv_cache is not None:
+        ck, cv = kv_cache
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), cache_index, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), cache_index, axis=1)
+        new_cache = (ck, cv)
+        k, v = ck, cv
+        q_offset = cache_index
+    else:
+        q_offset = 0
+
+    if S == 1 and kv_cache is not None:
+        # decode: single-pass attention over the cache (memory-bound optimal;
+        # no online-softmax scan needed for one query token)
+        o = _decode_attention(q, k, v, cache_index,
+                              cfg.sliding_window if causal else None)
+    else:
+        o = flash_attention(q, k, v, causal=causal, q_offset=q_offset,
+                            window=cfg.sliding_window if causal else None)
+    o = o.reshape(B, S, H * hd)
+    out = int_ops.int_linear(o, p["wo"], None, subkey(key, 3), qcfg)
+    return out, new_cache
+
+
+# =========================================================================
+# Dense MLP (SwiGLU or GeLU)
+# =========================================================================
+
+def mlp_init(key, cfg: ArchConfig, d_ff: Optional[int] = None) -> Params:
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.act == "silu":
+        return {"wg": _init(ks[0], (D, F)), "wu": _init(ks[1], (D, F)),
+                "wd": _init(ks[2], (F, D))}
+    return {"w1": _init(ks[0], (D, F)), "b1": jnp.zeros((F,)),
+            "w2": _init(ks[1], (F, D)), "b2": jnp.zeros((D,))}
+
+
+def mlp_apply(p: Params, x: Array, cfg: ArchConfig, qcfg: QuantConfig,
+              key: Optional[Array]) -> Array:
+    if "wg" in p:
+        g = int_ops.int_linear(x, p["wg"], None, subkey(key, 0), qcfg)
+        u = int_ops.int_linear(x, p["wu"], None, subkey(key, 1), qcfg)
+        h = jax.nn.silu(g) * u                       # FP32 non-linearity
+        return int_ops.int_linear(h, p["wd"], None, subkey(key, 2), qcfg)
+    h = int_ops.int_linear(x, p["w1"], p["b1"], subkey(key, 0), qcfg)
+    h = jax.nn.gelu(h)
+    return int_ops.int_linear(h, p["w2"], p["b2"], subkey(key, 1), qcfg)
+
+
+# =========================================================================
+# Mixture of Experts (top-k, capacity-based sorted dispatch, optional
+# always-on shared expert — qwen2-moe style)
+# =========================================================================
+
+def moe_init(key, cfg: ArchConfig) -> Params:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.moe_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _init(ks[0], (D, E)),
+        "wg_e": _init(ks[1], (E, D, F)),
+        "wu_e": _init(ks[2], (E, D, F)),
+        "wd_e": _init(ks[3], (E, F, D)),
+    }
+    if cfg.moe_shared_dff:
+        p["shared"] = mlp_init(ks[4], cfg, d_ff=cfg.moe_shared_dff)
+    return p
+
+
+def moe_apply(p: Params, x: Array, cfg: ArchConfig, qcfg: QuantConfig,
+              key: Optional[Array]) -> Tuple[Array, Array]:
+    """Returns (out, aux_loss). x: (B, S, D).
+
+    Dispatch is **shard-local** (per data-parallel group): the token→slot
+    position is computed with a cumsum *within* each DP group and every group
+    fills its own capacity slice, so dispatch/combine never move tokens
+    across data-parallel ranks. A single global cumsum would make every
+    position depend on every preceding token, forcing XLA to all-gather the
+    full (T·K, D) token matrix (measured: 34 GB/step → collective-bound at
+    62–82 s on the MoE train cells; §Perf iteration A.3/A.4).
+    """
+    from repro import sharding as _sh
+
+    B, S, D = x.shape
+    E, K = cfg.moe_experts, cfg.moe_topk
+    T = B * S
+    xf = x.reshape(T, D)
+    logits = int_ops.int_linear(xf, p["router"], None, subkey(key, 0), qcfg)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)  # FP32 router
+    gate, sel = jax.lax.top_k(probs, K)                          # (T, K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch-style)
+    density = jnp.mean(jax.nn.one_hot(sel[:, 0], E), axis=0)
+    mean_probs = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(density * mean_probs)
+
+    # --- shard-local capacity dispatch -----------------------------------
+    # G = number of DP shards (1 without a mesh); each group of T/G tokens
+    # dispatches into its own (E, Cg) capacity slice. Small token counts
+    # (decode) use one group with drop-free capacity so decode == prefill.
+    mesh = _sh.get_mesh()
+    G = 1
+    if mesh is not None and T * K > 4096:
+        G = int(np.prod([mesh.shape[a] for a in _sh.batch_axes(mesh)]))
+        if B % G:
+            G = 1
+    Tg = T // G
+    if T * K <= 4096:
+        Cg = Tg * K
+    else:
+        Cg = int(cfg.moe_capacity_factor * Tg * K / E) or 1
+        Cg = ((Cg + 127) // 128) * 128
+    sel_g = sel.reshape(G, Tg * K)                                # per group
+    gate_f = gate.reshape(G, Tg * K)
+    onehot = jax.nn.one_hot(sel_g, E, dtype=jnp.int32)            # (G, TgK, E)
+    pos_all = jnp.cumsum(onehot, axis=1) - onehot
+    pos_g = jnp.take_along_axis(pos_all, sel_g[..., None], axis=2)[..., 0]
+    keep = pos_g < Cg
+    pos_c = jnp.where(keep, pos_g, Cg)                            # spill slot
+    rows = Cg + 1
+    flat_idx = sel_g * rows + pos_c                               # (G, TgK)
+    xg = xf.reshape(G, Tg, D)
+    tok_idx = jnp.arange(Tg * K) // K
+    upd = jnp.take_along_axis(xg, tok_idx[None, :, None], axis=1)  # (G,TgK,D)
+    buf = jnp.zeros((G, E * rows, D), x.dtype)
+    buf = _sh.constrain(buf, _sh.batch_axes(), None, None)
+    buf = jax.vmap(lambda b, i, u: b.at[i].set(u))(buf, flat_idx, upd)
+    ex_in = buf.reshape(G, E, rows, D)[:, :, :Cg]                 # (G,E,Cg,D)
+    # merge groups into the expert row dim for the batched matmuls
+    ex_in = ex_in.transpose(1, 0, 2, 3).reshape(E, G * Cg, D)
+    ex_in = _sh.constrain(ex_in, None, _sh.batch_axes(), None)
+
+    # --- per-expert integer SwiGLU (per-expert DFX scales) ---------------
+    g = int_ops.int_batched_linear(ex_in, p["wg_e"], subkey(key, 1), qcfg)
+    u = int_ops.int_batched_linear(ex_in, p["wu_e"], subkey(key, 2), qcfg)
+    h = jax.nn.silu(g) * u
+    h = _sh.constrain(h, None, _sh.batch_axes(), "model")
+    ex_out = int_ops.int_batched_linear(h, p["wd_e"], subkey(key, 3), qcfg)
+    ex_out = _sh.constrain(ex_out, None, _sh.batch_axes(), None)
+
+    # --- combine (shard-local gather) -------------------------------------
+    out_g = ex_out.reshape(E, G, Cg, D).transpose(1, 0, 2, 3)      # (G,E,Cg,D)
+    out_g = out_g.reshape(G, E * Cg, D)
+    flat_take = sel_g * Cg + jnp.minimum(pos_g, Cg - 1)
+    y = jnp.take_along_axis(out_g, flat_take[..., None], axis=1)   # (G,TgK,D)
+    y = y * (keep[..., None] * gate_f[..., None])
+    y = y.reshape(T, K, D).sum(axis=1)
+
+    if "shared" in p:
+        y = y + mlp_apply(p["shared"], xf, cfg, qcfg, subkey(key, 4))
+    return y.reshape(B, S, D), aux
+
+
+# =========================================================================
+# Norm wrappers
+# =========================================================================
+
+def norm_init(cfg: ArchConfig) -> Params:
+    if cfg.norm == "layernorm":
+        return {"g": jnp.ones((cfg.d_model,)), "b": jnp.zeros((cfg.d_model,))}
+    return {"g": jnp.ones((cfg.d_model,))}
+
+
+def norm_apply(p: Params, x: Array, cfg: ArchConfig, qcfg: QuantConfig,
+               key: Optional[Array]) -> Array:
+    if "b" in p:
+        return int_ops.int_layernorm(x, p["g"], p["b"], key, qcfg)
+    return int_ops.int_rmsnorm(x, p["g"], key, qcfg)

@@ -1,0 +1,194 @@
+"""Whisper-style encoder–decoder backbone (audio frontend is a stub per the
+brief: ``input_specs`` provides precomputed frame embeddings).
+
+Encoder: bidirectional self-attention, layernorm, GeLU MLP (integer layers).
+Decoder: causal self-attention + cross-attention over encoder output.
+Decode step: self-attn KV cache + precomputed cross-attention K/V.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro import utils
+from repro.core import int_ops
+from repro.core.qconfig import QuantConfig
+from repro.models import blocks
+from repro.models.blocks import subkey
+from repro.models.config import ArchConfig
+from repro.models.lm import padded_vocab
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+def _sinusoids(length: int, channels: int) -> Array:
+    t = jnp.arange(length)[:, None].astype(jnp.float32)
+    inv = jnp.exp(-jnp.arange(channels // 2) * (jnp.log(10000.0) / (channels // 2 - 1)))
+    ang = t * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _enc_block_init(key, cfg: ArchConfig) -> Params:
+    ks = jax.random.split(key, 2)
+    return {"ln1": blocks.norm_init(cfg),
+            "attn": blocks.attention_init(ks[0], cfg),
+            "ln2": blocks.norm_init(cfg),
+            "mlp": blocks.mlp_init(ks[1], cfg)}
+
+
+def _dec_block_init(key, cfg: ArchConfig) -> Params:
+    ks = jax.random.split(key, 3)
+    return {"ln1": blocks.norm_init(cfg),
+            "attn": blocks.attention_init(ks[0], cfg),
+            "ln_x": blocks.norm_init(cfg),
+            "xattn": blocks.attention_init(ks[1], cfg),
+            "ln2": blocks.norm_init(cfg),
+            "mlp": blocks.mlp_init(ks[2], cfg)}
+
+
+def encdec_init(key, cfg: ArchConfig) -> Params:
+    V = padded_vocab(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "embed": blocks._init(ks[0], (V, cfg.d_model)),
+        "enc_blocks": jax.vmap(lambda k: _enc_block_init(k, cfg))(
+            jax.random.split(ks[1], cfg.n_enc_layers)),
+        "dec_blocks": jax.vmap(lambda k: _dec_block_init(k, cfg))(
+            jax.random.split(ks[2], cfg.n_layers)),
+        "enc_ln": blocks.norm_init(cfg),
+        "final_norm": blocks.norm_init(cfg),
+    }
+
+
+def encode(params: Params, frames: Array, cfg: ArchConfig, qcfg: QuantConfig,
+           key) -> Array:
+    """frames: (B, T, D) precomputed frame embeddings (conv frontend stub)."""
+    x = frames + _sinusoids(frames.shape[1], cfg.d_model)[None]
+    x = sharding.constrain_tokens(x)
+
+    def body(x, inp):
+        bp, idx = inp
+        k = subkey(key, idx)
+        h = blocks.norm_apply(bp["ln1"], x, cfg, qcfg, subkey(k, 0))
+        h, _ = blocks.attention_apply(bp["attn"], h, cfg, qcfg, subkey(k, 1),
+                                      causal=False, use_rope=False)
+        x = sharding.constrain_tokens(x + h)
+        h = blocks.norm_apply(bp["ln2"], x, cfg, qcfg, subkey(k, 2))
+        h = blocks.mlp_apply(bp["mlp"], h, cfg, qcfg, subkey(k, 3))
+        return sharding.constrain_tokens(x + h), None
+
+    x, _ = utils.scan(utils.checkpoint(body), x,
+                        (params["enc_blocks"], jnp.arange(cfg.n_enc_layers)))
+    return blocks.norm_apply(params["enc_ln"], x, cfg, qcfg, subkey(key, -5))
+
+
+def _cross_kv(bp: Params, enc: Array, cfg: ArchConfig, qcfg: QuantConfig, key):
+    B, T, _ = enc.shape
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    k = int_ops.int_linear(enc, bp["wk"], bp.get("bk"), subkey(key, 0), qcfg)
+    v = int_ops.int_linear(enc, bp["wv"], bp.get("bv"), subkey(key, 1), qcfg)
+    return k.reshape(B, T, KV, hd), v.reshape(B, T, KV, hd)
+
+
+def _decoder(params: Params, x: Array, enc: Array, cfg: ArchConfig,
+             qcfg: QuantConfig, key, *, self_cache=None, index=0):
+    """Shared decoder stack. self_cache: (k, v) stacked (L, B, Smax, KV, hd)."""
+
+    def body(x, bp, idx, cache, cross):
+        k = subkey(key, idx) if key is not None else None
+        h = blocks.norm_apply(bp["ln1"], x, cfg, qcfg, subkey(k, 0))
+        h, ncache = blocks.attention_apply(
+            bp["attn"], h, cfg, qcfg, subkey(k, 1),
+            kv_cache=cache, cache_index=index, use_rope=False)
+        x = sharding.constrain_tokens(x + h)
+        h = blocks.norm_apply(bp["ln_x"], x, cfg, qcfg, subkey(k, 2))
+        if cross is None:
+            cross = _cross_kv(bp["xattn"], enc, cfg, qcfg, subkey(k, 3))
+        h, _ = blocks.attention_apply(
+            bp["xattn"], h, cfg, qcfg, subkey(k, 4),
+            causal=False, kv_override=cross, use_rope=False)
+        x = sharding.constrain_tokens(x + h)
+        h = blocks.norm_apply(bp["ln2"], x, cfg, qcfg, subkey(k, 5))
+        h = blocks.mlp_apply(bp["mlp"], h, cfg, qcfg, subkey(k, 6))
+        x = sharding.constrain_tokens(x + h)
+        return x, ncache
+
+    L = cfg.n_layers
+    if self_cache is None:      # teacher-forced training: cross KV on the fly
+        body_fn = utils.checkpoint(
+            lambda c, i: (body(c, i[0], i[1], None, None)[0], None))
+        x, _ = utils.scan(body_fn, x, (params["dec_blocks"], jnp.arange(L)))
+        return x, None
+    # decode: per-layer self cache + precomputed cross KV
+    ck, cv, xk, xv = self_cache
+    x, ncache = utils.scan(
+        lambda c, i: body(c, i[0], i[1], (i[2], i[3]), (i[4], i[5])),
+        x, (params["dec_blocks"], jnp.arange(L), ck, cv, xk, xv))
+    return x, ncache
+
+
+def _dec_embed(params, tokens, cfg, qcfg, key, index=0):
+    x = int_ops.int_embedding(params["embed"], tokens, subkey(key, -1), qcfg)
+    pos = _sinusoids(cfg.max_position_embeddings, cfg.d_model)
+    x = x + jax.lax.dynamic_slice_in_dim(pos, index, tokens.shape[1], axis=0)[None]
+    return sharding.constrain_tokens(x)
+
+
+def _head(params, x, cfg, qcfg, key):
+    x = blocks.norm_apply(params["final_norm"], x, cfg, qcfg, subkey(key, -3))
+    logits = int_ops.int_linear(x, params["embed"].T, None, subkey(key, -4), qcfg)
+    return sharding.constrain(logits, sharding.batch_axes(), None, "model")
+
+
+def encdec_loss(params: Params, batch: Dict[str, Array], cfg: ArchConfig,
+                qcfg: QuantConfig, key) -> Tuple[Array, Dict[str, Array]]:
+    """batch: frames (B, T, D) f32, tokens (B, S) int32, labels (B, S)."""
+    enc = encode(params, batch["frames"], cfg, qcfg, subkey(key, 1))
+    x = _dec_embed(params, batch["tokens"], cfg, qcfg, key)
+    x, _ = _decoder(params, x, enc, cfg, qcfg, subkey(key, 2))
+    logits = _head(params, x, cfg, qcfg, key)
+    labels = batch["labels"]
+    valid = labels >= 0
+    lab = jnp.where(valid, labels, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, lab[..., None], axis=-1)[..., 0]
+    loss = -jnp.sum(ll * valid) / jnp.maximum(jnp.sum(valid), 1)
+    return loss, {"ce": loss}
+
+
+def encdec_init_cache(cfg: ArchConfig, batch: int, max_seq: int,
+                      dtype=jnp.bfloat16):
+    L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    return {"k": jnp.zeros((L, batch, max_seq, KV, hd), dtype),
+            "v": jnp.zeros((L, batch, max_seq, KV, hd), dtype),
+            "index": jnp.int32(0)}
+
+
+def encdec_precompute_cross(params: Params, enc: Array, cfg: ArchConfig,
+                            qcfg: QuantConfig):
+    """Per-layer cross-attention K/V from encoder states, computed once at
+    prefill so each decode step only pays the O(1) self-attn projections."""
+
+    def one(_, bp):
+        kx, vx = _cross_kv(bp["xattn"], enc, cfg, qcfg, None)
+        return None, (kx, vx)
+
+    _, (xk, xv) = utils.scan(one, None, params["dec_blocks"])
+    return xk, xv                      # (L, B, T, KV, hd) each
+
+
+def encdec_decode_step(params: Params, token: Array, cache, cross_kv,
+                       cfg: ArchConfig, qcfg: QuantConfig):
+    """One decoder token; cross-attends over precomputed cross K/V."""
+    index = cache["index"]
+    xk, xv = cross_kv
+    x = _dec_embed(params, token, cfg, qcfg, None, index=index)
+    x, (nk, nv) = _decoder(params, x, None, cfg, qcfg, None,
+                           self_cache=(cache["k"], cache["v"], xk, xv),
+                           index=index)
+    logits = _head(params, x, cfg, qcfg, None)
+    return logits, {"k": nk, "v": nv, "index": index + 1}

@@ -1,0 +1,330 @@
+"""Decoder-only language model covering the dense / MoE / SSM / hybrid / VLM
+families, assembled from the integer blocks.
+
+Layers are **scan-stacked** (one traced layer body, ``lax.scan`` over stacked
+params) with ``jax.checkpoint`` remat — keeps the HLO small enough to compile
+88-layer/12k-wide configs against a 512-device mesh and bounds activation
+memory to one residual checkpoint per layer.
+
+Three entry points per the shape grid:
+  * ``loss_fn``      — next-token CE training objective (train_4k)
+  * ``prefill``      — forward over a prompt, filling the KV/SSM cache
+  * ``decode_step``  — one token with cache (decode_32k / long_500k)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro import utils
+from repro.core import int_ops
+from repro.core.qconfig import QuantConfig
+from repro.models import blocks, ssm
+from repro.models.blocks import subkey
+from repro.models.config import ArchConfig
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+def padded_vocab(cfg: ArchConfig) -> int:
+    """Vocab padded to a multiple of 256 so it shards on any mesh axis
+    (Megatron-style vocab padding; padded rows are never valid labels)."""
+    return ((cfg.vocab + 255) // 256) * 256
+
+
+# =========================================================================
+# Init
+# =========================================================================
+
+def _block_init(key, cfg: ArchConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln1": blocks.norm_init(cfg),
+        "attn": blocks.attention_init(ks[0], cfg),
+        "ln2": blocks.norm_init(cfg),
+    }
+    if cfg.moe_experts:
+        p["moe"] = blocks.moe_init(ks[1], cfg)
+    else:
+        p["mlp"] = blocks.mlp_init(ks[1], cfg)
+    return p
+
+
+def lm_init(key, cfg: ArchConfig) -> Params:
+    V = padded_vocab(cfg)
+    ks = jax.random.split(key, 5)
+    params: Params = {
+        "embed": blocks._init(ks[0], (V, cfg.d_model)),
+        "final_norm": blocks.norm_init(cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = blocks._init(ks[1], (cfg.d_model, V))
+
+    L = cfg.n_layers
+    if cfg.family in ("ssm", "hybrid"):
+        params["blocks"] = jax.vmap(
+            lambda k: {"mamba": ssm.mamba2_init(k, cfg)})(jax.random.split(ks[2], L))
+        if cfg.family == "hybrid":
+            params["shared_attn"] = _block_init(ks[3], cfg)
+    else:
+        params["blocks"] = jax.vmap(
+            lambda k: _block_init(k, cfg))(jax.random.split(ks[2], L))
+    if cfg.vlm_prefix:
+        params["mm_proj"] = blocks._init(ks[4], (cfg.d_model, cfg.d_model))
+    return params
+
+
+# =========================================================================
+# Layer bodies
+# =========================================================================
+
+def _attn_block(bp: Params, x: Array, cfg: ArchConfig, qcfg: QuantConfig,
+                key, *, cache=None, cache_index=0):
+    h = blocks.norm_apply(bp["ln1"], x, cfg, qcfg, subkey(key, 0))
+    h, new_cache = blocks.attention_apply(
+        bp["attn"], h, cfg, qcfg, subkey(key, 1),
+        kv_cache=cache, cache_index=cache_index)
+    x = sharding.constrain_tokens(x + h)
+    h = blocks.norm_apply(bp["ln2"], x, cfg, qcfg, subkey(key, 2))
+    aux = jnp.float32(0)
+    if "moe" in bp:
+        h, aux = blocks.moe_apply(bp["moe"], h, cfg, qcfg, subkey(key, 3))
+    else:
+        h = blocks.mlp_apply(bp["mlp"], h, cfg, qcfg, subkey(key, 3))
+    x = sharding.constrain_tokens(x + h)
+    return x, aux, new_cache
+
+
+def _backbone_train(params: Params, x: Array, cfg: ArchConfig,
+                    qcfg: QuantConfig, key) -> Tuple[Array, Array]:
+    """Runs all layers (training/prefill, no cache). Returns (x, aux_sum)."""
+    L = cfg.n_layers
+
+    if cfg.family in ("ssm", "hybrid"):
+        every = cfg.hybrid_attn_every or L
+
+        def mamba_body(x, inp):
+            bp, idx = inp
+            k = subkey(key, idx)
+            h, _ = ssm.mamba2_apply(bp["mamba"], x, cfg, qcfg, k)
+            return sharding.constrain_tokens(x + h), None
+
+        mamba_body = utils.checkpoint(mamba_body)
+
+        if cfg.family == "ssm":
+            x, _ = utils.scan(mamba_body, x,
+                                (params["blocks"], jnp.arange(L)))
+            return x, jnp.float32(0)
+
+        # hybrid: groups of ``every`` mamba layers + the shared attn block
+        G = L // every
+        grouped = jax.tree.map(
+            lambda a: a.reshape((G, every) + a.shape[1:]), params["blocks"])
+
+        shared_body = utils.checkpoint(
+            lambda x, idx: _attn_block(params["shared_attn"], x, cfg, qcfg,
+                                       subkey(key, 10_000 + idx))[:2])
+
+        def group_body(x, inp):
+            gp, gidx = inp
+            x, _ = utils.scan(mamba_body, x,
+                                (gp, gidx * every + jnp.arange(every)))
+            x, _ = shared_body(x, gidx)
+            return x, None
+
+        x, _ = utils.scan(group_body, x, (grouped, jnp.arange(G)))
+        return x, jnp.float32(0)
+
+    def body(carry, inp):
+        x, aux = carry
+        bp, idx = inp
+        x, a, _ = _attn_block(bp, x, cfg, qcfg, subkey(key, idx))
+        return (x, aux + a), None
+
+    body = utils.checkpoint(body)
+    (x, aux), _ = utils.scan(body, (x, jnp.float32(0)),
+                               (params["blocks"], jnp.arange(L)))
+    return x, aux
+
+
+# =========================================================================
+# Embedding / head
+# =========================================================================
+
+def _embed(params: Params, tokens: Array, cfg: ArchConfig, qcfg: QuantConfig,
+           key, prefix_embeds: Optional[Array] = None) -> Array:
+    x = int_ops.int_embedding(params["embed"], tokens, subkey(key, -1), qcfg)
+    if prefix_embeds is not None:       # VLM: projected patch embeddings
+        pe = int_ops.int_linear(prefix_embeds, params["mm_proj"], None,
+                                subkey(key, -2), qcfg)
+        x = jnp.concatenate([pe, x], axis=1)
+    return sharding.constrain_tokens(x)
+
+
+def _logits(params: Params, x: Array, cfg: ArchConfig, qcfg: QuantConfig, key) -> Array:
+    x = blocks.norm_apply(params["final_norm"], x, cfg, qcfg, subkey(key, -3))
+    if cfg.tie_embeddings:
+        head = params["embed"].T
+    else:
+        head = params["lm_head"]
+    logits = int_ops.int_linear(x, head, None, subkey(key, -4), qcfg)
+    return sharding.constrain(logits, sharding.batch_axes(), None, "model")
+
+
+# =========================================================================
+# Training loss
+# =========================================================================
+
+def lm_loss(params: Params, batch: Dict[str, Array], cfg: ArchConfig,
+            qcfg: QuantConfig, key) -> Tuple[Array, Dict[str, Array]]:
+    """batch: tokens (B, S) int32, labels (B, S) int32 (-1 = masked);
+    VLM adds patch_embeds (B, P, D)."""
+    tokens = sharding.constrain_batch(batch["tokens"])
+    x = _embed(params, tokens, cfg, qcfg, key,
+               prefix_embeds=batch.get("patch_embeds"))
+    x, aux = _backbone_train(params, x, cfg, qcfg, key)
+    if cfg.vlm_prefix:
+        x = x[:, -tokens.shape[1]:]     # loss only over text positions
+    logits = _logits(params, x, cfg, qcfg, key)
+    labels = batch["labels"]
+    valid = labels >= 0
+    lab = jnp.where(valid, labels, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, lab[..., None], axis=-1)[..., 0]
+    loss = -jnp.sum(ll * valid) / jnp.maximum(jnp.sum(valid), 1)
+    if cfg.moe_experts:
+        loss = loss + 0.01 * aux / cfg.n_layers
+    return loss, {"ce": loss, "aux": aux}
+
+
+# =========================================================================
+# Serving: cache init / prefill / decode
+# =========================================================================
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> Params:
+    L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    if cfg.family == "ssm":
+        s = ssm.mamba2_init_state(cfg, batch)
+        return {"ssm": jnp.broadcast_to(s[0], (L,) + s[0].shape),
+                "conv_x": jnp.broadcast_to(s[1], (L,) + s[1].shape),
+                "conv_BC": jnp.broadcast_to(s[2], (L,) + s[2].shape),
+                "index": jnp.int32(0)}
+    if cfg.family == "hybrid":
+        G = cfg.n_layers // cfg.hybrid_attn_every
+        s = ssm.mamba2_init_state(cfg, batch)
+        return {
+            "ssm": jnp.broadcast_to(s[0], (L,) + s[0].shape),
+            "conv_x": jnp.broadcast_to(s[1], (L,) + s[1].shape),
+            "conv_BC": jnp.broadcast_to(s[2], (L,) + s[2].shape),
+            "k": jnp.zeros((G, batch, max_seq, KV, hd), dtype),
+            "v": jnp.zeros((G, batch, max_seq, KV, hd), dtype),
+            "index": jnp.int32(0),
+        }
+    return {"k": jnp.zeros((L, batch, max_seq, KV, hd), dtype),
+            "v": jnp.zeros((L, batch, max_seq, KV, hd), dtype),
+            "index": jnp.int32(0)}
+
+
+def _constrain_cache(cache: Params) -> Params:
+    out = dict(cache)
+    for n in ("k", "v"):
+        if n in cache:
+            # shard: batch over DP, head_dim over model (kv-head counts like 8
+            # or 3 do not divide a 16-way model axis; head_dim does)
+            out[n] = sharding.constrain(
+                cache[n], None, sharding.batch_axes(), None, None, "model")
+    if "ssm" in cache:                   # (L, B, H, P, N): shard heads on model
+        out["ssm"] = sharding.constrain(
+            cache["ssm"], None, sharding.batch_axes(), "model", None, None)
+    for n in ("conv_x", "conv_BC"):      # (L, B, K-1, C): shard channels
+        if n in cache:
+            out[n] = sharding.constrain(
+                cache[n], None, sharding.batch_axes(), None, "model")
+    return out
+
+
+def lm_decode_step(params: Params, token: Array, cache: Params,
+                   cfg: ArchConfig, qcfg: QuantConfig) -> Tuple[Array, Params]:
+    """token: (B, 1) int32. Returns (logits (B, 1, V), new cache)."""
+    key = None                                   # no stochastic rounding at serve
+    index = cache["index"]
+    x = _embed(params, token, cfg, qcfg, key)
+    L = cfg.n_layers
+
+    if cfg.family in ("ssm", "hybrid"):
+        every = cfg.hybrid_attn_every or L
+
+        def mamba_body(x, inp):
+            bp, s_ssm, s_cx, s_cbc = inp
+            h, (n_ssm, n_cx, n_cbc) = ssm.mamba2_apply(
+                bp["mamba"], x, cfg, qcfg, None,
+                state=(s_ssm, s_cx, s_cbc), decode=True)
+            return x + h, (n_ssm, n_cx, n_cbc)
+
+        if cfg.family == "ssm":
+            x, (n_ssm, n_cx, n_cbc) = utils.scan(
+                mamba_body, x,
+                (params["blocks"], cache["ssm"], cache["conv_x"], cache["conv_BC"]))
+            new_cache = {"ssm": n_ssm, "conv_x": n_cx, "conv_BC": n_cbc,
+                         "index": index + 1}
+        else:
+            G = L // every
+            grouped = jax.tree.map(
+                lambda a: a.reshape((G, every) + a.shape[1:]), params["blocks"])
+            g_states = jax.tree.map(
+                lambda a: a.reshape((G, every) + a.shape[1:]),
+                (cache["ssm"], cache["conv_x"], cache["conv_BC"]))
+
+            def group_body(x, inp):
+                gp, s_ssm, s_cx, s_cbc, ck, cv = inp
+                x, ns = utils.scan(mamba_body, x, (gp, s_ssm, s_cx, s_cbc))
+                h = blocks.norm_apply(params["shared_attn"]["ln1"], x, cfg, qcfg, None)
+                h, (nk, nv) = blocks.attention_apply(
+                    params["shared_attn"]["attn"], h, cfg, qcfg, None,
+                    kv_cache=(ck, cv), cache_index=index)
+                x = x + h
+                h = blocks.norm_apply(params["shared_attn"]["ln2"], x, cfg, qcfg, None)
+                h = blocks.mlp_apply(params["shared_attn"]["mlp"], h, cfg, qcfg, None)
+                return x + h, ns + (nk, nv)
+
+            x, (n_ssm, n_cx, n_cbc, nk, nv) = utils.scan(
+                group_body, x, (grouped,) + g_states + (cache["k"], cache["v"]))
+            new_cache = {
+                "ssm": n_ssm.reshape((L,) + n_ssm.shape[2:]),
+                "conv_x": n_cx.reshape((L,) + n_cx.shape[2:]),
+                "conv_BC": n_cbc.reshape((L,) + n_cbc.shape[2:]),
+                "k": nk, "v": nv, "index": index + 1,
+            }
+        logits = _logits(params, x, cfg, qcfg, key)
+        return logits, _constrain_cache(new_cache)
+
+    def body(carry, inp):
+        x, aux = carry
+        bp, ck, cv, idx = inp
+        x, a, ncache = _attn_block(bp, x, cfg, qcfg, None,
+                                   cache=(ck, cv), cache_index=index)
+        return (x, aux + a), ncache
+
+    (x, _), (nk, nv) = utils.scan(
+        body, (x, jnp.float32(0)),
+        (params["blocks"], cache["k"], cache["v"], jnp.arange(L)))
+    logits = _logits(params, x, cfg, qcfg, key)
+    return logits, _constrain_cache({"k": nk, "v": nv, "index": index + 1})
+
+
+def lm_prefill(params: Params, tokens: Array, cfg: ArchConfig,
+               qcfg: QuantConfig,
+               prefix_embeds: Optional[Array] = None) -> Tuple[Array, Array]:
+    """Forward pass over the full prompt; returns (last-token logits, final
+    hidden states). Cache filling for the dense path reuses the training
+    backbone (no S×S materialization thanks to flash attention)."""
+    x = _embed(params, tokens, cfg, qcfg, None, prefix_embeds=prefix_embeds)
+    x, _ = _backbone_train(params, x, cfg, qcfg, None)
+    logits = _logits(params, x[:, -1:], cfg, qcfg, None)
+    return logits, x

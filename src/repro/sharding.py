@@ -1,0 +1,201 @@
+"""Rule-based parameter and activation partitioner.
+
+Axes (DESIGN.md §5):
+
+* ``pod``   — outer data-parallel axis spanning pods (multi-pod mesh only)
+* ``data``  — inner data-parallel / FSDP axis
+* ``model`` — tensor-parallel axis (heads / ffn / vocab / expert-inner dims)
+
+Rules are keyed on parameter path suffixes and applied with a divisibility
+check: if the preferred sharded dim is not divisible by the axis size the
+rule falls back (TP -> FSDP-on-other-dim -> replicate), so irregular archs
+(smollm's 9 heads, whisper's 20 heads, mamba vocab 50280 before padding)
+still lower cleanly — the fallbacks are visible in the roofline table as
+extra collective or compute bytes rather than as compile failures.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Active-mesh context: models call ``constrain`` freely; it is a no-op until
+# the launcher installs a mesh.
+# ---------------------------------------------------------------------------
+
+_ACTIVE_MESH: Optional[Mesh] = None
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    global _ACTIVE_MESH
+    _ACTIVE_MESH = mesh
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _ACTIVE_MESH
+
+
+def batch_axes(mesh: Optional[Mesh] = None):
+    mesh = mesh or _ACTIVE_MESH
+    if mesh is None:
+        return ("data",)
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def constrain(x: jax.Array, *spec) -> jax.Array:
+    """with_sharding_constraint against the active mesh (no-op without one).
+
+    ``spec`` entries: None, an axis name, or a tuple of axis names; entries
+    naming axes missing from the mesh are dropped; non-divisible dims fall
+    back to None.
+    """
+    mesh = _ACTIVE_MESH
+    if mesh is None:
+        return x
+    clean = []
+    for dim, s in zip(x.shape, spec):
+        names = (s,) if isinstance(s, str) else tuple(s or ())
+        names = tuple(n for n in names if n in mesh.axis_names)
+        size = int(np.prod([mesh.shape[n] for n in names])) if names else 1
+        if not names or dim % size != 0:
+            clean.append(None)
+        else:
+            clean.append(names if len(names) > 1 else names[0])
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*clean)))
+
+
+def constrain_batch(x: jax.Array) -> jax.Array:
+    """Shard the leading (batch) dim over all data-parallel axes."""
+    return constrain(x, batch_axes(), *([None] * (x.ndim - 1)))
+
+
+#: sequence-parallel residual sharding (Megatron-SP layout). Disable via the
+#: dry-run "--variant no_sp" to measure its collective cost/benefit.
+SEQUENCE_SHARDING = True
+
+
+def constrain_tokens(x: jax.Array) -> jax.Array:
+    """(B, S, D) residual stream: batch over DP, sequence over model (the
+    Megatron-SP layout — XLA all-gathers S for attention and reduce-scatters
+    after, halving activation memory per device)."""
+    if x.ndim == 3:
+        if SEQUENCE_SHARDING:
+            return constrain(x, batch_axes(), "model", None)
+        return constrain(x, batch_axes(), None, None)
+    return constrain_batch(x)
+
+
+# ---------------------------------------------------------------------------
+# Parameter partition rules
+# ---------------------------------------------------------------------------
+# (path-suffix regex, preferred spec per dim). "model" entries are checked
+# for divisibility; "data" is the FSDP fallback dim.
+
+_RULES = [
+    # embeddings / unembedding
+    (r"embed$", ("model", "data")),
+    (r"lm_head$", ("data", "model")),
+    (r"pos_embed$", (None, "data")),
+    # attention
+    (r"wq$", ("data", "model")),
+    (r"wk$", ("data", "model")),
+    (r"wv$", ("data", "model")),
+    (r"wo$", ("model", "data")),
+    (r"b[qkv]$", ("model",)),
+    # dense MLP (SwiGLU + gelu variants)
+    (r"wg$", ("data", "model")),
+    (r"wu$", ("data", "model")),
+    (r"wd$", ("model", "data")),
+    (r"w1$", ("data", "model")),
+    (r"w2$", ("model", "data")),
+    (r"b1$", ("model",)),
+    (r"b2$", (None,)),
+    # MoE — expert weights shard on model ONLY (TP inside each expert): the
+    # data axis is reserved for the dispatch buffer's token rows; putting
+    # FSDP on expert D/F dims forces XLA to fully re-gather the experts and
+    # replicate the row compute (found in §Perf iteration A.3).
+    (r"router$", (None, None)),
+    (r"(wg|wu)_e$", (None, None, "model")),
+    (r"wd_e$", (None, "model", None)),
+    # mamba2
+    (r"wz$", ("data", "model")),
+    (r"wx$", ("data", "model")),
+    (r"wBC$", ("data", None)),
+    (r"wdt$", ("data", "model")),
+    (r"conv_x$", (None, "model")),
+    (r"conv_BC$", (None, None)),
+    (r"out_proj$", ("model", "data")),
+    (r"norm_g$", ("model",)),
+    (r"(A_log|dt_bias|D_skip)$", (None,)),
+    # norms and misc small params
+    (r"(^|/)g$", (None,)),
+    (r"(^|/)b$", (None,)),
+    (r"head$", ("data", "model")),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for e in path:
+        if hasattr(e, "key"):
+            parts.append(str(e.key))
+        elif hasattr(e, "idx"):
+            parts.append(str(e.idx))
+    return "/".join(parts)
+
+
+def spec_for(path: str, shape, mesh: Mesh, fsdp: bool,
+             stacked: bool) -> P:
+    """PartitionSpec for one parameter.
+
+    ``stacked``: leading layer axis from scan-stacking (never sharded).
+    """
+    dims = list(shape)
+    lead = [None]
+    if stacked:
+        dims = dims[1:]
+    rule = None
+    for pat, spec in _RULES:
+        if re.search(pat, path):
+            rule = spec
+            break
+    if rule is None:
+        rule = tuple([None] * len(dims))
+    out = []
+    used = set()
+    for dim, want in zip(dims, rule):
+        take = None
+        for cand in ([want] if not isinstance(want, (list, tuple)) else list(want)):
+            if cand is None:
+                continue
+            if cand == "data" and not fsdp:
+                continue
+            if cand in mesh.axis_names and cand not in used and dim % mesh.shape[cand] == 0:
+                take = cand
+                break
+        out.append(take)
+        if take:
+            used.add(take)
+    if stacked:
+        out = lead + out
+    return P(*out)
+
+
+def param_pspecs(params: Any, mesh: Mesh, *, fsdp: bool) -> Any:
+    """Pytree of NamedShardings matching ``params`` (also accepts a pytree of
+    ShapeDtypeStructs)."""
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        stacked = "/blocks/" in "/" + ps or ps.startswith("blocks/") \
+            or "/enc_blocks/" in "/" + ps or ps.startswith("enc_blocks/") \
+            or "/dec_blocks/" in "/" + ps or ps.startswith("dec_blocks/")
+        spec = spec_for(ps, leaf.shape, mesh, fsdp, stacked)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params)

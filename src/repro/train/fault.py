@@ -1,0 +1,102 @@
+"""Fault-tolerance harness for the step loop.
+
+On a real multi-pod deployment every worker runs this loop; the pieces are
+deliberately dependency-free so they work identically under the single-host
+simulation here and under a k8s/JobSet launcher:
+
+* **retry-with-restore** — a step that raises (preemption, ICI timeout,
+  numerical assert) triggers restore-from-latest-checkpoint and replay;
+  bounded retries then re-raise for the cluster scheduler to reschedule.
+* **heartbeat file** — touched every step; an external watchdog (or the
+  JobSet liveness probe) kills wedged workers — the standard TPU-pod
+  straggler story is detect-and-restart, not in-band recovery.
+* **straggler monitor** — EWMA of step wall-time; steps slower than
+  ``threshold×`` EWMA are logged with their step index so slow hosts can be
+  cordoned. On-device work is identical across hosts under SPMD, so a slow
+  *step* on one host implicates that host's data feed or its chips.
+* **elastic restart** — restore accepts any mesh (checkpoint.py is
+  mesh-agnostic), so recovering with fewer/more pods only requires
+  re-deriving shardings, which the trainer does from the params pytree.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import os
+import time
+from typing import Any, Callable, Dict, Optional
+
+log = logging.getLogger("repro.fault")
+
+
+@dataclasses.dataclass
+class FaultConfig:
+    max_retries: int = 3
+    heartbeat_path: Optional[str] = None
+    straggler_threshold: float = 2.0
+    ewma_alpha: float = 0.1
+
+
+class StragglerMonitor:
+    def __init__(self, cfg: FaultConfig):
+        self.cfg = cfg
+        self.ewma: Optional[float] = None
+        self.flagged: list[tuple[int, float]] = []
+
+    def observe(self, step: int, dt: float) -> bool:
+        slow = False
+        if self.ewma is not None and dt > self.cfg.straggler_threshold * self.ewma:
+            self.flagged.append((step, dt))
+            log.warning("straggler: step %d took %.3fs (ewma %.3fs)",
+                        step, dt, self.ewma)
+            slow = True
+        a = self.cfg.ewma_alpha
+        self.ewma = dt if self.ewma is None else (1 - a) * self.ewma + a * dt
+        return slow
+
+
+def heartbeat(cfg: FaultConfig) -> None:
+    if cfg.heartbeat_path:
+        with open(cfg.heartbeat_path, "w") as f:
+            f.write(str(time.time()))
+
+
+def run_with_recovery(
+    step_fn: Callable[[Any, int], Any],
+    state: Any,
+    *,
+    start_step: int,
+    num_steps: int,
+    fault_cfg: FaultConfig = FaultConfig(),
+    save_fn: Optional[Callable[[Any, int], None]] = None,
+    restore_fn: Optional[Callable[[], tuple[Any, int]]] = None,
+    save_every: int = 100,
+) -> Any:
+    """Drives ``state = step_fn(state, step)`` with checkpoint/restart.
+
+    ``restore_fn`` returns (state, step) from the latest durable checkpoint;
+    after ``max_retries`` consecutive failures the exception propagates (the
+    cluster scheduler owns node replacement).
+    """
+    monitor = StragglerMonitor(fault_cfg)
+    step = start_step
+    retries = 0
+    while step < start_step + num_steps:
+        t0 = time.time()
+        try:
+            state = step_fn(state, step)
+            retries = 0
+        except Exception as e:          # noqa: BLE001 — deliberate catch-all
+            retries += 1
+            log.error("step %d failed (%s); retry %d/%d",
+                      step, type(e).__name__, retries, fault_cfg.max_retries)
+            if retries > fault_cfg.max_retries or restore_fn is None:
+                raise
+            state, step = restore_fn()
+            continue
+        monitor.observe(step, time.time() - t0)
+        heartbeat(fault_cfg)
+        step += 1
+        if save_fn is not None and step % save_every == 0:
+            save_fn(state, step)
+    return state

@@ -1,0 +1,95 @@
+"""AdamW with FP32 master weights — the paper keeps the weight update in
+FP32 while the layer compute is integer; the optimizer state (m, v, master
+params) therefore stays float32 regardless of the quantization preset.
+
+Pure-pytree implementation (no optax dependency): init/update functions over
+arbitrary param trees, global-norm clipping, linear-warmup + cosine decay.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 2e-5                  # paper's GLUE fine-tuning LR
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    warmup_steps: int = 0
+    total_steps: int = 0              # 0 => constant LR (paper: constant)
+    schedule: str = "constant"        # constant | cosine | linear
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def init(params: Any) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return OptState(step=jnp.zeros((), jnp.int32), m=zeros,
+                    v=jax.tree.map(jnp.copy, zeros))
+
+
+def _schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    lr = jnp.float32(cfg.lr)
+    s = step.astype(jnp.float32)
+    if cfg.warmup_steps > 0:
+        lr = lr * jnp.minimum(1.0, (s + 1) / cfg.warmup_steps)
+    if cfg.total_steps > 0 and cfg.schedule != "constant":
+        frac = jnp.clip((s - cfg.warmup_steps) /
+                        max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        if cfg.schedule == "cosine":
+            lr = lr * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        elif cfg.schedule == "linear":
+            lr = lr * (1 - frac)
+    return lr
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def update(cfg: OptimizerConfig, grads: Any, state: OptState, params: Any
+           ) -> Tuple[Any, OptState, dict]:
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    if cfg.grad_clip > 0:
+        scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+    step = state.step + 1
+    lr = _schedule(cfg, state.step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        # FP32 master weight update (paper-kept op)
+        newp = p - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                         + cfg.weight_decay * p)
+        return newp.astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return new_p, OptState(step, new_m, new_v), {"grad_norm": gnorm, "lr": lr}

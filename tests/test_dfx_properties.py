@@ -1,0 +1,123 @@
+"""Property tests of the b-bit dynamic fixed-point mapping (paper Prop. 1 /
+Remark 2/3 invariants), via hypothesis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dfx
+
+jax.config.update("jax_platform_name", "cpu")
+
+finite_floats = st.floats(min_value=-1e6, max_value=1e6,
+                          allow_nan=False, allow_infinity=False, width=32)
+
+
+def arrays(min_size=1, max_size=64):
+    return st.lists(finite_floats, min_size=min_size, max_size=max_size).map(
+        lambda v: np.asarray(v, np.float32))
+
+
+@settings(max_examples=80, deadline=None)
+@given(arrays(), st.integers(min_value=4, max_value=20))
+def test_roundtrip_error_within_prop1_bound(x, bits):
+    """Prop. 1: |x̂ - x| <= 2^(e_scale - b + 2) (the quantization step)."""
+    t = dfx.quantize(jnp.asarray(x), bits)
+    xh = np.asarray(dfx.dequantize(t))
+    bound = float(dfx.error_bound(jnp.asarray(x), bits))
+    assert np.max(np.abs(xh - x)) <= bound + 1e-30
+
+
+@settings(max_examples=50, deadline=None)
+@given(arrays(min_size=4), st.integers(min_value=4, max_value=14))
+def test_error_decreases_with_bitwidth(x, bits):
+    """Remark 3: increasing b reduces the mapping error (Fig. 3's mechanism)."""
+    e_lo = np.abs(np.asarray(dfx.quantize_dequantize(jnp.asarray(x), bits)) - x).max()
+    e_hi = np.abs(np.asarray(dfx.quantize_dequantize(jnp.asarray(x), bits + 4)) - x).max()
+    assert e_hi <= e_lo + 1e-30
+
+
+@settings(max_examples=40, deadline=None)
+@given(arrays(min_size=2), st.integers(min_value=4, max_value=16))
+def test_mantissa_fits_signed_bits(x, bits):
+    t = dfx.quantize(jnp.asarray(x), bits)
+    lim = 2 ** (bits - 1) - 1
+    assert int(jnp.max(jnp.abs(t.m.astype(jnp.int32)))) <= lim
+    assert t.m.dtype == dfx.storage_dtype(bits)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=4, max_value=12), st.integers(0, 2 ** 31 - 1))
+def test_stochastic_rounding_unbiased(bits, seed):
+    """Assumption 2 requires E[q(x)] = x for the gradient mapping."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (32,)) * 0.7
+    ks = jax.random.split(jax.random.fold_in(key, 1), 512)
+    q = jax.vmap(lambda k: dfx.quantize_dequantize(x, bits, stochastic=True,
+                                                   key=k))(ks)
+    bias = np.abs(np.asarray(jnp.mean(q, 0) - x))
+    step = float(dfx.error_bound(x, bits))
+    # Elements within one step of |max| can be clipped to the (2^(b-1)-1)
+    # grid point (sign-bit reservation), which is a deliberate, bounded bias;
+    # unbiasedness holds on the interior of the range.
+    interior = np.abs(np.asarray(x)) < float(jnp.max(jnp.abs(x))) - step
+    # SE of the mean of 512 draws bounded by step/sqrt(512); 6 sigma slack
+    assert bias[interior].max(initial=0.0) <= 6 * step / np.sqrt(512) + 1e-12
+
+
+def test_variance_bound_prop1():
+    """Empirical variance of the stochastic mapping error <= step^2, and the
+    log-variance slope in b is -2 (Prop. 1: V <= 2^{2(e-b+2)})."""
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (64,))
+    variances = []
+    for bits in (6, 8, 10, 12):
+        ks = jax.random.split(jax.random.fold_in(key, bits), 256)
+        q = jax.vmap(lambda k: dfx.quantize_dequantize(
+            x, bits, stochastic=True, key=k))(ks)
+        err = np.asarray(q) - np.asarray(x)
+        v = err.var(axis=0).max()
+        assert v <= float(dfx.variance_bound(x, bits))
+        variances.append(v)
+    slopes = np.diff(np.log2(variances)) / 2.0   # per bit-step of 2
+    assert np.all(slopes < -1.5), slopes          # ~ -2 per bit
+
+
+def test_matmul_output_scale_is_sum_of_input_scales():
+    """Paper Fig. 2: the output scale is one scalar add."""
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (16, 32)) * 5
+    w = jax.random.normal(jax.random.fold_in(key, 1), (32, 8)) * 0.01
+    qx, qw = dfx.quantize(x, 8), dfx.quantize(w, 8)
+    y = dfx.dfx_matmul(qx, qw)
+    manual = (qx.m.astype(jnp.float32) @ qw.m.astype(jnp.float32)) \
+        * 2.0 ** float(qx.exp + qw.exp)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(manual), rtol=0)
+
+
+def test_zero_tensor_roundtrip():
+    t = dfx.quantize(jnp.zeros((8, 8)), 8)
+    assert int(jnp.sum(jnp.abs(t.m.astype(jnp.int32)))) == 0
+    np.testing.assert_array_equal(np.asarray(dfx.dequantize(t)), 0.0)
+
+
+@pytest.mark.parametrize("bits,expected", [(8, jnp.int8), (12, jnp.int16),
+                                           (16, jnp.int16), (20, jnp.int32)])
+def test_storage_dtype(bits, expected):
+    assert dfx.storage_dtype(bits) == expected
+
+
+def test_per_axis_scales():
+    key = jax.random.PRNGKey(5)
+    # rows with wildly different magnitudes: per-row scales must beat per-tensor
+    x = jax.random.normal(key, (4, 64)) * jnp.array([[1e-3], [1.0], [1e3], [3.0]])
+    per_tensor = dfx.quantize_dequantize(x, 8)
+    per_row = dfx.dequantize(dfx.quantize(x, 8, reduce_axes=(1,)))
+    # row-norm relative error (pointwise rel error saturates at 1.0 when the
+    # per-tensor scale flushes the small rows to zero entirely)
+    e_t = float(jnp.max(jnp.linalg.norm(per_tensor - x, axis=1)
+                        / jnp.linalg.norm(x, axis=1)))
+    e_r = float(jnp.max(jnp.linalg.norm(per_row - x, axis=1)
+                        / jnp.linalg.norm(x, axis=1)))
+    assert e_r < 0.1 * e_t, (e_r, e_t)

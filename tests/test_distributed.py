@@ -1,0 +1,165 @@
+"""Distribution tests that need >1 device: run in a subprocess with
+--xla_force_host_platform_device_count so the main pytest process keeps its
+single-device view (the dry-run owns the 512-device config)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _run(code: str, devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=900, env=env)
+    assert r.returncode == 0, r.stderr[-3000:]
+    return r.stdout
+
+
+def test_sharded_train_step_matches_single_device():
+    """The SPMD train step on a (2, 2) mesh computes the same loss and params
+    as the unsharded step."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro import sharding
+        from repro.configs import registry
+        from repro.core.qconfig import QuantConfig
+        from repro.models import lm
+        from repro.train import optimizer as opt_lib, trainer
+
+        cfg = registry.get_config('qwen1.5-0.5b').reduced()
+        qcfg = QuantConfig.fp32()
+        key = jax.random.PRNGKey(0)
+        mesh = jax.make_mesh((2, 2), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        batch = {"tokens": jax.random.randint(key, (4, 32), 0, cfg.vocab),
+                 "labels": jax.random.randint(key, (4, 32), 0, cfg.vocab)}
+        opt_cfg = opt_lib.OptimizerConfig(lr=1e-3)
+        step = trainer.make_train_step(lm.lm_loss, cfg, qcfg, opt_cfg)
+
+        # single device reference
+        params = lm.lm_init(key, cfg)
+        opt = opt_lib.init(params)
+        p1, o1, m1 = jax.jit(step)(params, opt, batch, key)
+
+        # sharded
+        sharding.set_mesh(mesh)
+        params2, opt2, pspecs = trainer.init_train_state(
+            lambda k: lm.lm_init(k, cfg), key, mesh, fsdp=True)
+        stepj = trainer.jit_train_step(step, mesh, pspecs, donate=False)
+        p2, o2, m2 = stepj(params2, opt2, batch, key)
+        assert abs(float(m1['loss']) - float(m2['loss'])) < 1e-4, (m1, m2)
+        for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+        print('SHARDED_MATCH_OK')
+    """)
+    assert "SHARDED_MATCH_OK" in out
+
+
+def test_param_pspecs_rules():
+    out = _run("""
+        import jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        from repro import sharding
+        from repro.configs import registry
+        from repro.models import lm
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        cfg = registry.get_config('qwen1.5-0.5b')
+        shapes = jax.eval_shape(lambda k: lm.lm_init(k, cfg),
+                                jax.eval_shape(lambda: jax.random.PRNGKey(0)))
+        specs = sharding.param_pspecs(shapes, mesh, fsdp=True)
+        # embedding: vocab on model, d_model on data (fsdp)
+        assert specs['embed'].spec == P('model', 'data'), specs['embed']
+        # stacked block weights: leading layer axis unsharded, TP on output
+        wq = specs['blocks']['attn']['wq'].spec
+        assert wq == P(None, 'data', 'model'), wq
+        wo = specs['blocks']['attn']['wo'].spec
+        assert wo == P(None, 'model', 'data'), wo
+        # norm scales replicated
+        assert specs['final_norm']['g'].spec == P(None,)
+        print('PSPEC_RULES_OK')
+    """)
+    assert "PSPEC_RULES_OK" in out
+
+
+def test_constrain_divisibility_fallback():
+    out = _run("""
+        import jax, jax.numpy as jnp
+        from repro import sharding
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        sharding.set_mesh(mesh)
+        x = jnp.zeros((3, 5))          # neither dim divisible
+        y = jax.jit(lambda x: sharding.constrain(x, "data", "model"))(x)
+        assert y.shape == x.shape
+        z = jnp.zeros((4, 8))
+        z2 = jax.jit(lambda x: sharding.constrain(x, "data", "model"))(z)
+        print('CONSTRAIN_OK')
+    """)
+    assert "CONSTRAIN_OK" in out
+
+
+def test_compressed_psum_matches_plain_mean():
+    """int8 DFX all-reduce + error feedback ~= FP32 mean all-reduce, and the
+    residual carries the quantization error."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.core import grad_compress
+
+        mesh = jax.make_mesh((4,), ("pod",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        key = jax.random.PRNGKey(0)
+        g_local = jax.random.normal(key, (4, 256, 512))   # per-pod grads
+
+        def body(g, r):
+            out, nr = grad_compress.compressed_psum_mean(
+                {"w": g[0]}, {"w": r[0]}, bits=8, axis="pod", min_size=1)
+            return out["w"][None], nr["w"][None]
+
+        f = jax.shard_map(body, mesh=mesh, in_specs=(P("pod"), P("pod")),
+                          out_specs=(P("pod"), P("pod")), check_vma=False)
+        r0 = jnp.zeros_like(g_local)
+        out, res = f(g_local, r0)
+        true_mean = jnp.mean(g_local, axis=0)
+        # every pod sees the same compressed mean
+        for i in range(4):
+            np.testing.assert_allclose(np.asarray(out[i]),
+                                       np.asarray(out[0]), rtol=0)
+        err = float(jnp.abs(out[0] - true_mean).max())
+        amax = float(jnp.abs(g_local).max())
+        assert err <= amax * 2.0 ** -6, (err, amax)   # int8 step bound
+        # error feedback: residual equals the per-pod quantization error
+        assert float(jnp.abs(res).max()) > 0
+        # EF telescopes: the CUMULATIVE estimate over two rounds stays
+        # within ONE quantization step of the true cumulative mean, while
+        # without EF the bias doubles (Karimireddy et al. 2019).
+        out2, _ = f(g_local, res)
+        cum_ef = float(jnp.abs(out[0] + out2[0] - 2 * true_mean).max())
+        o2, _ = f(g_local, jnp.zeros_like(res))
+        cum_no = float(jnp.abs(out[0] + o2[0] - 2 * true_mean).max())
+        assert cum_ef <= amax * 2.0 ** -6 + 1e-7, (cum_ef, amax)
+        assert cum_ef < 0.75 * cum_no, (cum_ef, cum_no)
+        print('COMPRESS_OK')
+    """)
+    assert "COMPRESS_OK" in out
+
+
+def test_multipod_mesh_shapes():
+    out = _run("""
+        from repro.launch.mesh import make_production_mesh
+        m1 = make_production_mesh(multi_pod=False)
+        m2 = make_production_mesh(multi_pod=True)
+        assert dict(m1.shape) == {"data": 16, "model": 16}, m1.shape
+        assert dict(m2.shape) == {"pod": 2, "data": 16, "model": 16}, m2.shape
+        print('MESH_OK')
+    """, devices=512)
+    assert "MESH_OK" in out

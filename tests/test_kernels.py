@@ -1,0 +1,112 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dfx
+from repro.kernels import ops, ref
+from repro.kernels.bfp_matmul import bfp_matmul
+from repro.kernels.dfx_quant import dfx_quantize
+from repro.kernels.int_layernorm import int_layernorm_fwd
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("M,K,N", [(128, 128, 128), (256, 384, 128),
+                                   (128, 256, 512)])
+@pytest.mark.parametrize("dtype", [jnp.int8])
+def test_bfp_matmul_exact(M, K, N, dtype):
+    xm = jax.random.randint(KEY, (M, K), -127, 128, jnp.int32).astype(dtype)
+    wm = jax.random.randint(jax.random.fold_in(KEY, 1), (K, N), -127, 128,
+                            jnp.int32).astype(dtype)
+    for e in (-7, 0, 3):
+        y = bfp_matmul(xm, wm, jnp.int32(e), interpret=True)
+        yr = ref.bfp_matmul_ref(xm, wm, jnp.int32(e))
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+
+
+@pytest.mark.parametrize("blocks", [(128, 128, 128), (256, 128, 128)])
+def test_bfp_matmul_block_shapes(blocks):
+    bm, bn, bk = blocks
+    M, K, N = 2 * bm, 2 * bk, 2 * bn
+    xm = jax.random.randint(KEY, (M, K), -127, 128, jnp.int32).astype(jnp.int8)
+    wm = jax.random.randint(KEY, (K, N), -127, 128, jnp.int32).astype(jnp.int8)
+    y = bfp_matmul(xm, wm, jnp.int32(-2), bm=bm, bn=bn, bk=bk, interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(y), np.asarray(ref.bfp_matmul_ref(xm, wm, jnp.int32(-2))))
+
+
+@pytest.mark.parametrize("bits", [8, 10, 12, 16])
+def test_limb_decomposition_roundtrip(bits):
+    m = jax.random.randint(KEY, (64, 64), -(2 ** (bits - 1) - 1),
+                           2 ** (bits - 1), jnp.int32)
+    limbs = ops._split_limbs(m, bits)
+    rec = sum(l.astype(jnp.int32) * (2 ** s) for l, s in limbs)
+    np.testing.assert_array_equal(np.asarray(rec), np.asarray(m))
+    for l, _ in limbs:
+        assert l.dtype == jnp.int8
+
+
+@pytest.mark.parametrize("xb,wb", [(8, 8), (12, 8), (12, 12), (16, 16)])
+@pytest.mark.parametrize("shape", [(100, 200, 60), (32, 128, 128)])
+def test_dfx_matmul_tiled_vs_oracle(xb, wb, shape):
+    M, K, N = shape
+    x = jax.random.normal(KEY, (M, K)) * 2.0
+    w = jax.random.normal(jax.random.fold_in(KEY, 1), (K, N)) * 0.3
+    qx, qw = dfx.quantize(x, xb), dfx.quantize(w, wb)
+    y = ops.dfx_matmul_tiled(qx.m, qx.exp, xb, qw.m, qw.exp, wb,
+                             interpret=True)
+    # exact integer oracle in numpy int64 (the limb path is bit-exact; jnp
+    # float64 would silently truncate to f32 under the default x64=off)
+    acc = np.asarray(qx.m, np.int64) @ np.asarray(qw.m, np.int64)
+    yr = acc.astype(np.float64) * 2.0 ** float(qx.exp + qw.exp)
+    # each limb partial is bit-exact int32; the cross-limb combine happens in
+    # f32 (epilogue), so tolerance = f32 ulp of the largest partial magnitude
+    np.testing.assert_allclose(np.asarray(y, np.float64), yr,
+                               atol=abs(yr).max() * 2e-6 + 1e-12)
+
+
+@pytest.mark.parametrize("bits", [8, 12, 16])
+@pytest.mark.parametrize("shape", [(64, 128), (100, 37)])
+def test_quantize_kernel_matches_core(bits, shape):
+    x = jax.random.normal(KEY, shape) * 3
+    t = dfx.quantize(x, bits)
+    m = ops.quantize_pallas(x, t.exp, bits, interpret=True)
+    np.testing.assert_array_equal(np.asarray(m), np.asarray(t.m))
+
+
+@pytest.mark.parametrize("bits", [8, 12])
+def test_quantize_kernel_stochastic_matches_oracle(bits):
+    x = jax.random.normal(KEY, (64, 96)) * 2
+    t = dfx.quantize(x, bits)
+    u = jax.random.uniform(jax.random.fold_in(KEY, 2), x.shape)
+    m = ops.quantize_pallas(x, t.exp, bits, u=u, interpret=True)
+    mr = ref.dfx_quantize_ref(x, t.exp, bits, u=u)
+    np.testing.assert_array_equal(np.asarray(m), np.asarray(mr))
+
+
+@pytest.mark.parametrize("R,D", [(16, 128), (8, 256), (24, 64)])
+@pytest.mark.parametrize("bits", [12, 16])
+def test_layernorm_kernel(R, D, bits):
+    x = jax.random.normal(KEY, (R, D)) * 2
+    t = dfx.quantize(x, bits)
+    gm = jax.random.normal(jax.random.fold_in(KEY, 3), (D,))
+    bt = jax.random.normal(jax.random.fold_in(KEY, 4), (D,))
+    y = ops.layernorm_pallas(t.m, t.exp, gm, bt, interpret=True)
+    yr = ref.int_layernorm_ref(t.m, t.exp, gm, bt)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_kernel_end_to_end_linear_close_to_fp32():
+    """quantize kernel -> matmul kernel pipeline ~ fp32 matmul."""
+    x = jax.random.normal(KEY, (128, 256))
+    w = jax.random.normal(jax.random.fold_in(KEY, 5), (256, 128)) * 0.1
+    qx, qw = dfx.quantize(x, 12), dfx.quantize(w, 12)
+    xm = ops.quantize_pallas(x, qx.exp, 12, interpret=True)
+    wm = ops.quantize_pallas(w, qw.exp, 12, interpret=True)
+    y = ops.dfx_matmul_tiled(xm, qx.exp, 12, wm, qw.exp, 12, interpret=True)
+    y0 = x @ w
+    relerr = float(jnp.linalg.norm(y - y0) / jnp.linalg.norm(y0))
+    assert relerr < 2e-2, relerr

@@ -1,0 +1,108 @@
+"""End-to-end behaviour tests for the paper's system."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.core.qconfig import QuantConfig
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import lm
+from repro.train import checkpoint, optimizer as opt_lib, trainer
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_int8_and_fp32_converge_with_similar_trajectories():
+    """The paper's central system claim (Fig. 5): integer fine-tuning follows
+    the FP32 trajectory. Smoke scale: both must drop, and int16 stays within
+    a tight band of fp32 per-step."""
+    cfg = registry.get_config("smollm-135m").reduced()
+    data_cfg = DataConfig(batch_size=4, seq_len=64, vocab=cfg.vocab)
+
+    def run(preset, steps=15):
+        qcfg = QuantConfig.preset(preset)
+        params = lm.lm_init(KEY, cfg)
+        opt_state = opt_lib.init(params)
+        step = jax.jit(trainer.make_train_step(
+            lm.lm_loss, cfg, qcfg,
+            opt_lib.OptimizerConfig(lr=2e-3, weight_decay=0.0)))
+        data = SyntheticLM(data_cfg)
+        losses = []
+        for i in range(steps):
+            batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+            params, opt_state, m = step(params, opt_state, batch,
+                                        jax.random.fold_in(KEY, i))
+            losses.append(float(m["loss"]))
+        return np.asarray(losses)
+
+    l_fp32 = run("fp32")
+    l_int16 = run("int16")
+    l_int8 = run("int8")
+    assert l_fp32[-1] < l_fp32[0] - 0.2
+    assert l_int8[-1] < l_int8[0] - 0.2
+    np.testing.assert_allclose(l_int16, l_fp32, atol=0.08)
+    # int8 may shift but must stay in the same regime (Fig. 5)
+    assert np.abs(l_int8 - l_fp32).max() < 0.8
+
+
+def test_train_restart_resumes_exactly():
+    """Kill-and-restore determinism: checkpoint at step k, keep training to
+    k+n, then restore at k and replay — parameters must match bit-for-bit
+    (RN rounding) given the same data and keys."""
+    import tempfile
+
+    cfg = registry.get_config("qwen1.5-0.5b").reduced()
+    qcfg = QuantConfig(weight_bits=8, act_bits=12, grad_bits=8,
+                       stochastic_grad=False)   # deterministic rounding
+    data_cfg = DataConfig(batch_size=2, seq_len=32, vocab=cfg.vocab)
+    params = lm.lm_init(KEY, cfg)
+    opt_state = opt_lib.init(params)
+    step = jax.jit(trainer.make_train_step(
+        lm.lm_loss, cfg, qcfg, opt_lib.OptimizerConfig(lr=1e-3)))
+
+    ckdir = tempfile.mkdtemp()
+    data = SyntheticLM(data_cfg)
+
+    def advance(params, opt_state, data, i):
+        batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+        return step(params, opt_state, batch, jax.random.fold_in(KEY, i))
+
+    for i in range(3):
+        params, opt_state, _ = advance(params, opt_state, data, i)
+    checkpoint.save(ckdir, 3, {"params": params, "opt": opt_state,
+                               "data": data.state()})
+    for i in range(3, 6):
+        params, opt_state, _ = advance(params, opt_state, data, i)
+
+    # restore and replay
+    like = {"params": params, "opt": opt_state, "data": data.state()}
+    got = checkpoint.restore(ckdir, 3, like)
+    p2, o2 = got["params"], got["opt"]
+    d2 = SyntheticLM(data_cfg)
+    d2.restore(got["data"])
+    for i in range(3, 6):
+        p2, o2, _ = advance(p2, o2, d2, i)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_launchers_run():
+    """CLI smoke: train + serve launchers exit 0 on reduced configs."""
+    env = dict(os.environ, PYTHONPATH="src")
+    root = os.path.join(os.path.dirname(__file__), "..")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "smollm-135m",
+         "--reduced", "--steps", "3", "--batch", "2", "--seq", "32",
+         "--log-every", "1"],
+        capture_output=True, text=True, timeout=600, env=env, cwd=root)
+    assert r.returncode == 0, r.stderr[-2000:]
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "smollm-135m",
+         "--reduced", "--requests", "2", "--prompt-len", "4", "--max-new",
+         "4", "--slots", "2", "--max-seq", "32"],
+        capture_output=True, text=True, timeout=600, env=env, cwd=root)
+    assert r.returncode == 0, r.stderr[-2000:]
