@@ -1,0 +1,123 @@
+"""sim-vs-pallas backend comparison: accuracy divergence + wall-clock.
+
+For every preset in ``qconfig.PRESETS`` this task runs ``int_linear``
+forward and backward through both backends on a transformer-ish shape grid,
+and reports
+
+* ``max_abs_diff`` / ``rel_diff`` — backend divergence (bounded by f32
+  accumulation rounding; the pallas path is the bit-exact reference),
+* ``prop1_bound`` — the Proposition 1 mapping step of the output, the
+  acceptance envelope the divergence must stay inside,
+* per-backend wall-clock (µs/call, best of ``repeats``; note the pallas
+  backend runs in interpret mode off-TPU — its CPU timings measure the
+  interpreter, not the kernel).
+
+Emits a single JSON document (stdout, or ``--out FILE``):
+
+    PYTHONPATH=src python -m benchmarks.backend_compare
+    PYTHONPATH=src python -m benchmarks.backend_compare --out cmp.json
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dfx, int_ops
+from repro.core.qconfig import PRESETS, QuantConfig
+
+#: (M, K, N) grid: a decode-ish row count, a train-ish tile, a ragged shape.
+SHAPES = ((32, 256, 128), (128, 128, 128), (96, 200, 72))
+
+
+def _time_us(fn, repeats: int) -> float:
+    fn()                                   # compile / warm the caches
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def compare_preset(preset: str, repeats: int = 3) -> dict:
+    key = jax.random.PRNGKey(0)
+    sim = dataclasses.replace(QuantConfig.preset(preset),
+                              stochastic_grad=False)
+    pal = dataclasses.replace(sim, backend="pallas")
+    rows = []
+    for (M, K, N) in SHAPES:
+        x = jax.random.normal(key, (M, K))
+        w = jax.random.normal(jax.random.fold_in(key, 1), (K, N)) * 0.1
+        r = jax.random.normal(jax.random.fold_in(key, 2), (M, N))
+
+        def loss(x, w, cfg):
+            return jnp.sum(int_ops.int_linear(x, w, None, None, cfg) * r)
+
+        grad = jax.grad(loss, argnums=(0, 1))
+        fwd = {c.backend: jax.jit(lambda x, w, c=c: int_ops.int_linear(
+            x, w, None, None, c)) for c in (sim, pal)}
+        bwd = {c.backend: jax.jit(lambda x, w, c=c: grad(x, w, c))
+               for c in (sim, pal)}
+
+        ys, yp = fwd["sim"](x, w), fwd["pallas"](x, w)
+        gs, gp = bwd["sim"](x, w), bwd["pallas"](x, w)
+        diff = float(jnp.abs(ys - yp).max())
+        gdiff = max(float(jnp.abs(a - b).max()) for a, b in zip(gs, gp))
+        scale = float(jnp.abs(ys).max()) + 1e-12
+        bits = min(sim.act_bits, sim.weight_bits) if sim.enabled else 24
+        rows.append({
+            "shape": [M, K, N],
+            "fwd_max_abs_diff": diff,
+            "fwd_rel_diff": diff / scale,
+            "bwd_max_abs_diff": gdiff,
+            "prop1_bound": float(dfx.error_bound(ys, bits)),
+            "sim_fwd_us": _time_us(lambda: fwd["sim"](x, w), repeats),
+            "pallas_fwd_us": _time_us(lambda: fwd["pallas"](x, w), repeats),
+            "sim_bwd_us": _time_us(lambda: bwd["sim"](x, w), repeats),
+            "pallas_bwd_us": _time_us(lambda: bwd["pallas"](x, w), repeats),
+        })
+    return {
+        "preset": preset,
+        "enabled": sim.enabled,
+        "bits": {"weight": sim.weight_bits, "act": sim.act_bits,
+                 "grad": sim.grad_bits},
+        "sim_accum_exact": (dfx.sim_accum_exact(
+            sim.act_bits, sim.weight_bits, SHAPES[0][1])
+            if sim.enabled else True),
+        "shapes": rows,
+    }
+
+
+def run(repeats: int = 3) -> dict:
+    return {
+        "task": "backend_compare",
+        "backend_device": jax.default_backend(),
+        "pallas_interpret": jax.default_backend() != "tpu",
+        "presets": [compare_preset(p, repeats) for p in PRESETS],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--out", default=None, help="write JSON here (else stdout)")
+    args = ap.parse_args()
+    doc = run(args.repeats)
+    text = json.dumps(doc, indent=2)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+        print(f"wrote {args.out}", file=sys.stderr)
+    else:
+        print(text)
+
+
+if __name__ == "__main__":
+    main()

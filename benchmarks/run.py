@@ -23,6 +23,17 @@ def main() -> None:
 
     from benchmarks import paper_tables as pt
 
+    def backend_compare_rows():
+        # JSON is the primary artifact (python -m benchmarks.backend_compare);
+        # here each preset/shape becomes a CSV row per backend.
+        from benchmarks import backend_compare as bc
+        for p in bc.run(repeats=2)["presets"]:
+            for row in p["shapes"]:
+                shape = "x".join(map(str, row["shape"]))
+                for b in ("sim", "pallas"):
+                    yield (f"backend/{p['preset']}/{shape}/{b}",
+                           row[f"{b}_fwd_us"], row["fwd_rel_diff"])
+
     benches = [
         ("table1_glue_sweep", lambda: pt.table1_glue_sweep(args.steps)),
         ("table2_squad_sweep", lambda: pt.table2_squad_sweep(args.steps)),
@@ -30,6 +41,7 @@ def main() -> None:
         ("fig4_act_bits", lambda: pt.fig4_act_bits(args.steps)),
         ("fig5_loss_traj", lambda: pt.fig5_loss_traj(max(args.steps, 150))),
         ("fig1_throughput", pt.fig1_throughput),
+        ("backend_compare", backend_compare_rows),
     ]
 
     print("name,us_per_call,derived")

@@ -24,6 +24,7 @@ the "single add" of the paper's Figure 2.
 """
 from __future__ import annotations
 
+import warnings
 from typing import NamedTuple, Optional, Sequence, Tuple
 
 import jax
@@ -139,42 +140,100 @@ def quantize_dequantize(
 #: (int32 limb kernels take over beyond this on TPU; see kernels/bfp_matmul).
 _EXACT_F32_BITS = 24
 
+#: f64 mantissa budget (52 explicit bits) — the escalation target when x64 is
+#: enabled and the product+accumulation budget overflows f32.
+_EXACT_F64_BITS = 52
+
+
+def accum_bits_needed(bits_a: int, bits_b: int, contraction: int) -> int:
+    """Worst-case bit budget of the integer contraction.
+
+    Each product needs ``bits_a + bits_b - 2`` magnitude bits; summing ``K``
+    of them adds ``ceil(log2(K))`` carry bits (DESIGN.md §2).
+    """
+    return bits_a + bits_b - 2 + max(1, int(np.ceil(np.log2(max(contraction, 2)))))
+
+
+def sim_accum_exact(bits_a: int, bits_b: int, contraction: int) -> bool:
+    """True when f32 accumulation of the sim-path mantissa matmul is bit-exact."""
+    return accum_bits_needed(bits_a, bits_b, contraction) <= _EXACT_F32_BITS
+
+
+#: (bits_a, bits_b) pairs already warned about — one warning per shape class
+#: per process, not one per traced matmul.
+_INEXACT_WARNED: set = set()
+
 
 def acc_dtype(bits_a: int, bits_b: int, contraction: int) -> jnp.dtype:
-    """Accumulator dtype that keeps the integer matmul exact.
+    """Accumulator dtype that keeps the sim-path integer matmul exact.
 
     ``bits_a + bits_b - 2 + ceil(log2(K))`` bits are needed.  Up to 24 we may
-    accumulate in f32 exactly; up to 52 in f64; otherwise int32 limb splitting
-    (Pallas kernel) is required.  On the CPU simulation path we use f32
-    whenever the *products* are exact (<=24 bits) and accept f32 accumulation
-    rounding beyond that — documented in DESIGN.md §2; the Pallas kernel is
-    the exact path.
+    accumulate in f32 exactly; up to 52 in f64 (only when jax x64 is on);
+    beyond that — or when x64 is off — the sim path is *inexact* and we warn:
+    the Pallas kernel path (``QuantConfig(backend="pallas")``) is the exact
+    alternative, accumulating in int32 over int8 limbs (kernels/bfp_matmul,
+    DESIGN.md §2).
     """
-    need = bits_a + bits_b - 2 + max(1, int(np.ceil(np.log2(max(contraction, 2)))))
-    return jnp.float32 if need <= _EXACT_F32_BITS else jnp.float32  # sim path
+    need = accum_bits_needed(bits_a, bits_b, contraction)
+    if need <= _EXACT_F32_BITS:
+        return jnp.float32
+    if jax.config.jax_enable_x64 and need <= _EXACT_F64_BITS:
+        return jnp.float64
+    if (bits_a, bits_b) not in _INEXACT_WARNED:
+        _INEXACT_WARNED.add((bits_a, bits_b))
+        warnings.warn(
+            f"sim-path integer matmul needs {need} accumulator bits "
+            f"(b_a={bits_a}, b_b={bits_b}, K={contraction}) but f32 holds "
+            f"{_EXACT_F32_BITS}: accumulation may round. Use "
+            f"QuantConfig(backend='pallas') for bit-exact int32 limb "
+            f"accumulation, or enable jax x64.",
+            RuntimeWarning,
+            stacklevel=2,
+        )
+    return jnp.float32
+
+
+def _storage_bits(m: jax.Array) -> int:
+    """Upper bound on the mantissa bit-width implied by the storage dtype."""
+    return {jnp.int8: 8, jnp.int16: 16, jnp.int32: 24}.get(
+        jnp.dtype(m.dtype).type, 24)
 
 
 def dfx_dot_general(
     a: DfxTensor,
     b: DfxTensor,
     dimension_numbers,
-    preferred_element_type=jnp.float32,
+    preferred_element_type=None,
+    bits: Optional[Tuple[int, int]] = None,
 ) -> jax.Array:
     """Integer ``dot_general`` of two DFX tensors, dequantized output.
 
     The mantissa contraction is integer-valued; the output scale is the sum
     of the two input scale exponents (paper Fig. 2: "a single add").  Scales
     must be per-tensor or constant along the contracted axes.
+
+    The accumulator dtype escalates via ``acc_dtype`` when the worst-case
+    bit budget overflows f32 (warns when no exact dtype is available — the
+    Pallas backend is the exact path in that regime).  Pass ``bits``
+    (mantissa bit-widths of a and b) when known; otherwise the storage
+    dtype provides a conservative upper bound.
     """
+    if preferred_element_type is None:
+        (lhs_c, _), _ = dimension_numbers
+        contraction = int(np.prod([a.m.shape[ax] for ax in lhs_c])) or 1
+        bits_a, bits_b = bits if bits is not None else (
+            _storage_bits(a.m), _storage_bits(b.m))
+        preferred_element_type = acc_dtype(bits_a, bits_b, contraction)
     prod = jax.lax.dot_general(
-        a.m.astype(jnp.float32), b.m.astype(jnp.float32),
+        a.m.astype(preferred_element_type), b.m.astype(preferred_element_type),
         dimension_numbers=dimension_numbers,
         preferred_element_type=preferred_element_type,
     )
     # Per-tensor scales broadcast trivially. Per-axis scales: caller must
     # pre-broadcast exponents to the output shape (int_ops does this).
-    out_exp = (a.exp + b.exp).astype(jnp.float32)
-    return prod * jnp.exp2(_broadcast_out_exp(out_exp, prod.shape))
+    out_exp = (a.exp + b.exp).astype(prod.dtype)
+    out = prod * jnp.exp2(_broadcast_out_exp(out_exp, prod.shape))
+    return out.astype(jnp.float32)
 
 
 def _broadcast_out_exp(out_exp: jax.Array, out_shape) -> jax.Array:
@@ -188,11 +247,12 @@ def _broadcast_out_exp(out_exp: jax.Array, out_shape) -> jax.Array:
     return out_exp
 
 
-def dfx_matmul(a: DfxTensor, b: DfxTensor) -> jax.Array:
+def dfx_matmul(a: DfxTensor, b: DfxTensor,
+               bits: Optional[Tuple[int, int]] = None) -> jax.Array:
     """``a @ b`` for stacked matrices: contracts last dim of a, first of b."""
     nd_a = a.m.ndim
     dn = (((nd_a - 1,), (0,)), ((), ()))
-    return dfx_dot_general(a, b, dn)
+    return dfx_dot_general(a, b, dn, bits=bits)
 
 
 # ---------------------------------------------------------------------------

@@ -21,6 +21,16 @@ reference implementation (the paper's baseline) — same code path for both.
 PRNG: layers take an optional ``key``. When ``cfg.stochastic_grad`` and a key
 is provided, backward gradient quantization uses stochastic rounding;
 otherwise round-to-nearest (used at serve time, where there is no backward).
+
+Backends: ``cfg.backend == "sim"`` runs the mantissa contractions through
+XLA ``dot_general`` with the accumulator dtype picked by ``dfx.acc_dtype``;
+``cfg.backend == "pallas"`` routes quantization (``quantize_pallas``, with
+the stochastic-rounding noise ``u`` drawn from the layer's PRNG key so
+Assumption 2 unbiasedness is preserved) and both matmul directions through
+the Pallas kernels: forward ``q(X)·q(W)`` via ``dfx_matmul_tiled``, backward
+``dX = q(G)·q(W)ᵀ`` / ``dW = q(X)ᵀ·q(G)`` via the transpose-aware
+``dfx_matmul_tiled_nt`` / ``dfx_matmul_tiled_tn`` entry points — bit-exact
+int32 limb accumulation at any supported bit-width (DESIGN.md §2).
 """
 from __future__ import annotations
 
@@ -33,6 +43,7 @@ import numpy as np
 
 from repro.core import dfx
 from repro.core.qconfig import QuantConfig
+from repro.kernels import ops as kops
 
 Array = jax.Array
 
@@ -41,9 +52,41 @@ def _float0(x):
     return np.zeros(np.shape(x), dtype=jax.dtypes.float0)
 
 
+def _pallas_quantize(x: Array, bits: int, *, stochastic: bool = False,
+                     key=None) -> dfx.DfxTensor:
+    """Linear fixed-point mapping via the Pallas quantize kernel.
+
+    The max-abs exponent reduction stays in XLA (pass 1 of the two-pass
+    structure, DESIGN.md §2); the shift-round-clip pass runs in the kernel.
+    Stochastic rounding noise ``u`` is drawn from ``key`` here and fed to
+    the kernel's noise input so gradient rounding stays unbiased.
+    """
+    x = x.astype(jnp.float32)
+    e = dfx._scale_exponent(x, None)
+    exp = (e - (bits - 1)).astype(jnp.int32)
+    x2 = x.reshape(-1, x.shape[-1]) if x.ndim != 2 else x
+    u = None
+    if stochastic:
+        if key is None:
+            raise ValueError("stochastic rounding requires a PRNG key")
+        u = jax.random.uniform(key, x2.shape, dtype=jnp.float32)
+    m = kops.quantize_pallas(x2, exp, bits, u=u)
+    return dfx.DfxTensor(m=m.reshape(x.shape), exp=exp)
+
+
+def _quantize(x: Array, bits: int, cfg: QuantConfig, *,
+              stochastic: bool = False, key=None,
+              reduce_axes=None) -> dfx.DfxTensor:
+    """Backend-routed per-tensor quantization (per-axis stays on sim)."""
+    if cfg.backend == "pallas" and reduce_axes is None:
+        return _pallas_quantize(x, bits, stochastic=stochastic, key=key)
+    return dfx.quantize(x, bits, stochastic=stochastic, key=key,
+                        reduce_axes=reduce_axes)
+
+
 def _quant_grad(g: Array, cfg: QuantConfig, key) -> dfx.DfxTensor:
     stoch = cfg.stochastic_grad and key is not None
-    return dfx.quantize(g, cfg.grad_bits, stochastic=stoch, key=key)
+    return _quantize(g, cfg.grad_bits, cfg, stochastic=stoch, key=key)
 
 
 #: When True, FSDP-sharded weights are quantized *shard-locally* and the
@@ -91,9 +134,16 @@ def _int_linear_fwd(x, w, b, key, cfg: QuantConfig):
     kf = None
     if cfg.stochastic_fwd and key is not None:
         key, kf = jax.random.split(key)
-    qx = dfx.quantize(x, cfg.act_bits, stochastic=kf is not None, key=kf)
-    qw = _maybe_gather_quantized(dfx.quantize(w, cfg.weight_bits))
-    y = dfx.dfx_matmul(qx, qw)
+    qx = _quantize(x, cfg.act_bits, cfg, stochastic=kf is not None, key=kf)
+    qw = _maybe_gather_quantized(_quantize(w, cfg.weight_bits, cfg))
+    if cfg.backend == "pallas":
+        # kernel path: batch dims flattened to the 2-D (M, K) @ (K, N) tiling
+        y2 = kops.dfx_matmul_tiled(
+            qx.m.reshape(-1, x.shape[-1]), qx.exp, cfg.act_bits,
+            qw.m, qw.exp, cfg.weight_bits)
+        y = y2.reshape(x.shape[:-1] + (w.shape[-1],))
+    else:
+        y = dfx.dfx_matmul(qx, qw, bits=(cfg.act_bits, cfg.weight_bits))
     if b is not None:
         y = y + b  # O(N) bias add, not compute-intensive (kept FP32)
     return y, (qx, qw, b is not None, key)
@@ -109,12 +159,26 @@ def _int_linear_bwd(cfg: QuantConfig, res, g):
 
     qx, qw, has_b, key = res
     qg = _quant_grad(g, cfg, key)
-    # dX = q(G) · q(W)ᵀ  — integer matmul (contract N)
-    nd = qg.m.ndim
-    dx = dfx.dfx_dot_general(qg, qw, (((nd - 1,), (1,)), ((), ())))
-    # dW = q(X)ᵀ · q(G) — integer matmul (contract all batch dims)
-    batch_axes = tuple(range(nd - 1))
-    dw = dfx.dfx_dot_general(qx, qg, ((batch_axes, batch_axes), ((), ())))
+    if cfg.backend == "pallas":
+        # both backward products through the transpose-aware kernel entry
+        # points; operands stay in forward layout (kernel-side transpose)
+        N = g.shape[-1]
+        K = qx.m.shape[-1]
+        g2 = qg.m.reshape(-1, N)
+        dx2 = kops.dfx_matmul_tiled_nt(g2, qg.exp, cfg.grad_bits,
+                                       qw.m, qw.exp, cfg.weight_bits)
+        dx = dx2.reshape(g.shape[:-1] + (K,))
+        dw = kops.dfx_matmul_tiled_tn(qx.m.reshape(-1, K), qx.exp,
+                                      cfg.act_bits, g2, qg.exp, cfg.grad_bits)
+    else:
+        # dX = q(G) · q(W)ᵀ  — integer matmul (contract N)
+        nd = qg.m.ndim
+        dx = dfx.dfx_dot_general(qg, qw, (((nd - 1,), (1,)), ((), ())),
+                                 bits=(cfg.grad_bits, cfg.weight_bits))
+        # dW = q(X)ᵀ · q(G) — integer matmul (contract all batch dims)
+        batch_axes = tuple(range(nd - 1))
+        dw = dfx.dfx_dot_general(qx, qg, ((batch_axes, batch_axes), ((), ())),
+                                 bits=(cfg.act_bits, cfg.grad_bits))
     db = g.reshape(-1, g.shape[-1]).sum(0) if has_b else None
     return dx, dw, db, _float0(key) if key is not None else None
 
@@ -142,10 +206,41 @@ _BATCH_DN = (((2,), (1,)), ((0,), (0,)))          # contract K, batch E
 def _int_blinear_fwd(x, w, key, cfg: QuantConfig):
     if not cfg.enabled:
         return jnp.einsum("eck,ekn->ecn", x, w), (x, w, key)
+    if cfg.backend == "pallas":
+        qx = _stacked_pallas_quantize(x, cfg.act_bits)
+        qw = _stacked_pallas_quantize(w, cfg.weight_bits)
+        y = jnp.stack([
+            kops.dfx_matmul_tiled(qx.m[e], qx.exp[e], cfg.act_bits,
+                                  qw.m[e], qw.exp[e], cfg.weight_bits)
+            for e in range(x.shape[0])])
+        return y, (qx, qw, key)
     qx = dfx.quantize(x, cfg.act_bits, reduce_axes=(1, 2))    # scale per expert
     qw = dfx.quantize(w, cfg.weight_bits, reduce_axes=(1, 2))
     y = _batched_dfx_dot(qx, qw, _BATCH_DN)
     return y, (qx, qw, key)
+
+
+def _stacked_pallas_quantize(x: Array, bits: int, *, stochastic: bool = False,
+                             key=None) -> dfx.DfxTensor:
+    """Per-expert (leading-axis) pallas quantization with per-expert scales.
+
+    Mirrors ``dfx.quantize(..., reduce_axes=(1, 2))``: each expert slice gets
+    its own scale exponent; mantissas are stacked back to the input shape and
+    exponents to (E, 1, 1) so the sim/pallas residual layouts match.
+
+    The per-expert Python loop (here and in the batched fwd/bwd) unrolls E
+    kernel dispatches into the jit — acceptable for MoE expert counts (8-64)
+    given the kernel grid amortizes launch cost; a vmapped kernel with a
+    vector exp operand would fuse them and is the noted follow-up if expert
+    counts grow.
+    """
+    E = x.shape[0]
+    keys = jax.random.split(key, E) if (stochastic and key is not None) else [None] * E
+    qs = [_pallas_quantize(x[e], bits, stochastic=stochastic, key=keys[e])
+          for e in range(E)]
+    return dfx.DfxTensor(
+        m=jnp.stack([q.m for q in qs]),
+        exp=jnp.stack([q.exp for q in qs]).reshape(E, 1, 1))
 
 
 def _batched_dfx_dot(a: dfx.DfxTensor, b: dfx.DfxTensor, dn) -> Array:
@@ -164,6 +259,20 @@ def _int_blinear_bwd(cfg: QuantConfig, res, g):
         return dx, dw, _float0(key) if key is not None else None
     qx, qw, key = res
     stoch = cfg.stochastic_grad and key is not None
+    if cfg.backend == "pallas":
+        qg = _stacked_pallas_quantize(g, cfg.grad_bits, stochastic=stoch,
+                                      key=key)
+        # dX[e] = G[e]·W[e]ᵀ (NT), dW[e] = X[e]ᵀ·G[e] (TN) — kernel per expert
+        E = g.shape[0]
+        dx = jnp.stack([
+            kops.dfx_matmul_tiled_nt(qg.m[e], qg.exp[e], cfg.grad_bits,
+                                     qw.m[e], qw.exp[e], cfg.weight_bits)
+            for e in range(E)])
+        dw = jnp.stack([
+            kops.dfx_matmul_tiled_tn(qx.m[e], qx.exp[e], cfg.act_bits,
+                                     qg.m[e], qg.exp[e], cfg.grad_bits)
+            for e in range(E)])
+        return dx, dw, _float0(key) if key is not None else None
     qg = dfx.quantize(g, cfg.grad_bits, stochastic=stoch, key=key,
                       reduce_axes=(1, 2))
     # dX[e] = G[e] · W[e]ᵀ ; dW[e] = X[e]ᵀ · G[e] — integer batched matmuls
@@ -226,6 +335,19 @@ def int_layernorm(x: Array, gamma: Array, beta: Array, key,
 
 
 def _int_ln_fwd(x, gamma, beta, key, cfg: QuantConfig, eps):
+    if cfg.enabled and cfg.int_layernorm and cfg.backend == "pallas":
+        xq = _pallas_quantize(x, cfg.act_bits)
+        gv = dfx.dequantize(_pallas_quantize(gamma, cfg.weight_bits))
+        D = x.shape[-1]
+        y = kops.layernorm_pallas(xq.m.reshape(-1, D), xq.exp, gv, beta,
+                                  eps=eps).reshape(x.shape)
+        # the backward reductions need the statistics; recompute them from
+        # the saved mantissas (O(N) value-domain reduce, not a hot path)
+        xv = dfx.dequantize(xq)
+        mu = jnp.mean(xv, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xv - mu), axis=-1, keepdims=True)
+        rstd = jax.lax.rsqrt(var + eps)
+        return y, (xq, gv, rstd, mu, key)
     if cfg.enabled and cfg.int_layernorm:
         xq = dfx.quantize(x, cfg.act_bits)
         xv = dfx.dequantize(xq)
@@ -272,9 +394,11 @@ def int_rmsnorm(x: Array, gamma: Array, key, cfg: QuantConfig,
 
 def _int_rms_fwd(x, gamma, key, cfg: QuantConfig, eps):
     if cfg.enabled and cfg.int_layernorm:
-        xq = dfx.quantize(x, cfg.act_bits)
+        # no fused rms kernel yet: quantization routes by backend, the
+        # normalization reductions stay in XLA (DESIGN.md §2)
+        xq = _quantize(x, cfg.act_bits, cfg)
         xv = dfx.dequantize(xq)
-        gv = dfx.quantize_dequantize(gamma, cfg.weight_bits)
+        gv = dfx.dequantize(_quantize(gamma, cfg.weight_bits, cfg))
         res_x = xq
     else:
         xv, gv = x, gamma

@@ -40,6 +40,13 @@ class QuantConfig:
     int_layernorm: bool = True
     #: quantize embedding tables / lookups (paper: yes).
     int_embedding: bool = True
+    #: execution backend for the integer layers: "sim" runs the mantissa
+    #: contractions through XLA with float accumulators (exactness governed
+    #: by ``dfx.acc_dtype``); "pallas" routes quantization and both matmul
+    #: directions (forward q(X)·q(W), backward dX/dW) through the Pallas
+    #: kernels in ``repro.kernels`` — bit-exact int32 limb accumulation,
+    #: interpret mode off-TPU.
+    backend: str = "sim"
 
     def __post_init__(self):
         for name in ("weight_bits", "act_bits", "grad_bits"):
@@ -48,6 +55,12 @@ class QuantConfig:
                 raise ValueError(f"{name}={b} outside supported range [2, 24]")
         if self.block_size is not None and self.block_size < 8:
             raise ValueError("block_size must be >= 8 (VMEM lane alignment)")
+        if self.backend not in ("sim", "pallas"):
+            raise ValueError(
+                f"backend={self.backend!r} not in ('sim', 'pallas')")
+        if self.backend == "pallas" and self.block_size is not None:
+            raise ValueError("backend='pallas' supports per-tensor scales "
+                             "only (block_size must be None)")
 
     # -- presets matching the paper's experimental grid -------------------
     @staticmethod

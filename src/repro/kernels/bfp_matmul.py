@@ -11,6 +11,16 @@ VMEM scratch across the K grid dimension, and a **fused dequant epilogue**
 (the single scale multiply of the paper's Fig. 2) on the final K step — the
 FP32 result is written once; mantissas never round-trip HBM in FP32.
 
+Three contraction layouts cover forward and backward (DESIGN.md §2):
+
+* ``bfp_matmul``     — NN: ``X (M,K) · W (K,N)``       (forward)
+* ``bfp_matmul_nt``  — NT: ``G (M,N) · Wᵀ, W (K,N)``   (backward dX)
+* ``bfp_matmul_tn``  — TN: ``Xᵀ · G,  X (M,K), G (M,N)`` (backward dW)
+
+The NT/TN kernels contract the shared axis *in place* (dot_general dimension
+numbers inside the kernel) — the transposed operand is never materialized in
+HBM; only its block index map changes.
+
 MXU alignment: block shapes are multiples of 128 in the N/K lanes and 8 in
 sublanes; defaults (128, 128, 128) match the MXU natively.
 """
@@ -23,9 +33,18 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams across releases; take
+# whichever this version provides.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
 
-def _bfp_matmul_kernel(x_ref, w_ref, exp_ref, o_ref, acc_ref, *, n_k: int):
-    """One (i, j, k) grid step: acc += x_blk @ w_blk (int32)."""
+
+def _bfp_matmul_kernel(x_ref, w_ref, exp_ref, o_ref, acc_ref, *,
+                       n_k: int, dims):
+    """One (i, j, k) grid step: acc += contract(x_blk, w_blk) (int32).
+
+    ``dims`` is the in-kernel dot_general contraction: (1,0) for NN,
+    (1,1) for NT, (0,0) for TN.
+    """
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -33,9 +52,10 @@ def _bfp_matmul_kernel(x_ref, w_ref, exp_ref, o_ref, acc_ref, *, n_k: int):
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     # int8 (or int16-limb) mantissas -> int32 MXU accumulate.
+    lc, rc = dims
     acc_ref[...] += jax.lax.dot_general(
         x_ref[...].astype(jnp.int32), w_ref[...].astype(jnp.int32),
-        (((1,), (0,)), ((), ())),
+        (((lc,), (rc,)), ((), ())),
         preferred_element_type=jnp.int32,
     )
 
@@ -44,6 +64,26 @@ def _bfp_matmul_kernel(x_ref, w_ref, exp_ref, o_ref, acc_ref, *, n_k: int):
         # Fused non-linear inverse mapping: one scale multiply (Fig. 2).
         scale = jnp.exp2(exp_ref[0].astype(jnp.float32))
         o_ref[...] = acc_ref[...].astype(jnp.float32) * scale
+
+
+def _bfp_call(xm, wm, out_exp, *, out_shape, grid, x_spec, w_spec,
+              out_spec, dims, interpret):
+    n_k = grid[2]
+    return pl.pallas_call(
+        functools.partial(_bfp_matmul_kernel, n_k=n_k, dims=dims),
+        grid=grid,
+        in_specs=[
+            x_spec,
+            w_spec,
+            pl.BlockSpec(memory_space=pl.ANY),   # scalar exp, loaded whole
+        ],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct(out_shape, jnp.float32),
+        scratch_shapes=[pltpu.VMEM(out_spec.block_shape, jnp.int32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(xm, wm, jnp.reshape(out_exp, (1,)).astype(jnp.int32))
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
@@ -57,25 +97,86 @@ def bfp_matmul(
     bk: int = 128,
     interpret: bool = False,
 ) -> jax.Array:
+    """NN: ``(xm @ wm) * 2**out_exp`` -> (M, N) f32."""
     M, K = xm.shape
     K2, N = wm.shape
     assert K == K2, (xm.shape, wm.shape)
     assert M % bm == 0 and N % bn == 0 and K % bk == 0, (
         f"shapes ({M},{K})x({K},{N}) must tile by ({bm},{bn},{bk})")
-    n_k = K // bk
-    grid = (M // bm, N // bn, n_k)
-    return pl.pallas_call(
-        functools.partial(_bfp_matmul_kernel, n_k=n_k),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
-            pl.BlockSpec(memory_space=pl.ANY),   # scalar exp, loaded whole
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    return _bfp_call(
+        xm, wm, out_exp,
+        out_shape=(M, N),
+        grid=(M // bm, N // bn, K // bk),
+        x_spec=pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+        w_spec=pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        out_spec=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        dims=(1, 0),
         interpret=interpret,
-    )(xm, wm, jnp.reshape(out_exp, (1,)).astype(jnp.int32))
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def bfp_matmul_nt(
+    gm: jax.Array,          # (M, N) int8/int16 mantissas (upstream grad)
+    wm: jax.Array,          # (K, N) int8/int16 mantissas (weight, row-major)
+    out_exp: jax.Array,     # scalar int32: g_exp + w_exp
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """NT: ``(gm @ wmᵀ) * 2**out_exp`` -> (M, K) f32 — the dX product.
+
+    The contracted axis is N (last of both operands); wm keeps its forward
+    (K, N) layout, the kernel swaps its block index map instead of
+    materializing a transpose.
+    """
+    M, N = gm.shape
+    K, N2 = wm.shape
+    assert N == N2, (gm.shape, wm.shape)
+    assert M % bm == 0 and K % bn == 0 and N % bk == 0, (
+        f"shapes ({M},{N})x({K},{N}) must tile by ({bm},{bn},{bk})")
+    return _bfp_call(
+        gm, wm, out_exp,
+        out_shape=(M, K),
+        grid=(M // bm, K // bn, N // bk),
+        x_spec=pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+        w_spec=pl.BlockSpec((bn, bk), lambda i, j, k: (j, k)),
+        out_spec=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        dims=(1, 1),
+        interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def bfp_matmul_tn(
+    xm: jax.Array,          # (M, K) int8/int16 mantissas (saved activation)
+    gm: jax.Array,          # (M, N) int8/int16 mantissas (upstream grad)
+    out_exp: jax.Array,     # scalar int32: x_exp + g_exp
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """TN: ``(xmᵀ @ gm) * 2**out_exp`` -> (K, N) f32 — the dW product.
+
+    The contracted axis is M (first of both operands); xm keeps its forward
+    (M, K) layout, the kernel swaps its block index map.
+    """
+    M, K = xm.shape
+    M2, N = gm.shape
+    assert M == M2, (xm.shape, gm.shape)
+    assert K % bm == 0 and N % bn == 0 and M % bk == 0, (
+        f"shapes ({M},{K})x({M},{N}) must tile by ({bm},{bn},{bk})")
+    return _bfp_call(
+        xm, gm, out_exp,
+        out_shape=(K, N),
+        grid=(K // bm, N // bn, M // bk),
+        x_spec=pl.BlockSpec((bk, bm), lambda i, j, k: (k, i)),
+        w_spec=pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        out_spec=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        dims=(0, 0),
+        interpret=interpret,
+    )

@@ -19,6 +19,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams across releases; take
+# whichever this version provides.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 
 def _quant_kernel(x_ref, exp_ref, o_ref, *, bits: int):
     scale = jnp.exp2(-exp_ref[0].astype(jnp.float32))
@@ -56,7 +60,7 @@ def dfx_quantize(
         grid=grid,
         out_specs=pl.BlockSpec((br, N), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((M, N), _out_dtype(bits)),
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel",)),
+        compiler_params=_CompilerParams(dimension_semantics=("parallel",)),
         interpret=interpret,
     )
     if u is None:

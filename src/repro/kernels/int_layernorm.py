@@ -18,6 +18,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams across releases; take
+# whichever this version provides.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 
 def _ln_kernel(xm_ref, exp_ref, g_ref, b_ref, o_ref, *, eps: float):
     xm = xm_ref[...].astype(jnp.float32)            # integer-valued
@@ -59,7 +63,7 @@ def int_layernorm_fwd(
         ],
         out_specs=pl.BlockSpec((br, D), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((R, D), jnp.float32),
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel",)),
+        compiler_params=_CompilerParams(dimension_semantics=("parallel",)),
         interpret=interpret,
     )(xm, jnp.reshape(x_exp, (1,)).astype(jnp.int32),
       gamma.reshape(1, D), beta.reshape(1, D))

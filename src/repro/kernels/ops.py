@@ -11,6 +11,16 @@ Adds the pieces that keep the kernels simple:
   is an f32 epilogue (rounding ~1 ulp of the largest partial — DESIGN.md §2).
 * shape padding to MXU tile multiples, and un-padding of the result;
 * automatic ``interpret=True`` when not running on real TPU hardware.
+
+Three matmul layouts cover the integer layers end-to-end (DESIGN.md §2):
+
+* ``dfx_matmul_tiled``    — forward  ``q(X)·q(W)``
+* ``dfx_matmul_tiled_nt`` — backward ``dX = q(G)·q(W)ᵀ``
+* ``dfx_matmul_tiled_tn`` — backward ``dW = q(X)ᵀ·q(G)``
+
+The NT/TN variants keep both operands in their forward (row-major) layout —
+the transpose happens inside the kernel via the block index maps, never as a
+materialized HBM copy.
 """
 from __future__ import annotations
 
@@ -19,7 +29,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.bfp_matmul import bfp_matmul
+from repro.kernels.bfp_matmul import bfp_matmul, bfp_matmul_nt, bfp_matmul_tn
 from repro.kernels.dfx_quant import dfx_quantize
 from repro.kernels.int_layernorm import int_layernorm_fwd
 
@@ -27,6 +37,12 @@ from repro.kernels.int_layernorm import int_layernorm_fwd
 #: hi*lo products stay within the MXU's int8 operand contract for b <= 15;
 #: for b == 16 the hi limb spans int9, carried via a second split (4 limbs).
 _LIMB_BITS = 7
+
+#: MXU lane width: the last block dimension must be a multiple of this.
+_LANE = 128
+
+#: VPU sublane width: the second-to-last block dimension's multiple.
+_SUBLANE = 8
 
 
 def on_tpu() -> bool:
@@ -56,6 +72,43 @@ def _split_limbs(m: jax.Array, bits: int):
     return limbs
 
 
+def _round_up_multiple(x: int, mult: int) -> int:
+    """Round ``x`` up to the next multiple of ``mult`` (at least ``mult``)."""
+    r = ((x + mult - 1) // mult) * mult
+    return max(r, mult)
+
+
+def _pick_blocks(M: int, N: int, K: int):
+    """Block shapes for an (M, K) @ (K, N) tiling.
+
+    The lane dimensions (N and K here) must be full 128-lane tiles — inputs
+    smaller than 128 are padded up to one tile.  Only the sublane dimension
+    (M) may shrink, in multiples of 8, to avoid padding small row counts all
+    the way to 128.
+    """
+    bm = _LANE if M >= _LANE else _round_up_multiple(M, _SUBLANE)
+    return bm, _LANE, _LANE
+
+
+def _pad2(a: jax.Array, r: int, c: int) -> jax.Array:
+    M, N = a.shape
+    pm = (-M) % r
+    pn = (-N) % c
+    if pm or pn:
+        a = jnp.pad(a, ((0, pm), (0, pn)))
+    return a
+
+
+def _limb_loop(kernel_call, x_limbs, w_limbs):
+    """Accumulate kernel partials over all limb pairs (f32 combine)."""
+    out = None
+    for xl, xs in x_limbs:
+        for wl, ws in w_limbs:
+            part = kernel_call(xl, wl) * (2.0 ** (xs + ws))
+            out = part if out is None else out + part
+    return out
+
+
 def dfx_matmul_tiled(
     xm: jax.Array, x_exp: jax.Array, x_bits: int,
     wm: jax.Array, w_exp: jax.Array, w_bits: int,
@@ -72,37 +125,63 @@ def dfx_matmul_tiled(
     bm, bn, bk = _pick_blocks(M, N, K)
     xm, wm = _pad2(xm, bm, bk), _pad2(wm, bk, bn)
     out_exp = (x_exp + w_exp).astype(jnp.int32)
-    x_limbs = _split_limbs(xm, x_bits)
-    w_limbs = _split_limbs(wm, w_bits)
-    out = None
-    for xl, xs in x_limbs:
-        for wl, ws in w_limbs:
-            part = bfp_matmul(xl, wl, out_exp, bm=bm, bn=bn, bk=bk,
-                              interpret=interpret)
-            part = part * (2.0 ** (xs + ws))
-            out = part if out is None else out + part
+    out = _limb_loop(
+        lambda xl, wl: bfp_matmul(xl, wl, out_exp, bm=bm, bn=bn, bk=bk,
+                                  interpret=interpret),
+        _split_limbs(xm, x_bits), _split_limbs(wm, w_bits))
     return out[:M, :N]
 
 
-def _pick_blocks(M: int, N: int, K: int):
-    bm = 128 if M >= 128 else _round_up_pow2(M, 8)
-    bn = 128 if N >= 128 else _round_up_pow2(N, 128)
-    bk = 128 if K >= 128 else _round_up_pow2(K, 128)
-    return bm, bn, bk
+def dfx_matmul_tiled_nt(
+    gm: jax.Array, g_exp: jax.Array, g_bits: int,
+    wm: jax.Array, w_exp: jax.Array, w_bits: int,
+    *, interpret: bool | None = None,
+) -> jax.Array:
+    """Backward dX product: ``q(G)·q(W)ᵀ`` with W in forward (K, N) layout.
+
+    gm: (M, N) grad mantissas, wm: (K, N) weight mantissas. Returns FP32
+    (M, K). The kernel contracts the shared N axis in place — no transpose
+    is materialized.
+    """
+    if interpret is None:
+        interpret = not on_tpu()
+    M, N = gm.shape
+    K, _ = wm.shape
+    # out is (M, K): M is the sublane-flexible dim, K and N ride the lanes.
+    bm, bn, bk = _pick_blocks(M, K, N)
+    gm, wm = _pad2(gm, bm, bk), _pad2(wm, bn, bk)
+    out_exp = (g_exp + w_exp).astype(jnp.int32)
+    out = _limb_loop(
+        lambda gl, wl: bfp_matmul_nt(gl, wl, out_exp, bm=bm, bn=bn, bk=bk,
+                                     interpret=interpret),
+        _split_limbs(gm, g_bits), _split_limbs(wm, w_bits))
+    return out[:M, :K]
 
 
-def _round_up_pow2(x: int, mult: int) -> int:
-    r = ((x + mult - 1) // mult) * mult
-    return max(r, mult)
+def dfx_matmul_tiled_tn(
+    xm: jax.Array, x_exp: jax.Array, x_bits: int,
+    gm: jax.Array, g_exp: jax.Array, g_bits: int,
+    *, interpret: bool | None = None,
+) -> jax.Array:
+    """Backward dW product: ``q(X)ᵀ·q(G)`` with X in forward (M, K) layout.
 
-
-def _pad2(a: jax.Array, r: int, c: int) -> jax.Array:
-    M, N = a.shape
-    pm = (-M) % r
-    pn = (-N) % c
-    if pm or pn:
-        a = jnp.pad(a, ((0, pm), (0, pn)))
-    return a
+    xm: (M, K) activation mantissas, gm: (M, N) grad mantissas. Returns FP32
+    (K, N). The kernel contracts the shared M axis in place.
+    """
+    if interpret is None:
+        interpret = not on_tpu()
+    M, K = xm.shape
+    _, N = gm.shape
+    # out is (K, N): K and N ride the lanes of the output tile; the
+    # contracted M axis is the sublane-flexible one here.
+    bk, bm, bn = _pick_blocks(M, K, N)
+    xm, gm = _pad2(xm, bk, bm), _pad2(gm, bk, bn)
+    out_exp = (x_exp + g_exp).astype(jnp.int32)
+    out = _limb_loop(
+        lambda xl, gl: bfp_matmul_tn(xl, gl, out_exp, bm=bm, bn=bn, bk=bk,
+                                     interpret=interpret),
+        _split_limbs(xm, x_bits), _split_limbs(gm, g_bits))
+    return out[:K, :N]
 
 
 def quantize_pallas(x: jax.Array, exp: jax.Array, bits: int,
@@ -112,7 +191,7 @@ def quantize_pallas(x: jax.Array, exp: jax.Array, bits: int,
     if interpret is None:
         interpret = not on_tpu()
     M, N = x.shape
-    br = min(256, _round_up_pow2(M, 8))
+    br = min(256, _round_up_multiple(M, _SUBLANE))
     pm = (-M) % br
     if pm:
         x = jnp.pad(x, ((0, pm), (0, 0)))
@@ -128,7 +207,7 @@ def layernorm_pallas(xm: jax.Array, x_exp: jax.Array, gamma: jax.Array,
     if interpret is None:
         interpret = not on_tpu()
     R, D = xm.shape
-    br = min(8, _round_up_pow2(R, 8))
+    br = min(8, _round_up_multiple(R, _SUBLANE))
     pr = (-R) % br
     if pr:
         xm = jnp.pad(xm, ((0, pr), (0, 0)))

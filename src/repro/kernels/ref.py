@@ -21,6 +21,28 @@ def bfp_matmul_ref(xm: jax.Array, wm: jax.Array, out_exp: jax.Array) -> jax.Arra
     return acc.astype(jnp.float32) * jnp.exp2(out_exp.astype(jnp.float32))
 
 
+def bfp_matmul_nt_ref(gm: jax.Array, wm: jax.Array, out_exp: jax.Array) -> jax.Array:
+    """NT oracle: ``(gm @ wmᵀ) * 2**out_exp`` — the dX backward product.
+
+    gm: (M, N); wm: (K, N) in forward layout. Exact int32 accumulation.
+    """
+    acc = jax.lax.dot_general(
+        gm.astype(jnp.int32), wm.astype(jnp.int32),
+        (((1,), (1,)), ((), ())), preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * jnp.exp2(out_exp.astype(jnp.float32))
+
+
+def bfp_matmul_tn_ref(xm: jax.Array, gm: jax.Array, out_exp: jax.Array) -> jax.Array:
+    """TN oracle: ``(xmᵀ @ gm) * 2**out_exp`` — the dW backward product.
+
+    xm: (M, K) in forward layout; gm: (M, N). Exact int32 accumulation.
+    """
+    acc = jax.lax.dot_general(
+        xm.astype(jnp.int32), gm.astype(jnp.int32),
+        (((0,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * jnp.exp2(out_exp.astype(jnp.float32))
+
+
 def dfx_quantize_ref(x: jax.Array, exp: jax.Array, bits: int,
                      u: jax.Array | None = None) -> jax.Array:
     """Shift-and-round pass of the linear fixed-point mapping.

@@ -77,7 +77,9 @@ def flash_attention(
     n_chunks = Sk // chunk
     scale = 1.0 / jnp.sqrt(jnp.float32(hd))
     q = q.astype(jnp.float32) * scale
-    qpos = q_offset + jnp.arange(Sq)
+    # q_offset may be a scalar (shared decode index) or a (B,)-vector of
+    # per-sequence indices (continuous batching slots); qpos is (1|B, Sq).
+    qpos = jnp.atleast_1d(jnp.asarray(q_offset))[:, None] + jnp.arange(Sq)
 
     def body(carry, c):
         m, l, acc = carry
@@ -85,14 +87,15 @@ def flash_attention(
         vc = jax.lax.dynamic_slice_in_dim(v, c * chunk, chunk, axis=1)
         s = jnp.einsum("bqhgd,bkhd->bhgqk", q, kc.astype(jnp.float32))
         kpos = c * chunk + jnp.arange(chunk)
-        ok = jnp.ones((Sq, chunk), bool)
+        ok = jnp.ones(qpos.shape + (chunk,), bool)       # (1|B, Sq, chunk)
         if causal:
-            ok &= kpos[None, :] <= qpos[:, None]
+            ok &= kpos[None, None, :] <= qpos[..., None]
         if window is not None:
-            ok &= kpos[None, :] > (qpos[:, None] - window)
-        s = jnp.where(ok[None, None, None], s, _BIG_NEG)
+            ok &= kpos[None, None, :] > (qpos[..., None] - window)
+        okb = ok[:, None, None]                          # vs (B, H, G, Sq, chunk)
+        s = jnp.where(okb, s, _BIG_NEG)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
-        p = jnp.where(ok[None, None, None], jnp.exp(s - m_new[..., None]), 0.0)
+        p = jnp.where(okb, jnp.exp(s - m_new[..., None]), 0.0)
         alpha = jnp.exp(m - m_new)
         l = l * alpha + jnp.sum(p, axis=-1)
         acc = acc * alpha[..., None] + jnp.einsum(
@@ -110,17 +113,23 @@ def flash_attention(
 def _decode_attention(q: Array, k: Array, v: Array, index,
                       window: Optional[int]) -> Array:
     """One-query attention over a cache. q: (B, 1, Hkv, G, hd);
-    k/v: (B, Smax, Hkv, hd); positions > index are masked out."""
+    k/v: (B, Smax, Hkv, hd); positions > index are masked out.
+
+    ``index`` is a scalar (all rows at the same position) or a (B,)-vector
+    of per-row positions (continuous-batching slots admitted at different
+    times) — per-row masking keeps each slot's attention to its own tokens.
+    """
     B, _, Hkv, G, hd = q.shape
     Smax = k.shape[1]
     scale = 1.0 / jnp.sqrt(jnp.float32(hd))
     s = jnp.einsum("bqhgd,bkhd->bhgqk", q.astype(jnp.float32) * scale,
                    k.astype(jnp.float32))
-    kpos = jnp.arange(Smax)
-    ok = kpos <= index
+    idx = jnp.atleast_1d(jnp.asarray(index))[:, None]     # (1|B, 1)
+    kpos = jnp.arange(Smax)[None, :]                      # (1, Smax)
+    ok = kpos <= idx                                      # (1|B, Smax)
     if window is not None:
-        ok &= kpos > (index - window)
-    s = jnp.where(ok[None, None, None, None], s, _BIG_NEG)
+        ok &= kpos > (idx - window)
+    s = jnp.where(ok[:, None, None, None, :], s, _BIG_NEG)
     p = jax.nn.softmax(s, axis=-1)                  # FP32 softmax (kept op)
     o = jnp.einsum("bhgqk,bkhd->bhgqd", p, v.astype(jnp.float32))
     return o.transpose(0, 3, 1, 2, 4)
@@ -171,9 +180,12 @@ def attention_apply(
     else:
         k, v = kv_override
 
+    # cache_index: scalar (all rows in step) or (B,)-vector of per-row
+    # positions (continuous-batching slots admitted at different times).
+    idx = jnp.asarray(cache_index)
     if positions is None:
-        positions = cache_index + jnp.arange(S)
-        positions = jnp.broadcast_to(positions[None], (B, S))
+        positions = jnp.atleast_1d(idx)[:, None] + jnp.arange(S)  # (1|B, S)
+        positions = jnp.broadcast_to(positions, (B, S))
     if use_rope:
         q = rope(q.reshape(B, S, H, hd), positions, cfg.rope_theta).reshape(
             B, S, KV, G, hd)
@@ -183,8 +195,17 @@ def attention_apply(
     new_cache = None
     if kv_cache is not None:
         ck, cv = kv_cache
-        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), cache_index, axis=1)
-        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), cache_index, axis=1)
+        if idx.ndim == 0:
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                ck, k.astype(ck.dtype), cache_index, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cv, v.astype(cv.dtype), cache_index, axis=1)
+        else:
+            row_upd = jax.vmap(
+                lambda c, u, i: jax.lax.dynamic_update_slice_in_dim(
+                    c, u, i, axis=0))
+            ck = row_upd(ck, k.astype(ck.dtype), idx)
+            cv = row_upd(cv, v.astype(cv.dtype), idx)
         new_cache = (ck, cv)
         k, v = ck, cv
         q_offset = cache_index

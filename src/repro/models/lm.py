@@ -208,13 +208,17 @@ def lm_loss(params: Params, batch: Dict[str, Array], cfg: ArchConfig,
 
 def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
                dtype=jnp.bfloat16) -> Params:
+    """Decode cache. ``index`` is a per-sequence (B,)-vector so continuous
+    batching can admit requests into individual slots at position 0 while
+    other slots keep decoding at their own positions (serve/engine.py)."""
     L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    index = jnp.zeros((batch,), jnp.int32)
     if cfg.family == "ssm":
         s = ssm.mamba2_init_state(cfg, batch)
         return {"ssm": jnp.broadcast_to(s[0], (L,) + s[0].shape),
                 "conv_x": jnp.broadcast_to(s[1], (L,) + s[1].shape),
                 "conv_BC": jnp.broadcast_to(s[2], (L,) + s[2].shape),
-                "index": jnp.int32(0)}
+                "index": index}
     if cfg.family == "hybrid":
         G = cfg.n_layers // cfg.hybrid_attn_every
         s = ssm.mamba2_init_state(cfg, batch)
@@ -224,11 +228,11 @@ def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
             "conv_BC": jnp.broadcast_to(s[2], (L,) + s[2].shape),
             "k": jnp.zeros((G, batch, max_seq, KV, hd), dtype),
             "v": jnp.zeros((G, batch, max_seq, KV, hd), dtype),
-            "index": jnp.int32(0),
+            "index": index,
         }
     return {"k": jnp.zeros((L, batch, max_seq, KV, hd), dtype),
             "v": jnp.zeros((L, batch, max_seq, KV, hd), dtype),
-            "index": jnp.int32(0)}
+            "index": index}
 
 
 def _constrain_cache(cache: Params) -> Params:

@@ -82,9 +82,40 @@ class _Slot:
     tokens: list = dataclasses.field(default_factory=list)
 
 
+def _merge_slot(base: Dict[str, jax.Array], donor: Dict[str, jax.Array],
+                slot: int) -> Dict[str, jax.Array]:
+    """Cache whose ``slot``-th batch entry comes from ``donor``, everything
+    else from ``base``. Batch is axis 1 for KV/SSM leaves (layer-stacked),
+    axis 0 for the per-sequence ``index`` vector. Indexed ``.at[...].set``
+    writes only the slot's row (one copy of ``base``, no full-cache select)."""
+    out = {}
+    for name, b in base.items():
+        if name == "index":
+            out[name] = b.at[slot].set(donor[name][slot])
+        else:
+            out[name] = b.at[:, slot].set(donor[name][:, slot])
+    return out
+
+
+def _merge_rows(base: jax.Array, donor: jax.Array, slot: int) -> jax.Array:
+    """Row ``slot`` from ``donor``, the rest from ``base`` (batch axis 0)."""
+    return base.at[slot].set(donor[slot])
+
+
 class ContinuousBatcher:
     """Fixed-slot continuous batching: finished sequences free their slot,
-    queued requests join mid-flight (per-slot cache reset via index masking).
+    queued requests join mid-flight.
+
+    Admission protocol: prefilling a new slot steps the *shared* decode
+    function, which advances and rewrites every slot's cache row and index —
+    so the admitting loop snapshots the cache/logits first, resets only the
+    admitted slot to fresh-cache state (per-slot ``index`` = 0, so the new
+    request's tokens land at positions 0..P-1 exactly as in a solo run), and
+    after prefill restores every *other* slot's row and index bit-exactly
+    from the snapshot. Already-active slots therefore decode exactly as if
+    the admission never happened, and admitted slots decode exactly as if
+    they were alone — interleaved output == sequential output (regression:
+    tests/test_serve.py::test_interleaved_matches_sequential).
 
     Single-token-step scheduling — the standard TPU decode regime where the
     batch dimension is the throughput lever.
@@ -100,12 +131,19 @@ class ContinuousBatcher:
         B = scfg.batch_slots
         self.cache = lm.init_cache(engine.cfg, B, scfg.max_seq,
                                    dtype=scfg.cache_dtype)
+        #: pristine cache used to reset a slot at admission (a freed slot
+        #: still holds its previous occupant's KV/SSM state and index).
+        self._fresh_cache = self.cache
         self.last_tok = jnp.zeros((B, 1), jnp.int32)
+        self._logits: Optional[jax.Array] = None
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int) -> int:
         rid = self._next_id
         self._next_id += 1
-        self.queue.append((rid, prompt.astype(np.int32), max_new_tokens))
+        prompt = np.asarray(prompt).astype(np.int32)
+        if prompt.size == 0:
+            raise ValueError("empty prompt")
+        self.queue.append((rid, prompt, max_new_tokens))
         return rid
 
     def _admit(self) -> None:
@@ -113,13 +151,22 @@ class ContinuousBatcher:
             if s.active or not self.queue:
                 continue
             rid, prompt, budget = self.queue.pop(0)
-            # prefill this slot by stepping its prompt (other slots idle-mask)
+            # snapshot: prefill below steps the shared decode function, which
+            # touches every slot's cache row/index and logits.
+            snap_cache, snap_logits = self.cache, self._logits
+            # reset the admitted slot to fresh-cache state.
+            self.cache = _merge_slot(self.cache, self._fresh_cache, slot_id)
+            logits = None
             for t in range(len(prompt)):
                 tok = np.array(self.last_tok)     # writable copy
                 tok[slot_id, 0] = prompt[t]
                 self.last_tok = jnp.asarray(tok)
                 logits, self.cache = self.engine._decode(
                     self.engine.params, self.last_tok, self.cache)
+            # restore every other slot bit-exactly from the snapshot.
+            self.cache = _merge_slot(snap_cache, self.cache, slot_id)
+            if snap_logits is not None:
+                logits = _merge_rows(snap_logits, logits, slot_id)
             self.slots[slot_id] = _Slot(active=True, request_id=rid,
                                         produced=0, budget=budget, tokens=[])
             self._logits = logits

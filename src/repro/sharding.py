@@ -30,6 +30,38 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 _ACTIVE_MESH: Optional[Mesh] = None
 
 
+def make_mesh_compat(shape, axes) -> Mesh:
+    """``jax.make_mesh`` across jax versions: ``axis_types`` (and the
+    ``jax.sharding.AxisType`` enum) only exist in newer releases; older ones
+    default to auto sharding, which is the behaviour we want anyway."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
+
+
+def shard_map_compat(f, mesh: Mesh, in_specs, out_specs, manual_axes=None):
+    """``shard_map`` across jax versions.
+
+    Newer jax: ``jax.shard_map(..., check_vma=False, axis_names=manual)``.
+    Older jax: ``jax.experimental.shard_map.shard_map(..., check_rep=False,
+    auto=<mesh axes not in manual>)``.
+    """
+    if hasattr(jax, "shard_map"):
+        kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=False)
+        if manual_axes is not None:
+            kwargs["axis_names"] = set(manual_axes)
+        return jax.shard_map(f, **kwargs)
+    from jax.experimental.shard_map import shard_map as _sm
+    kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=False)
+    if manual_axes is not None:
+        kwargs["auto"] = frozenset(mesh.axis_names) - frozenset(manual_axes)
+    return _sm(f, **kwargs)
+
+
 def set_mesh(mesh: Optional[Mesh]) -> None:
     global _ACTIVE_MESH
     _ACTIVE_MESH = mesh

@@ -123,7 +123,6 @@ def make_compressed_train_step(loss_fn: LossFn, cfg, qcfg: QuantConfig,
     assert "pod" in mesh.axis_names, "compressed step needs the multi-pod mesh"
     grads_fn = make_grads_fn(loss_fn, cfg, qcfg, train_cfg.microbatches)
     bits = train_cfg.grad_compress_bits or 8
-    auto = frozenset(a for a in mesh.axis_names if a != "pod")
 
     def body(params, opt_state, residuals, batch, key):
         grads, metrics = grads_fn(params, batch, key)
@@ -135,12 +134,11 @@ def make_compressed_train_step(loss_fn: LossFn, cfg, qcfg: QuantConfig,
         params, opt_state, om = opt_lib.update(opt_cfg, grads, opt_state, params)
         return params, opt_state, residuals, {**metrics, **om}
 
-    mapped = jax.shard_map(
-        body, mesh=mesh,
+    mapped = sharding.shard_map_compat(
+        body, mesh,
         in_specs=(P(), P(), P(), P("pod"), P()),
         out_specs=(P(), P(), P(), P()),
-        check_vma=False,
-        axis_names={"pod"},
+        manual_axes={"pod"},
     )
     return mapped
 

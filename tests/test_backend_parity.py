@@ -1,0 +1,156 @@
+"""sim-vs-pallas backend parity for the integer layers, all presets.
+
+The two backends quantize identically (RN mantissas are bit-equal); the
+contraction differs — XLA float accumulation (sim) vs bit-exact int32 limb
+accumulation with an f32 cross-limb combine (pallas). Agreement is therefore
+bounded by f32 accumulation rounding, far inside the Proposition 1 mapping
+error ``2^(e_scale - b + 1)`` — both bounds are asserted.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dfx, int_ops
+from repro.core.qconfig import PRESETS, QuantConfig
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _pair(preset):
+    sim = dataclasses.replace(QuantConfig.preset(preset),
+                              stochastic_grad=False)
+    return sim, dataclasses.replace(sim, backend="pallas")
+
+
+def _assert_close(a, b, bits, context):
+    a, b = np.asarray(a, np.float64), np.asarray(b, np.float64)
+    diff = np.abs(a - b).max()
+    scale = np.abs(a).max() + 1e-12
+    assert diff / scale < 1e-4, (context, diff, scale)
+    # Proposition 1: the per-element mapping step of the reference output at
+    # the layer's bit-width upper-bounds any acceptable backend divergence.
+    bound = float(dfx.error_bound(jnp.asarray(a, jnp.float32), bits))
+    assert diff <= max(bound, scale * 1e-4), (context, diff, bound)
+
+
+@pytest.mark.parametrize("preset", PRESETS)
+def test_linear_fwd_parity(preset):
+    sim, pal = _pair(preset)
+    x = jax.random.normal(KEY, (4, 16, 64))
+    w = jax.random.normal(jax.random.fold_in(KEY, 1), (64, 32)) * 0.1
+    b = jnp.ones((32,)) * 0.01
+    ys = int_ops.int_linear(x, w, b, None, sim)
+    yp = int_ops.int_linear(x, w, b, None, pal)
+    if not sim.enabled:
+        np.testing.assert_array_equal(np.asarray(ys), np.asarray(yp))
+        return
+    _assert_close(ys, yp, min(sim.act_bits, sim.weight_bits), preset)
+
+
+@pytest.mark.parametrize("preset", PRESETS)
+def test_linear_bwd_parity(preset):
+    sim, pal = _pair(preset)
+    x = jax.random.normal(KEY, (3, 8, 64))
+    w = jax.random.normal(jax.random.fold_in(KEY, 1), (64, 48)) * 0.1
+    b = jnp.zeros((48,))
+    r = jax.random.normal(jax.random.fold_in(KEY, 2), (3, 8, 48))
+
+    def loss(x, w, b, c):
+        return jnp.sum(int_ops.int_linear(x, w, b, None, c) * r)
+
+    gs = jax.grad(loss, argnums=(0, 1, 2))(x, w, b, sim)
+    gp = jax.grad(loss, argnums=(0, 1, 2))(x, w, b, pal)
+    if not sim.enabled:
+        for a, bb in zip(gs, gp):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(bb))
+        return
+    bits = min(sim.grad_bits, sim.weight_bits, sim.act_bits)
+    for a, bb in zip(gs, gp):
+        _assert_close(a, bb, bits, preset)
+
+
+@pytest.mark.parametrize("preset", ["int16", "int12", "int8"])
+def test_batched_linear_parity(preset):
+    sim, pal = _pair(preset)
+    x = jax.random.normal(KEY, (2, 8, 32)) * jnp.array([0.1, 10.0])[:, None, None]
+    w = jax.random.normal(jax.random.fold_in(KEY, 3), (2, 32, 16)) * 0.2
+    ys = int_ops.int_batched_linear(x, w, None, sim)
+    yp = int_ops.int_batched_linear(x, w, None, pal)
+    _assert_close(ys, yp, min(sim.act_bits, sim.weight_bits), preset)
+
+    def loss(x, w, c):
+        return jnp.sum(int_ops.int_batched_linear(x, w, None, c) ** 2)
+
+    gs = jax.grad(loss, argnums=(0, 1))(x, w, sim)
+    gp = jax.grad(loss, argnums=(0, 1))(x, w, pal)
+    bits = min(sim.grad_bits, sim.weight_bits, sim.act_bits)
+    for a, bb in zip(gs, gp):
+        _assert_close(a, bb, bits, preset)
+
+
+@pytest.mark.parametrize("preset", PRESETS)
+def test_layernorm_parity(preset):
+    sim, pal = _pair(preset)
+    x = jax.random.normal(KEY, (4, 8, 64)) * 2.0
+    gm = jnp.ones((64,)) * 1.3
+    bt = jnp.zeros((64,)) + 0.2
+    r = jax.random.normal(jax.random.fold_in(KEY, 9), x.shape)
+    ys = int_ops.int_layernorm(x, gm, bt, None, sim)
+    yp = int_ops.int_layernorm(x, gm, bt, None, pal)
+    if not sim.enabled:
+        np.testing.assert_array_equal(np.asarray(ys), np.asarray(yp))
+        return
+    # kernel uses the one-pass E[x²]-E[x]² variance; slightly looser than
+    # the matmul parity but still far below the Prop. 1 step
+    np.testing.assert_allclose(np.asarray(ys), np.asarray(yp),
+                               rtol=2e-4, atol=2e-4)
+
+    def loss(x, gm, c):
+        return jnp.sum(int_ops.int_layernorm(x, gm, bt, None, c) * r)
+
+    gs = jax.grad(loss, argnums=(0, 1))(x, gm, sim)
+    gp = jax.grad(loss, argnums=(0, 1))(x, gm, pal)
+    for a, bb in zip(gs, gp):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(bb),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_stochastic_grad_unbiased_on_pallas():
+    """Assumption 2 plumbing: the pallas backend draws the stochastic-
+    rounding noise from the layer key — different keys give different
+    gradients, same key gives identical gradients."""
+    cfg = dataclasses.replace(QuantConfig.int8(), backend="pallas",
+                              stochastic_grad=True)
+    x = jax.random.normal(KEY, (16, 32))
+    w = jax.random.normal(jax.random.fold_in(KEY, 6), (32, 8))
+
+    def g(k):
+        return jax.grad(lambda w: jnp.sum(jnp.tanh(
+            int_ops.int_linear(x, w, None, k, cfg))))(w)
+
+    g1 = g(jax.random.fold_in(KEY, 7))
+    g2 = g(jax.random.fold_in(KEY, 8))
+    g1b = g(jax.random.fold_in(KEY, 7))
+    assert float(jnp.abs(g1 - g2).max()) > 0.0
+    np.testing.assert_array_equal(np.asarray(g1), np.asarray(g1b))
+
+
+def test_backend_validation():
+    with pytest.raises(ValueError):
+        QuantConfig(backend="cuda")
+    with pytest.raises(ValueError):
+        QuantConfig(backend="pallas", block_size=64)
+
+
+def test_acc_dtype_escalation():
+    """The dead-branch fix: inexact sim configurations must not silently
+    report f32-exactness."""
+    assert dfx.sim_accum_exact(8, 8, 128)            # 21 bits: exact
+    assert not dfx.sim_accum_exact(16, 16, 128)      # 37 bits: inexact
+    assert dfx.acc_dtype(8, 8, 128) == jnp.float32
+    with pytest.warns(RuntimeWarning, match="accumulator bits"):
+        dfx._INEXACT_WARNED.clear()
+        assert dfx.acc_dtype(16, 16, 1 << 20) == jnp.float32

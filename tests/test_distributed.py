@@ -36,8 +36,7 @@ def test_sharded_train_step_matches_single_device():
         cfg = registry.get_config('qwen1.5-0.5b').reduced()
         qcfg = QuantConfig.fp32()
         key = jax.random.PRNGKey(0)
-        mesh = jax.make_mesh((2, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = sharding.make_mesh_compat((2, 2), ("data", "model"))
         batch = {"tokens": jax.random.randint(key, (4, 32), 0, cfg.vocab),
                  "labels": jax.random.randint(key, (4, 32), 0, cfg.vocab)}
         opt_cfg = opt_lib.OptimizerConfig(lr=1e-3)
@@ -70,8 +69,7 @@ def test_param_pspecs_rules():
         from repro.configs import registry
         from repro.models import lm
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = sharding.make_mesh_compat((2, 4), ("data", "model"))
         cfg = registry.get_config('qwen1.5-0.5b')
         shapes = jax.eval_shape(lambda k: lm.lm_init(k, cfg),
                                 jax.eval_shape(lambda: jax.random.PRNGKey(0)))
@@ -94,8 +92,7 @@ def test_constrain_divisibility_fallback():
     out = _run("""
         import jax, jax.numpy as jnp
         from repro import sharding
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = sharding.make_mesh_compat((2, 4), ("data", "model"))
         sharding.set_mesh(mesh)
         x = jnp.zeros((3, 5))          # neither dim divisible
         y = jax.jit(lambda x: sharding.constrain(x, "data", "model"))(x)
@@ -113,10 +110,10 @@ def test_compressed_psum_matches_plain_mean():
     out = _run("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro import sharding
         from repro.core import grad_compress
 
-        mesh = jax.make_mesh((4,), ("pod",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = sharding.make_mesh_compat((4,), ("pod",))
         key = jax.random.PRNGKey(0)
         g_local = jax.random.normal(key, (4, 256, 512))   # per-pod grads
 
@@ -125,8 +122,9 @@ def test_compressed_psum_matches_plain_mean():
                 {"w": g[0]}, {"w": r[0]}, bits=8, axis="pod", min_size=1)
             return out["w"][None], nr["w"][None]
 
-        f = jax.shard_map(body, mesh=mesh, in_specs=(P("pod"), P("pod")),
-                          out_specs=(P("pod"), P("pod")), check_vma=False)
+        f = sharding.shard_map_compat(
+            body, mesh, in_specs=(P("pod"), P("pod")),
+            out_specs=(P("pod"), P("pod")))
         r0 = jnp.zeros_like(g_local)
         out, res = f(g_local, r0)
         true_mean = jnp.mean(g_local, axis=0)

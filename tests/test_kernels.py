@@ -99,6 +99,119 @@ def test_layernorm_kernel(R, D, bits):
                                rtol=2e-5, atol=2e-5)
 
 
+def test_round_up_multiple():
+    assert ops._round_up_multiple(1, 8) == 8
+    assert ops._round_up_multiple(8, 8) == 8
+    assert ops._round_up_multiple(9, 8) == 16
+    assert ops._round_up_multiple(127, 128) == 128
+    assert ops._round_up_multiple(129, 128) == 256
+
+
+@pytest.mark.parametrize("M,N,K", [(1, 1, 1), (4, 7, 100), (8, 128, 128),
+                                   (100, 37, 60), (128, 256, 512),
+                                   (200, 130, 70)])
+def test_pick_blocks_small_and_ragged(M, N, K):
+    """Lane dims (N, K) always use full 128-lane tiles; the sublane dim (M)
+    shrinks in 8-multiples for small row counts (regression: bn used to be
+    computed from a misnamed round-up that always returned 128 — true, but
+    by accident — and small-M inputs were padded all the way to 128 rows)."""
+    bm, bn, bk = ops._pick_blocks(M, N, K)
+    assert bn == 128 and bk == 128
+    assert bm % 8 == 0 and 8 <= bm <= 128
+    if M < 128:
+        assert bm == ops._round_up_multiple(M, 8)   # no over-padding
+    else:
+        assert bm == 128
+    # the padded operands must tile exactly
+    assert ops._round_up_multiple(M, bm) % bm == 0
+
+
+@pytest.mark.parametrize("M,N,K", [(3, 5, 2), (100, 37, 60), (130, 128, 250)])
+def test_dfx_matmul_tiled_ragged_shapes(M, N, K):
+    x = jax.random.normal(KEY, (M, K)) * 1.5
+    w = jax.random.normal(jax.random.fold_in(KEY, 7), (K, N)) * 0.4
+    qx, qw = dfx.quantize(x, 12), dfx.quantize(w, 12)
+    y = ops.dfx_matmul_tiled(qx.m, qx.exp, 12, qw.m, qw.exp, 12,
+                             interpret=True)
+    acc = np.asarray(qx.m, np.int64) @ np.asarray(qw.m, np.int64)
+    yr = acc.astype(np.float64) * 2.0 ** float(qx.exp + qw.exp)
+    np.testing.assert_allclose(np.asarray(y, np.float64), yr,
+                               atol=abs(yr).max() * 2e-6 + 1e-12)
+
+
+@pytest.mark.parametrize("bits", [8, 12, 16])
+@pytest.mark.parametrize("M,K,N", [(64, 48, 80), (100, 60, 37)])
+def test_backward_transpose_contractions_vs_oracle(bits, M, K, N):
+    """NT (dX = G·Wᵀ) and TN (dW = Xᵀ·G) kernel paths against the exact
+    int64 numpy oracle, across the limb-decomposition bit-widths."""
+    x = jax.random.normal(KEY, (M, K)) * 2.0
+    w = jax.random.normal(jax.random.fold_in(KEY, 1), (K, N)) * 0.3
+    g = jax.random.normal(jax.random.fold_in(KEY, 2), (M, N))
+    qx, qw, qg = (dfx.quantize(x, bits), dfx.quantize(w, bits),
+                  dfx.quantize(g, bits))
+
+    dx = ops.dfx_matmul_tiled_nt(qg.m, qg.exp, bits, qw.m, qw.exp, bits,
+                                 interpret=True)
+    acc = np.asarray(qg.m, np.int64) @ np.asarray(qw.m, np.int64).T
+    dxr = acc.astype(np.float64) * 2.0 ** float(qg.exp + qw.exp)
+    np.testing.assert_allclose(np.asarray(dx, np.float64), dxr,
+                               atol=abs(dxr).max() * 2e-6 + 1e-12)
+
+    dw = ops.dfx_matmul_tiled_tn(qx.m, qx.exp, bits, qg.m, qg.exp, bits,
+                                 interpret=True)
+    accw = np.asarray(qx.m, np.int64).T @ np.asarray(qg.m, np.int64)
+    dwr = accw.astype(np.float64) * 2.0 ** float(qx.exp + qg.exp)
+    np.testing.assert_allclose(np.asarray(dw, np.float64), dwr,
+                               atol=abs(dwr).max() * 2e-6 + 1e-12)
+
+
+@pytest.mark.parametrize("blocks", [(128, 128, 128), (256, 128, 128)])
+def test_bfp_matmul_nt_tn_block_shapes(blocks):
+    from repro.kernels.bfp_matmul import bfp_matmul_nt, bfp_matmul_tn
+    bm, bn, bk = blocks
+    M, N, K = 2 * bm, 2 * bk, 2 * bn
+    gm = jax.random.randint(KEY, (M, N), -127, 128, jnp.int32).astype(jnp.int8)
+    wm = jax.random.randint(jax.random.fold_in(KEY, 1), (K, N), -127, 128,
+                            jnp.int32).astype(jnp.int8)
+    y = bfp_matmul_nt(gm, wm, jnp.int32(-1), bm=bm, bn=bn, bk=bk,
+                      interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(y), np.asarray(ref.bfp_matmul_nt_ref(gm, wm, jnp.int32(-1))))
+    xm = jax.random.randint(jax.random.fold_in(KEY, 2), (N, M), -127, 128,
+                            jnp.int32).astype(jnp.int8)
+    gm2 = jax.random.randint(jax.random.fold_in(KEY, 3), (N, K), -127, 128,
+                             jnp.int32).astype(jnp.int8)
+    y2 = bfp_matmul_tn(xm, gm2, jnp.int32(2), bm=bm, bn=bn, bk=bk,
+                       interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(y2),
+        np.asarray(ref.bfp_matmul_tn_ref(xm, gm2, jnp.int32(2))))
+
+
+def test_grad_pallas_backend_matches_sim():
+    """jax.grad end-to-end: backend='pallas' gradients equal backend='sim'
+    up to f32 accumulation rounding (RN rounding for determinism)."""
+    import dataclasses
+    from repro.core import int_ops
+    from repro.core.qconfig import QuantConfig
+
+    cfg_s = dataclasses.replace(QuantConfig.int12(), stochastic_grad=False)
+    cfg_p = dataclasses.replace(cfg_s, backend="pallas")
+    x = jax.random.normal(KEY, (4, 16, 48))
+    w = jax.random.normal(jax.random.fold_in(KEY, 1), (48, 24)) * 0.1
+    b = jnp.zeros((24,))
+    r = jax.random.normal(jax.random.fold_in(KEY, 2), (4, 16, 24))
+
+    def loss(x, w, b, c):
+        return jnp.sum(int_ops.int_linear(x, w, b, None, c) * r)
+
+    gs = jax.grad(loss, argnums=(0, 1, 2))(x, w, b, cfg_s)
+    gp = jax.grad(loss, argnums=(0, 1, 2))(x, w, b, cfg_p)
+    for a, bb in zip(gs, gp):
+        scale = float(jnp.abs(a).max()) + 1e-12
+        assert float(jnp.abs(a - bb).max()) / scale < 1e-5
+
+
 def test_kernel_end_to_end_linear_close_to_fp32():
     """quantize kernel -> matmul kernel pipeline ~ fp32 matmul."""
     x = jax.random.normal(KEY, (128, 256))

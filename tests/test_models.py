@@ -61,7 +61,7 @@ def test_arch_smoke_decode_step(arch):
     V = lm.padded_vocab(cfg)
     assert logits.shape == (B, 1, V)
     assert np.all(np.isfinite(np.asarray(logits)))
-    assert int(cache["index"]) == 1
+    assert np.all(np.asarray(cache["index"]) == 1)   # per-slot for lm caches
 
 
 @pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "mixtral-8x7b",

@@ -59,6 +59,75 @@ def test_continuous_batcher_drains_all_requests():
         assert len(results[rid]) == 4
 
 
+def _run_tracked(engine, cfg, requests):
+    """Drive a ContinuousBatcher, recording each request's per-step logits
+    row. ``requests``: list of (prompt, budget, submit_after_steps).
+
+    Token equality alone is too weak a check: a random-init model decodes
+    greedily into a fixed-point token, so even a corrupted cache often
+    reproduces the same argmax. Logits rows expose any cache perturbation.
+    """
+    b = ContinuousBatcher(engine)
+    pending = sorted(requests, key=lambda t: t[2])
+    rids, traj, steps = [], {}, 0
+    while pending or b.queue or any(s.active for s in b.slots):
+        while pending and pending[0][2] <= steps:
+            p, n, _ = pending.pop(0)
+            rids.append(b.submit(p, n))
+        b.step()
+        steps += 1
+        for i, s in enumerate(b.slots):
+            if s.active:
+                traj.setdefault(s.request_id, []).append(
+                    np.asarray(b._logits[i, 0, :cfg.vocab]))
+        assert steps < 200
+    return rids, traj, b.results
+
+
+def test_interleaved_matches_sequential():
+    """Regression for the _admit cache-corruption bug: prefilling a newly
+    admitted slot used to step the shared decode function with no masking,
+    advancing and rewriting every already-active slot's KV cache.
+    Interleaved decoding must be bit-identical (tokens AND per-step logits)
+    to running each request alone."""
+    engine, cfg, _ = _engine(slots=2)
+    rng = np.random.default_rng(1)
+    pa = rng.integers(0, cfg.vocab, 6)
+    pb = rng.integers(0, cfg.vocab, 4)
+
+    (ra,), ta, res_a = _run_tracked(engine, cfg, [(pa, 5, 0)])
+    (rb,), tb, res_b = _run_tracked(engine, cfg, [(pb, 5, 0)])
+
+    # interleaved: A decodes two tokens before B arrives mid-flight
+    (ia, ib), ti, res = _run_tracked(engine, cfg, [(pa, 5, 0), (pb, 5, 2)])
+    np.testing.assert_array_equal(res[ia], res_a[ra])
+    np.testing.assert_array_equal(res[ib], res_b[rb])
+    for solo, inter in [(ta[ra], ti[ia]), (tb[rb], ti[ib])]:
+        assert len(solo) == len(inter)
+        for ls, li in zip(solo, inter):
+            np.testing.assert_array_equal(ls, li)
+
+
+def test_slot_reuse_resets_cache():
+    """A freed slot still holds the previous occupant's KV state and cache
+    index; admission must reset it so the next request decodes as if alone."""
+    engine, cfg, _ = _engine(slots=1)
+    rng = np.random.default_rng(2)
+    pa = rng.integers(0, cfg.vocab, 5)
+    pc = rng.integers(0, cfg.vocab, 7)
+
+    b = ContinuousBatcher(engine)
+    rid_a = b.submit(pa, 3)
+    rid_c = b.submit(pc, 4)          # queued; admitted after A frees the slot
+    res = b.run_until_drained()
+
+    b2 = ContinuousBatcher(engine)
+    rid_solo = b2.submit(pc, 4)
+    solo = b2.run_until_drained()[rid_solo]
+    np.testing.assert_array_equal(res[rid_c], solo)
+    assert len(res[rid_a]) == 3
+
+
 def test_continuous_batcher_eos_stops_early():
     engine, cfg, _ = _engine(slots=1)
     # find the greedy first token, then declare it EOS
