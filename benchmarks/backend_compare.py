@@ -10,7 +10,10 @@ and reports
   acceptance envelope the divergence must stay inside,
 * per-backend wall-clock (µs/call, best of ``repeats``; note the pallas
   backend runs in interpret mode off-TPU — its CPU timings measure the
-  interpreter, not the kernel).
+  interpreter, not the kernel),
+* an MoE section (``moe_dispatch``) counting traced ``pallas_call``
+  dispatches of the batched expert-axis kernels vs the per-expert unrolled
+  loop they replaced — the dispatch-count reduction is ~E× per direction.
 
 Emits a single JSON document (stdout, or ``--out FILE``):
 
@@ -31,9 +34,14 @@ import numpy as np
 
 from repro.core import dfx, int_ops
 from repro.core.qconfig import PRESETS, QuantConfig
+from repro.kernels import ops as kops
+from repro.utils import count_pallas_calls
 
 #: (M, K, N) grid: a decode-ish row count, a train-ish tile, a ragged shape.
 SHAPES = ((32, 256, 128), (128, 128, 128), (96, 200, 72))
+
+#: (E, C, K, N): a Mixtral-ish expert FFN tile, scaled to CPU interpret mode.
+MOE_SHAPE = (8, 64, 256, 128)
 
 
 def _time_us(fn, repeats: int) -> float:
@@ -49,7 +57,7 @@ def _time_us(fn, repeats: int) -> float:
 def compare_preset(preset: str, repeats: int = 3) -> dict:
     key = jax.random.PRNGKey(0)
     sim = dataclasses.replace(QuantConfig.preset(preset),
-                              stochastic_grad=False)
+                              stochastic_grad=False, backend="sim")
     pal = dataclasses.replace(sim, backend="pallas")
     rows = []
     for (M, K, N) in SHAPES:
@@ -95,12 +103,59 @@ def compare_preset(preset: str, repeats: int = 3) -> dict:
     }
 
 
+def moe_dispatch_report(preset: str = "int8") -> dict:
+    """Traced pallas_call dispatch counts for the MoE expert matmuls.
+
+    ``batched_*`` is the shipped path (expert axis on the kernel grid, one
+    launch per limb pair per direction); ``unrolled_fwd`` re-creates the
+    per-expert Python loop this PR removed, so the reduction factor is
+    measured, not assumed.
+    """
+    E, C, K, N = MOE_SHAPE
+    key = jax.random.PRNGKey(0)
+    cfg = dataclasses.replace(QuantConfig.preset(preset), backend="pallas",
+                              stochastic_grad=False)
+    x = jax.random.normal(key, (E, C, K))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (E, K, N)) * 0.1
+
+    def fwd(x, w):
+        return int_ops.int_batched_linear(x, w, None, cfg)
+
+    def loss(x, w):
+        return jnp.sum(fwd(x, w) ** 2)
+
+    def unrolled_fwd(x, w):
+        ys = []
+        for e in range(E):
+            qx = int_ops._pallas_quantize(x[e], cfg.act_bits)
+            qw = int_ops._pallas_quantize(w[e], cfg.weight_bits)
+            ys.append(kops.dfx_matmul_tiled(qx.m, qx.exp, cfg.act_bits,
+                                            qw.m, qw.exp, cfg.weight_bits))
+        return jnp.stack(ys)
+
+    n_fwd = count_pallas_calls(jax.make_jaxpr(fwd)(x, w))
+    n_fwd_bwd = count_pallas_calls(
+        jax.make_jaxpr(jax.grad(loss, argnums=(0, 1)))(x, w))
+    n_unrolled = count_pallas_calls(jax.make_jaxpr(unrolled_fwd)(x, w))
+    return {
+        "shape": {"E": E, "C": C, "K": K, "N": N},
+        "preset": preset,
+        "pallas_dispatches": {
+            "batched_fwd": n_fwd,
+            "batched_fwd_bwd": n_fwd_bwd,
+            "unrolled_fwd": n_unrolled,
+        },
+        "fwd_dispatch_reduction": n_unrolled / n_fwd,
+    }
+
+
 def run(repeats: int = 3) -> dict:
     return {
         "task": "backend_compare",
         "backend_device": jax.default_backend(),
         "pallas_interpret": jax.default_backend() != "tpu",
         "presets": [compare_preset(p, repeats) for p in PRESETS],
+        "moe_dispatch": moe_dispatch_report(),
     }
 
 

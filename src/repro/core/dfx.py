@@ -218,8 +218,10 @@ def dfx_dot_general(
     (mantissa bit-widths of a and b) when known; otherwise the storage
     dtype provides a conservative upper bound.
     """
+    (lhs_c, rhs_c), (lhs_b, rhs_b) = dimension_numbers
+    _check_exp_constant_over(a.exp, a.m.ndim, lhs_c, "lhs")
+    _check_exp_constant_over(b.exp, b.m.ndim, rhs_c, "rhs")
     if preferred_element_type is None:
-        (lhs_c, _), _ = dimension_numbers
         contraction = int(np.prod([a.m.shape[ax] for ax in lhs_c])) or 1
         bits_a, bits_b = bits if bits is not None else (
             _storage_bits(a.m), _storage_bits(b.m))
@@ -229,22 +231,93 @@ def dfx_dot_general(
         dimension_numbers=dimension_numbers,
         preferred_element_type=preferred_element_type,
     )
-    # Per-tensor scales broadcast trivially. Per-axis scales: caller must
-    # pre-broadcast exponents to the output shape (int_ops does this).
-    out_exp = (a.exp + b.exp).astype(prod.dtype)
+    # Per-axis scales are re-laid-out to the dot_general output convention
+    # (batch..., lhs free..., rhs free...) so each kept axis scales the
+    # output axis it actually produced — positional broadcast alone would
+    # silently hit the wrong axis for non-standard contraction layouts.
+    n_lhs_free = a.m.ndim - len(lhs_c) - len(lhs_b)
+    n_rhs_free = b.m.ndim - len(rhs_c) - len(rhs_b)
+    ea = _aligned_exp(a.exp, a.m.ndim, lhs_c, lhs_b, n_rhs_free, "lhs")
+    eb = _aligned_exp(b.exp, b.m.ndim, rhs_c, rhs_b, n_lhs_free, "rhs")
+    out_exp = (ea + eb).astype(prod.dtype)
     out = prod * jnp.exp2(_broadcast_out_exp(out_exp, prod.shape))
     return out.astype(jnp.float32)
 
 
+def _aligned_exp(exp: jax.Array, m_ndim: int, c_axes, b_axes,
+                 other_free: int, side: str) -> jax.Array:
+    """Map an operand's keep-dims scale exponent to the output axis layout.
+
+    ``dot_general`` output dims are (batch..., lhs free..., rhs free...).
+    The operand's contracted axes are squeezed (validated size 1), its kept
+    axes are permuted to (batch..., free...), and the *other* operand's free
+    axes get size-1 slots — trailing for the lhs, between batch and free for
+    the rhs — so the summed exponent broadcasts against the true output axes.
+    """
+    if exp.ndim == 0:
+        return exp
+    squeezed = jnp.squeeze(exp, axis=tuple(c_axes))
+    kept = [ax for ax in range(m_ndim) if ax not in c_axes]
+    pos = {ax: i for i, ax in enumerate(kept)}
+    free = [ax for ax in kept if ax not in b_axes]
+    e = jnp.transpose(squeezed, [pos[ax] for ax in b_axes]
+                      + [pos[ax] for ax in free])
+    nb = len(b_axes)
+    if side == "lhs":
+        shape = e.shape + (1,) * other_free
+    else:
+        shape = e.shape[:nb] + (1,) * other_free + e.shape[nb:]
+    return e.reshape(shape)
+
+
+def _check_exp_constant_over(exp: jax.Array, m_ndim: int, axes, side: str):
+    """Reject per-axis scales that vary along a contracted axis.
+
+    A scale that changes *along* the contraction cannot be factored out of
+    the integer sum — the output scale would be ill-defined and the result
+    silently mis-scaled.  Scalar (per-tensor) exponents always pass; keep-dims
+    per-axis exponents must be size 1 on every contracted axis.
+    """
+    if exp.ndim == 0:
+        return
+    if exp.ndim != m_ndim:
+        raise ValueError(
+            f"{side} scale exponent has shape {exp.shape} but the mantissa "
+            f"is rank {m_ndim}; per-axis scales must use the keep-dims "
+            "layout produced by dfx.quantize(reduce_axes=...)")
+    bad = [ax for ax in axes if exp.shape[ax] != 1]
+    if bad:
+        raise ValueError(
+            f"{side} scale exponent {exp.shape} varies along contracted "
+            f"axes {bad}; scales must be per-tensor or constant over the "
+            "contraction (quantize with the contracted axes in reduce_axes)")
+
+
 def _broadcast_out_exp(out_exp: jax.Array, out_shape) -> jax.Array:
-    if out_exp.ndim == 0 or out_exp.shape == tuple(out_shape):
+    """Align the summed scale exponent with the contraction output shape.
+
+    Per-tensor (scalar) exponents pass through; keep-dims per-axis exponents
+    must numpy-broadcast to exactly ``out_shape``.  Anything else raises —
+    the old silent fallback returned the unaligned exponent and could scale
+    the output wrongly (or trip an opaque shape error downstream).
+    """
+    out_shape = tuple(out_shape)
+    if out_exp.ndim == 0 or out_exp.shape == out_shape:
         return out_exp
-    # Squeeze kept-dims of size 1 and rely on trailing broadcast when
-    # possible; otherwise the caller must align shapes explicitly.
+    try:
+        if jnp.broadcast_shapes(out_exp.shape, out_shape) == out_shape:
+            return out_exp
+    except ValueError:
+        pass
+    # A keep-dims exponent that is all-size-1 is really a per-tensor scale.
     squeezed = jnp.squeeze(out_exp)
     if squeezed.ndim == 0:
         return squeezed
-    return out_exp
+    raise ValueError(
+        f"scale exponent of shape {out_exp.shape} does not broadcast to the "
+        f"contraction output shape {out_shape}; per-axis scales must keep "
+        "dims so the summed exponent aligns with the output "
+        "(see dfx.quantize(reduce_axes=...))")
 
 
 def dfx_matmul(a: DfxTensor, b: DfxTensor,

@@ -30,7 +30,12 @@ Assumption 2 unbiasedness is preserved) and both matmul directions through
 the Pallas kernels: forward ``q(X)·q(W)`` via ``dfx_matmul_tiled``, backward
 ``dX = q(G)·q(W)ᵀ`` / ``dW = q(X)ᵀ·q(G)`` via the transpose-aware
 ``dfx_matmul_tiled_nt`` / ``dfx_matmul_tiled_tn`` entry points — bit-exact
-int32 limb accumulation at any supported bit-width (DESIGN.md §2).
+int32 limb accumulation at any supported bit-width (DESIGN.md §2).  The MoE
+expert layer (``int_batched_linear``) uses the batched twins
+(``dfx_matmul_tiled_batched{,_nt,_tn}``, ``quantize_pallas_batched``): the
+expert axis rides a leading parallel grid dimension with an (E,)-vector
+scale-exponent operand, so each limb pair is ONE kernel dispatch for all E
+experts in both directions — no Python loop over experts.
 """
 from __future__ import annotations
 
@@ -206,15 +211,18 @@ _BATCH_DN = (((2,), (1,)), ((0,), (0,)))          # contract K, batch E
 def _int_blinear_fwd(x, w, key, cfg: QuantConfig):
     if not cfg.enabled:
         return jnp.einsum("eck,ekn->ecn", x, w), (x, w, key)
+    kf = None
+    if cfg.stochastic_fwd and key is not None:
+        key, kf = jax.random.split(key)
     if cfg.backend == "pallas":
-        qx = _stacked_pallas_quantize(x, cfg.act_bits)
+        qx = _stacked_pallas_quantize(x, cfg.act_bits,
+                                      stochastic=kf is not None, key=kf)
         qw = _stacked_pallas_quantize(w, cfg.weight_bits)
-        y = jnp.stack([
-            kops.dfx_matmul_tiled(qx.m[e], qx.exp[e], cfg.act_bits,
-                                  qw.m[e], qw.exp[e], cfg.weight_bits)
-            for e in range(x.shape[0])])
+        y = kops.dfx_matmul_tiled_batched(qx.m, qx.exp, cfg.act_bits,
+                                          qw.m, qw.exp, cfg.weight_bits)
         return y, (qx, qw, key)
-    qx = dfx.quantize(x, cfg.act_bits, reduce_axes=(1, 2))    # scale per expert
+    qx = dfx.quantize(x, cfg.act_bits, stochastic=kf is not None, key=kf,
+                      reduce_axes=(1, 2))                     # scale per expert
     qw = dfx.quantize(w, cfg.weight_bits, reduce_axes=(1, 2))
     y = _batched_dfx_dot(qx, qw, _BATCH_DN)
     return y, (qx, qw, key)
@@ -225,22 +233,26 @@ def _stacked_pallas_quantize(x: Array, bits: int, *, stochastic: bool = False,
     """Per-expert (leading-axis) pallas quantization with per-expert scales.
 
     Mirrors ``dfx.quantize(..., reduce_axes=(1, 2))``: each expert slice gets
-    its own scale exponent; mantissas are stacked back to the input shape and
-    exponents to (E, 1, 1) so the sim/pallas residual layouts match.
-
-    The per-expert Python loop (here and in the batched fwd/bwd) unrolls E
-    kernel dispatches into the jit — acceptable for MoE expert counts (8-64)
-    given the kernel grid amortizes launch cost; a vmapped kernel with a
-    vector exp operand would fuse them and is the noted follow-up if expert
-    counts grow.
+    its own scale exponent (pass 1, an XLA max-abs reduce over the trailing
+    axes); the shift-round-clip pass is ONE grouped-scale kernel launch for
+    all E experts (``quantize_pallas_batched``, expert axis on the grid).
+    Mantissas keep the input shape and exponents are (E, 1, 1) so the
+    sim/pallas residual layouts match.  Stochastic noise is a single draw
+    over the full stack — bit-identical to the sim path under the same key.
     """
+    x = x.astype(jnp.float32)
     E = x.shape[0]
-    keys = jax.random.split(key, E) if (stochastic and key is not None) else [None] * E
-    qs = [_pallas_quantize(x[e], bits, stochastic=stochastic, key=keys[e])
-          for e in range(E)]
-    return dfx.DfxTensor(
-        m=jnp.stack([q.m for q in qs]),
-        exp=jnp.stack([q.exp for q in qs]).reshape(E, 1, 1))
+    e = dfx._scale_exponent(x, tuple(range(1, x.ndim)))
+    exp = (e - (bits - 1)).astype(jnp.int32)                  # (E, 1, ..., 1)
+    x3 = x.reshape(E, -1, x.shape[-1])
+    u = None
+    if stochastic:
+        if key is None:
+            raise ValueError("stochastic rounding requires a PRNG key")
+        u = jax.random.uniform(key, x3.shape, dtype=jnp.float32)
+    m = kops.quantize_pallas_batched(x3, exp, bits, u=u)
+    return dfx.DfxTensor(m=m.reshape(x.shape),
+                         exp=exp.reshape((E,) + (1,) * (x.ndim - 1)))
 
 
 def _batched_dfx_dot(a: dfx.DfxTensor, b: dfx.DfxTensor, dn) -> Array:
@@ -262,16 +274,12 @@ def _int_blinear_bwd(cfg: QuantConfig, res, g):
     if cfg.backend == "pallas":
         qg = _stacked_pallas_quantize(g, cfg.grad_bits, stochastic=stoch,
                                       key=key)
-        # dX[e] = G[e]·W[e]ᵀ (NT), dW[e] = X[e]ᵀ·G[e] (TN) — kernel per expert
-        E = g.shape[0]
-        dx = jnp.stack([
-            kops.dfx_matmul_tiled_nt(qg.m[e], qg.exp[e], cfg.grad_bits,
-                                     qw.m[e], qw.exp[e], cfg.weight_bits)
-            for e in range(E)])
-        dw = jnp.stack([
-            kops.dfx_matmul_tiled_tn(qx.m[e], qx.exp[e], cfg.act_bits,
-                                     qg.m[e], qg.exp[e], cfg.grad_bits)
-            for e in range(E)])
+        # dX[e] = G[e]·W[e]ᵀ (NT), dW[e] = X[e]ᵀ·G[e] (TN) — one batched
+        # kernel dispatch per limb pair covers every expert in each direction
+        dx = kops.dfx_matmul_tiled_batched_nt(qg.m, qg.exp, cfg.grad_bits,
+                                              qw.m, qw.exp, cfg.weight_bits)
+        dw = kops.dfx_matmul_tiled_batched_tn(qx.m, qx.exp, cfg.act_bits,
+                                              qg.m, qg.exp, cfg.grad_bits)
         return dx, dw, _float0(key) if key is not None else None
     qg = dfx.quantize(g, cfg.grad_bits, stochastic=stoch, key=key,
                       reduce_axes=(1, 2))
@@ -298,7 +306,9 @@ def int_embedding(table: Array, ids: Array, key, cfg: QuantConfig) -> Array:
 def _int_embedding_fwd(table, ids, key, cfg: QuantConfig):
     if not cfg.enabled or not cfg.int_embedding:
         return table[ids], (table.shape, ids, key)
-    qt = dfx.quantize(table, cfg.weight_bits)
+    # backend-routed: QuantConfig(backend="pallas") quantizes the table
+    # through the Pallas kernel like every other integer layer
+    qt = _quantize(table, cfg.weight_bits, cfg)
     # Gather integer mantissas, then inverse-map (a gather is index movement,
     # integer end-to-end).
     y = qt.m[ids].astype(jnp.float32) * jnp.exp2(qt.exp.astype(jnp.float32))
@@ -465,8 +475,10 @@ def _int_dwconv(x, w, key, cfg: QuantConfig, K: int):
 
 
 def _int_dwconv_fwd(x, w, key, cfg: QuantConfig, K: int):
-    qx = dfx.quantize(x, cfg.act_bits)
-    qw = dfx.quantize(w, cfg.weight_bits)
+    # backend-routed quantization (the shifted elementwise products stay in
+    # XLA — they are VPU work, not MXU work; only the mapping runs in-kernel)
+    qx = _quantize(x, cfg.act_bits, cfg)
+    qw = _quantize(w, cfg.weight_bits, cfg)
     xm = qx.m.astype(jnp.float32)
     wm = qw.m.astype(jnp.float32)
     pads = jnp.pad(xm, ((0, 0), (K - 1, 0), (0, 0)))

@@ -17,7 +17,20 @@ same model code runs both the paper's method and its baseline.
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Optional
+
+
+def _env_default_backend() -> str:
+    """Default execution backend; ``REPRO_BACKEND`` overrides it.
+
+    Lets CI run the whole tier-1 suite as a ``{sim, pallas}`` backend matrix
+    (``.github/workflows/ci.yml``) without threading a flag through every
+    test — any ``QuantConfig`` built without an explicit ``backend=`` picks
+    up the environment's choice.  Invalid values fail fast in
+    ``__post_init__``.
+    """
+    return os.environ.get("REPRO_BACKEND", "sim")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,8 +58,9 @@ class QuantConfig:
     #: by ``dfx.acc_dtype``); "pallas" routes quantization and both matmul
     #: directions (forward q(X)·q(W), backward dX/dW) through the Pallas
     #: kernels in ``repro.kernels`` — bit-exact int32 limb accumulation,
-    #: interpret mode off-TPU.
-    backend: str = "sim"
+    #: interpret mode off-TPU.  Defaults to $REPRO_BACKEND (else "sim") so
+    #: CI can matrix the whole suite over both backends.
+    backend: str = dataclasses.field(default_factory=_env_default_backend)
 
     def __post_init__(self):
         for name in ("weight_bits", "act_bits", "grad_bits"):

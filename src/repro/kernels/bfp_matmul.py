@@ -21,6 +21,13 @@ The NT/TN kernels contract the shared axis *in place* (dot_general dimension
 numbers inside the kernel) — the transposed operand is never materialized in
 HBM; only its block index map changes.
 
+Each layout also has a **batched** variant (``bfp_matmul_batched{,_nt,_tn}``)
+for the MoE expert stack ``Y[e] = X[e] · W[e]``: the grid gains a leading
+expert dimension and the scalar ``out_exp`` operand becomes a per-expert
+**vector** ``(E,)`` — the epilogue of grid slice ``e`` scales by
+``2**out_exp[e]``.  One ``pallas_call`` covers all experts; the expert axis
+is a parallel grid dimension, not an unrolled Python loop (DESIGN.md §2).
+
 MXU alignment: block shapes are multiples of 128 in the N/K lanes and 8 in
 sublanes; defaults (128, 128, 128) match the MXU natively.
 """
@@ -177,6 +184,148 @@ def bfp_matmul_tn(
         x_spec=pl.BlockSpec((bk, bm), lambda i, j, k: (k, i)),
         w_spec=pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
         out_spec=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        dims=(0, 0),
+        interpret=interpret,
+    )
+
+
+# =========================================================================
+# Batched (expert-axis) variants — grid: (E, i, j, k), exp: (E,) vector
+# =========================================================================
+
+def _bfp_matmul_batched_kernel(x_ref, w_ref, exp_ref, o_ref, acc_ref, *,
+                               n_k: int, dims):
+    """One (e, i, j, k) grid step: acc += contract(x_blk[e], w_blk[e]).
+
+    Identical contraction to the unbatched kernel on the trailing two block
+    dims; the epilogue scale is the *per-expert* exponent ``exp_ref[e]``.
+    """
+    e = pl.program_id(0)
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    lc, rc = dims
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[0].astype(jnp.int32), w_ref[0].astype(jnp.int32),
+        (((lc,), (rc,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        scale = jnp.exp2(exp_ref[e].astype(jnp.float32))
+        o_ref[0] = acc_ref[...].astype(jnp.float32) * scale
+
+
+def _bfp_batched_call(xm, wm, out_exp, *, out_shape, grid, x_spec, w_spec,
+                      out_spec, dims, interpret):
+    n_k = grid[3]
+    return pl.pallas_call(
+        functools.partial(_bfp_matmul_batched_kernel, n_k=n_k, dims=dims),
+        grid=grid,
+        in_specs=[
+            x_spec,
+            w_spec,
+            pl.BlockSpec(memory_space=pl.ANY),   # (E,) exp vector, whole
+        ],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct(out_shape, jnp.float32),
+        scratch_shapes=[pltpu.VMEM(out_spec.block_shape[1:], jnp.int32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(xm, wm, jnp.reshape(out_exp, (-1,)).astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def bfp_matmul_batched(
+    xm: jax.Array,          # (E, M, K) int8 limb mantissas
+    wm: jax.Array,          # (E, K, N) int8 limb mantissas
+    out_exp: jax.Array,     # (E,) int32: x_exp[e] + w_exp[e]
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Batched NN: ``(xm[e] @ wm[e]) * 2**out_exp[e]`` -> (E, M, N) f32."""
+    E, M, K = xm.shape
+    E2, K2, N = wm.shape
+    assert E == E2 and K == K2, (xm.shape, wm.shape)
+    assert out_exp.shape == (E,), (out_exp.shape, E)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (
+        f"shapes ({E},{M},{K})x({E},{K},{N}) must tile by ({bm},{bn},{bk})")
+    return _bfp_batched_call(
+        xm, wm, out_exp,
+        out_shape=(E, M, N),
+        grid=(E, M // bm, N // bn, K // bk),
+        x_spec=pl.BlockSpec((1, bm, bk), lambda e, i, j, k: (e, i, k)),
+        w_spec=pl.BlockSpec((1, bk, bn), lambda e, i, j, k: (e, k, j)),
+        out_spec=pl.BlockSpec((1, bm, bn), lambda e, i, j, k: (e, i, j)),
+        dims=(1, 0),
+        interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def bfp_matmul_batched_nt(
+    gm: jax.Array,          # (E, M, N) grad mantissas
+    wm: jax.Array,          # (E, K, N) weight mantissas, forward layout
+    out_exp: jax.Array,     # (E,) int32: g_exp[e] + w_exp[e]
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Batched NT: ``(gm[e] @ wm[e]ᵀ) * 2**out_exp[e]`` -> (E, M, K) f32."""
+    E, M, N = gm.shape
+    E2, K, N2 = wm.shape
+    assert E == E2 and N == N2, (gm.shape, wm.shape)
+    assert out_exp.shape == (E,), (out_exp.shape, E)
+    assert M % bm == 0 and K % bn == 0 and N % bk == 0, (
+        f"shapes ({E},{M},{N})x({E},{K},{N}) must tile by ({bm},{bn},{bk})")
+    return _bfp_batched_call(
+        gm, wm, out_exp,
+        out_shape=(E, M, K),
+        grid=(E, M // bm, K // bn, N // bk),
+        x_spec=pl.BlockSpec((1, bm, bk), lambda e, i, j, k: (e, i, k)),
+        w_spec=pl.BlockSpec((1, bn, bk), lambda e, i, j, k: (e, j, k)),
+        out_spec=pl.BlockSpec((1, bm, bn), lambda e, i, j, k: (e, i, j)),
+        dims=(1, 1),
+        interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def bfp_matmul_batched_tn(
+    xm: jax.Array,          # (E, M, K) activation mantissas, forward layout
+    gm: jax.Array,          # (E, M, N) grad mantissas
+    out_exp: jax.Array,     # (E,) int32: x_exp[e] + g_exp[e]
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Batched TN: ``(xm[e]ᵀ @ gm[e]) * 2**out_exp[e]`` -> (E, K, N) f32."""
+    E, M, K = xm.shape
+    E2, M2, N = gm.shape
+    assert E == E2 and M == M2, (xm.shape, gm.shape)
+    assert out_exp.shape == (E,), (out_exp.shape, E)
+    assert K % bm == 0 and N % bn == 0 and M % bk == 0, (
+        f"shapes ({E},{M},{K})x({E},{M},{N}) must tile by ({bm},{bn},{bk})")
+    return _bfp_batched_call(
+        xm, gm, out_exp,
+        out_shape=(E, K, N),
+        grid=(E, K // bm, N // bn, M // bk),
+        x_spec=pl.BlockSpec((1, bk, bm), lambda e, i, j, k: (e, k, i)),
+        w_spec=pl.BlockSpec((1, bk, bn), lambda e, i, j, k: (e, k, j)),
+        out_spec=pl.BlockSpec((1, bm, bn), lambda e, i, j, k: (e, i, j)),
         dims=(0, 0),
         interpret=interpret,
     )

@@ -9,6 +9,11 @@ Two-pass structure (DESIGN.md §2): pass 1 is the max-abs exponent reduction
 with optional stochastic rounding (``u`` uniform noise; on real TPU this is
 generated in-kernel by ``pltpu.prng_random_bits`` — the noise input path is
 used for interpret-mode validation and bit-exact cross-checks).
+
+``dfx_quantize_grouped`` is the per-leading-slice (grouped-scale) variant for
+MoE expert stacks: ``x`` is (E, M, N), ``exp`` an (E,) vector, and grid slice
+``(e, i)`` shifts by ``exp[e]`` — one kernel launch quantizes all E experts
+with their own scales (DESIGN.md §2).
 """
 from __future__ import annotations
 
@@ -75,5 +80,60 @@ def dfx_quantize(
         in_specs=[pl.BlockSpec((br, N), lambda i: (i, 0)),
                   pl.BlockSpec(memory_space=pl.ANY),
                   pl.BlockSpec((br, N), lambda i: (i, 0))],
+        **common,
+    )(x, exp, u)
+
+
+# =========================================================================
+# Grouped-scale (per-leading-slice) variant — exp is an (E,) vector
+# =========================================================================
+
+def _quant_kernel_grouped(x_ref, exp_ref, o_ref, *, bits: int):
+    scale = jnp.exp2(-exp_ref[pl.program_id(0)].astype(jnp.float32))
+    y = jnp.round(x_ref[0] * scale)
+    lim = float(2 ** (bits - 1) - 1)
+    o_ref[0] = jnp.clip(y, -lim, lim).astype(o_ref.dtype)
+
+
+def _quant_kernel_grouped_stoch(x_ref, exp_ref, u_ref, o_ref, *, bits: int):
+    scale = jnp.exp2(-exp_ref[pl.program_id(0)].astype(jnp.float32))
+    y = jnp.floor(x_ref[0] * scale + u_ref[0])
+    lim = float(2 ** (bits - 1) - 1)
+    o_ref[0] = jnp.clip(y, -lim, lim).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "br", "interpret"))
+def dfx_quantize_grouped(
+    x: jax.Array,            # (E, M, N) float32
+    exp: jax.Array,          # (E,) int32 per-slice scale exponents
+    *,
+    bits: int,
+    u: jax.Array | None = None,   # (E, M, N) uniform [0,1) noise, optional
+    br: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    E, M, N = x.shape
+    assert M % br == 0, (M, br)
+    assert exp.shape == (E,), (exp.shape, E)
+    grid = (E, M // br)
+    exp = exp.astype(jnp.int32)
+    blk = pl.BlockSpec((1, br, N), lambda e, i: (e, i, 0))
+    common = dict(
+        grid=grid,
+        out_specs=blk,
+        out_shape=jax.ShapeDtypeStruct((E, M, N), _out_dtype(bits)),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )
+    if u is None:
+        return pl.pallas_call(
+            functools.partial(_quant_kernel_grouped, bits=bits),
+            in_specs=[blk, pl.BlockSpec(memory_space=pl.ANY)],
+            **common,
+        )(x, exp)
+    return pl.pallas_call(
+        functools.partial(_quant_kernel_grouped_stoch, bits=bits),
+        in_specs=[blk, pl.BlockSpec(memory_space=pl.ANY), blk],
         **common,
     )(x, exp, u)

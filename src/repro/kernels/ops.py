@@ -3,12 +3,13 @@
 Adds the pieces that keep the kernels simple:
 
 * **int8 limb decomposition** for mantissas wider than 8 bits — the TPU MXU
-  multiplies int8×int8; a b<=16-bit mantissa is split into a hi int8 limb
-  (signed) and a lo uint8-ish limb carried in int8 with offset arithmetic:
-  ``m = hi * 2^7 + lo`` with ``lo in [-64, 63]``-style balanced digits so
-  every limb product fits the int8 MXU path.  ``X@W`` then becomes up to 9
-  kernel invocations; each partial is bit-exact int32, the cross-limb combine
-  is an f32 epilogue (rounding ~1 ulp of the largest partial — DESIGN.md §2).
+  multiplies int8×int8; ``_split_limbs`` rewrites a b<=16-bit mantissa as
+  **balanced base-2⁷ digits** ``m = sum_j limb_j · 2^(7j)`` with every
+  ``limb_j in [-64, 63]``, so each limb fits int8 and every limb product
+  fits the MXU's int8 path.  b<=8 is 1 limb, 8<b<=14 is 2, b<=16 is 3 —
+  ``X@W`` therefore becomes up to 3×3 = 9 kernel invocations; each partial
+  is bit-exact int32, the cross-limb combine is an f32 epilogue (rounding
+  ~1 ulp of the largest partial — DESIGN.md §2).
 * shape padding to MXU tile multiples, and un-padding of the result;
 * automatic ``interpret=True`` when not running on real TPU hardware.
 
@@ -21,6 +22,13 @@ Three matmul layouts cover the integer layers end-to-end (DESIGN.md §2):
 The NT/TN variants keep both operands in their forward (row-major) layout —
 the transpose happens inside the kernel via the block index maps, never as a
 materialized HBM copy.
+
+Each layout has a **batched** twin for the MoE expert stack —
+``dfx_matmul_tiled_batched{,_nt,_tn}`` take (E, ...) mantissa stacks and
+(E,)-vector scale exponents and issue ONE ``pallas_call`` per limb pair with
+the expert axis as a leading parallel grid dimension (the per-expert Python
+loop this replaces unrolled up to 9·E dispatches per direction).
+``quantize_pallas_batched`` is the matching grouped-scale quantizer.
 """
 from __future__ import annotations
 
@@ -29,13 +37,17 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.bfp_matmul import bfp_matmul, bfp_matmul_nt, bfp_matmul_tn
-from repro.kernels.dfx_quant import dfx_quantize
+from repro.kernels.bfp_matmul import (bfp_matmul, bfp_matmul_batched,
+                                      bfp_matmul_batched_nt,
+                                      bfp_matmul_batched_tn, bfp_matmul_nt,
+                                      bfp_matmul_tn)
+from repro.kernels.dfx_quant import dfx_quantize, dfx_quantize_grouped
 from repro.kernels.int_layernorm import int_layernorm_fwd
 
-#: balanced-digit base: |hi| <= 2^(b-8), |lo| < 2^7 — both in int8 range and
-#: hi*lo products stay within the MXU's int8 operand contract for b <= 15;
-#: for b == 16 the hi limb spans int9, carried via a second split (4 limbs).
+#: balanced-digit radix: every limb lies in [-64, 63], so limb products span
+#: at most 12 magnitude bits — safely inside the MXU int8×int8→int32 path.
+#: A b-bit mantissa needs ceil((b-1)/7)+ limbs: 1 for b<=8, 2 for b<=14,
+#: 3 for b<=16 (so a 16×16-bit matmul is at most 9 limb-pair kernel calls).
 _LIMB_BITS = 7
 
 #: MXU lane width: the last block dimension must be a multiple of this.
@@ -96,6 +108,21 @@ def _pad2(a: jax.Array, r: int, c: int) -> jax.Array:
     pn = (-N) % c
     if pm or pn:
         a = jnp.pad(a, ((0, pm), (0, pn)))
+    return a
+
+
+def _pad_last2(a: jax.Array, r: int, c: int) -> jax.Array:
+    """Pad the trailing two dims to (r, c) multiples; leading dims untouched.
+
+    Zero padding is exact for every expert regardless of its scale exponent:
+    zero mantissas contribute nothing to the integer accumulation, and a
+    zero row quantizes to zero under any per-expert exponent.
+    """
+    *lead, M, N = a.shape
+    pm = (-M) % r
+    pn = (-N) % c
+    if pm or pn:
+        a = jnp.pad(a, [(0, 0)] * len(lead) + [(0, pm), (0, pn)])
     return a
 
 
@@ -184,6 +211,77 @@ def dfx_matmul_tiled_tn(
     return out[:K, :N]
 
 
+def dfx_matmul_tiled_batched(
+    xm: jax.Array, x_exp: jax.Array, x_bits: int,
+    wm: jax.Array, w_exp: jax.Array, w_bits: int,
+    *, interpret: bool | None = None,
+) -> jax.Array:
+    """Batched NN: ``q(X[e])·q(W[e])`` for all experts in one launch/limb pair.
+
+    xm: (E, M, K), wm: (E, K, N); x_exp/w_exp are (E,)-broadcastable scale
+    exponents (the (E, 1, 1) keep-dims layout of the per-expert quantizers is
+    accepted). Returns FP32 (E, M, N).
+    """
+    if interpret is None:
+        interpret = not on_tpu()
+    E, M, K = xm.shape
+    _, _, N = wm.shape
+    bm, bn, bk = _pick_blocks(M, N, K)
+    xm, wm = _pad_last2(xm, bm, bk), _pad_last2(wm, bk, bn)
+    out_exp = (jnp.reshape(x_exp, (E,)) + jnp.reshape(w_exp, (E,))).astype(jnp.int32)
+    out = _limb_loop(
+        lambda xl, wl: bfp_matmul_batched(xl, wl, out_exp, bm=bm, bn=bn,
+                                          bk=bk, interpret=interpret),
+        _split_limbs(xm, x_bits), _split_limbs(wm, w_bits))
+    return out[:, :M, :N]
+
+
+def dfx_matmul_tiled_batched_nt(
+    gm: jax.Array, g_exp: jax.Array, g_bits: int,
+    wm: jax.Array, w_exp: jax.Array, w_bits: int,
+    *, interpret: bool | None = None,
+) -> jax.Array:
+    """Batched NT: ``dX[e] = q(G[e])·q(W[e])ᵀ``, W in forward (E, K, N) layout.
+
+    gm: (E, M, N), wm: (E, K, N). Returns FP32 (E, M, K).
+    """
+    if interpret is None:
+        interpret = not on_tpu()
+    E, M, N = gm.shape
+    _, K, _ = wm.shape
+    bm, bn, bk = _pick_blocks(M, K, N)
+    gm, wm = _pad_last2(gm, bm, bk), _pad_last2(wm, bn, bk)
+    out_exp = (jnp.reshape(g_exp, (E,)) + jnp.reshape(w_exp, (E,))).astype(jnp.int32)
+    out = _limb_loop(
+        lambda gl, wl: bfp_matmul_batched_nt(gl, wl, out_exp, bm=bm, bn=bn,
+                                             bk=bk, interpret=interpret),
+        _split_limbs(gm, g_bits), _split_limbs(wm, w_bits))
+    return out[:, :M, :K]
+
+
+def dfx_matmul_tiled_batched_tn(
+    xm: jax.Array, x_exp: jax.Array, x_bits: int,
+    gm: jax.Array, g_exp: jax.Array, g_bits: int,
+    *, interpret: bool | None = None,
+) -> jax.Array:
+    """Batched TN: ``dW[e] = q(X[e])ᵀ·q(G[e])``, X in forward (E, M, K) layout.
+
+    xm: (E, M, K), gm: (E, M, N). Returns FP32 (E, K, N).
+    """
+    if interpret is None:
+        interpret = not on_tpu()
+    E, M, K = xm.shape
+    _, _, N = gm.shape
+    bk, bm, bn = _pick_blocks(M, K, N)
+    xm, gm = _pad_last2(xm, bk, bm), _pad_last2(gm, bk, bn)
+    out_exp = (jnp.reshape(x_exp, (E,)) + jnp.reshape(g_exp, (E,))).astype(jnp.int32)
+    out = _limb_loop(
+        lambda xl, gl: bfp_matmul_batched_tn(xl, gl, out_exp, bm=bm, bn=bn,
+                                             bk=bk, interpret=interpret),
+        _split_limbs(xm, x_bits), _split_limbs(gm, g_bits))
+    return out[:, :K, :N]
+
+
 def quantize_pallas(x: jax.Array, exp: jax.Array, bits: int,
                     u: jax.Array | None = None,
                     interpret: bool | None = None) -> jax.Array:
@@ -199,6 +297,31 @@ def quantize_pallas(x: jax.Array, exp: jax.Array, bits: int,
             u = jnp.pad(u, ((0, pm), (0, 0)))
     out = dfx_quantize(x, exp, bits=bits, u=u, br=br, interpret=interpret)
     return out[:M]
+
+
+def quantize_pallas_batched(x: jax.Array, exp: jax.Array, bits: int,
+                            u: jax.Array | None = None,
+                            interpret: bool | None = None) -> jax.Array:
+    """3-D (E, M, N) wrapper over the grouped-scale quantize kernel.
+
+    ``exp`` holds one scale exponent per leading slice ((E,) or any
+    (E,)-broadcastable keep-dims layout). Row padding is shared across
+    experts (slices are uniform in shape); padded rows are zeros, which
+    quantize to zero mantissas under every per-expert exponent, and the
+    stochastic noise ``u`` is zero-padded identically (floor(0 + 0) = 0).
+    """
+    if interpret is None:
+        interpret = not on_tpu()
+    E, M, N = x.shape
+    br = min(256, _round_up_multiple(M, _SUBLANE))
+    pm = (-M) % br
+    if pm:
+        x = jnp.pad(x, ((0, 0), (0, pm), (0, 0)))
+        if u is not None:
+            u = jnp.pad(u, ((0, 0), (0, pm), (0, 0)))
+    out = dfx_quantize_grouped(x, jnp.reshape(exp, (E,)), bits=bits, u=u,
+                               br=br, interpret=interpret)
+    return out[:, :M]
 
 
 def layernorm_pallas(xm: jax.Array, x_exp: jax.Array, gamma: jax.Array,

@@ -43,6 +43,60 @@ def bfp_matmul_tn_ref(xm: jax.Array, gm: jax.Array, out_exp: jax.Array) -> jax.A
     return acc.astype(jnp.float32) * jnp.exp2(out_exp.astype(jnp.float32))
 
 
+def bfp_matmul_batched_ref(xm: jax.Array, wm: jax.Array,
+                           out_exp: jax.Array) -> jax.Array:
+    """Batched NN oracle: ``(xm[e] @ wm[e]) * 2**out_exp[e]``.
+
+    xm: (E, M, K); wm: (E, K, N); out_exp: (E,) int32. Exact int32
+    accumulation, per-expert dequant scale.
+    """
+    acc = jax.lax.dot_general(
+        xm.astype(jnp.int32), wm.astype(jnp.int32),
+        (((2,), (1,)), ((0,), (0,))), preferred_element_type=jnp.int32)
+    scale = jnp.exp2(out_exp.astype(jnp.float32)).reshape(-1, 1, 1)
+    return acc.astype(jnp.float32) * scale
+
+
+def bfp_matmul_batched_nt_ref(gm: jax.Array, wm: jax.Array,
+                              out_exp: jax.Array) -> jax.Array:
+    """Batched NT oracle: ``(gm[e] @ wm[e]ᵀ) * 2**out_exp[e]``.
+
+    gm: (E, M, N); wm: (E, K, N) in forward layout; out_exp: (E,).
+    """
+    acc = jax.lax.dot_general(
+        gm.astype(jnp.int32), wm.astype(jnp.int32),
+        (((2,), (2,)), ((0,), (0,))), preferred_element_type=jnp.int32)
+    scale = jnp.exp2(out_exp.astype(jnp.float32)).reshape(-1, 1, 1)
+    return acc.astype(jnp.float32) * scale
+
+
+def bfp_matmul_batched_tn_ref(xm: jax.Array, gm: jax.Array,
+                              out_exp: jax.Array) -> jax.Array:
+    """Batched TN oracle: ``(xm[e]ᵀ @ gm[e]) * 2**out_exp[e]``.
+
+    xm: (E, M, K) in forward layout; gm: (E, M, N); out_exp: (E,).
+    """
+    acc = jax.lax.dot_general(
+        xm.astype(jnp.int32), gm.astype(jnp.int32),
+        (((1,), (1,)), ((0,), (0,))), preferred_element_type=jnp.int32)
+    scale = jnp.exp2(out_exp.astype(jnp.float32)).reshape(-1, 1, 1)
+    return acc.astype(jnp.float32) * scale
+
+
+def dfx_quantize_grouped_ref(x: jax.Array, exp: jax.Array, bits: int,
+                             u: jax.Array | None = None) -> jax.Array:
+    """Grouped-scale quantize oracle: slice ``e`` shifts by ``exp[e]``.
+
+    x: (E, M, N); exp: (E,). Mirrors ``dfx_quantize_ref`` per leading slice.
+    """
+    e = exp.astype(jnp.float32).reshape((-1,) + (1,) * (x.ndim - 1))
+    y = x.astype(jnp.float32) * jnp.exp2(-e)
+    y = jnp.floor(y + u) if u is not None else jnp.round(y)
+    lim = float(2 ** (bits - 1) - 1)
+    dt = jnp.int8 if bits <= 8 else (jnp.int16 if bits <= 16 else jnp.int32)
+    return jnp.clip(y, -lim, lim).astype(dt)
+
+
 def dfx_quantize_ref(x: jax.Array, exp: jax.Array, bits: int,
                      u: jax.Array | None = None) -> jax.Array:
     """Shift-and-round pass of the linear fixed-point mapping.

@@ -38,6 +38,28 @@ def checkpoint(f):
     return jax.checkpoint(f)
 
 
+def count_pallas_calls(jaxpr) -> int:
+    """Count ``pallas_call`` eqns in a (closed) jaxpr, recursing into
+    sub-jaxprs (pjit bodies, custom_vjp calls, ...).
+
+    Used by the MoE dispatch-count acceptance test and by
+    ``benchmarks/backend_compare.py`` to measure the batched expert-axis
+    kernels against the per-expert unrolled loop they replaced.
+    """
+    if hasattr(jaxpr, "jaxpr"):
+        jaxpr = jaxpr.jaxpr
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            n += 1
+        for val in eqn.params.values():
+            for v in (val if isinstance(val, (list, tuple)) else [val]):
+                sub = getattr(v, "jaxpr", v)
+                if hasattr(sub, "eqns"):
+                    n += count_pallas_calls(sub)
+    return n
+
+
 class analysis_unroll:
     """Context manager enabling full scan unrolling (roofline analysis)."""
 

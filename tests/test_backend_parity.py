@@ -15,13 +15,16 @@ import pytest
 
 from repro.core import dfx, int_ops
 from repro.core.qconfig import PRESETS, QuantConfig
+from repro.utils import count_pallas_calls
 
 KEY = jax.random.PRNGKey(0)
 
 
 def _pair(preset):
+    # backend pinned explicitly: the suite may run under REPRO_BACKEND=pallas
+    # (the CI backend matrix), which changes the *default* backend.
     sim = dataclasses.replace(QuantConfig.preset(preset),
-                              stochastic_grad=False)
+                              stochastic_grad=False, backend="sim")
     return sim, dataclasses.replace(sim, backend="pallas")
 
 
@@ -72,14 +75,22 @@ def test_linear_bwd_parity(preset):
         _assert_close(a, bb, bits, preset)
 
 
-@pytest.mark.parametrize("preset", ["int16", "int12", "int8"])
-def test_batched_linear_parity(preset):
+@pytest.mark.parametrize("E", [1, 8])
+@pytest.mark.parametrize("preset", PRESETS)
+def test_batched_linear_parity(preset, E):
+    """Every preset at E in {1, 8}: the batched pallas path (one kernel per
+    limb pair, expert axis on the grid) matches sim inside the Prop. 1 bound
+    for forward and both backward products."""
     sim, pal = _pair(preset)
-    x = jax.random.normal(KEY, (2, 8, 32)) * jnp.array([0.1, 10.0])[:, None, None]
-    w = jax.random.normal(jax.random.fold_in(KEY, 3), (2, 32, 16)) * 0.2
+    mags = jnp.exp2(jnp.linspace(-3.0, 3.0, E)).reshape(E, 1, 1)
+    x = jax.random.normal(KEY, (E, 8, 32)) * mags
+    w = jax.random.normal(jax.random.fold_in(KEY, 3), (E, 32, 16)) * 0.2
     ys = int_ops.int_batched_linear(x, w, None, sim)
     yp = int_ops.int_batched_linear(x, w, None, pal)
-    _assert_close(ys, yp, min(sim.act_bits, sim.weight_bits), preset)
+    if not sim.enabled:
+        np.testing.assert_array_equal(np.asarray(ys), np.asarray(yp))
+        return
+    _assert_close(ys, yp, min(sim.act_bits, sim.weight_bits), (preset, E))
 
     def loss(x, w, c):
         return jnp.sum(int_ops.int_batched_linear(x, w, None, c) ** 2)
@@ -88,7 +99,123 @@ def test_batched_linear_parity(preset):
     gp = jax.grad(loss, argnums=(0, 1))(x, w, pal)
     bits = min(sim.grad_bits, sim.weight_bits, sim.act_bits)
     for a, bb in zip(gs, gp):
-        _assert_close(a, bb, bits, preset)
+        _assert_close(a, bb, bits, (preset, E))
+
+
+def test_batched_linear_grad_e2e_vs_fp32():
+    """jax.grad end-to-end through int_batched_linear at E > 1: both
+    backends' gradients track the exact FP32 einsum gradients (the batched
+    analogue of the unbatched grad-level backend check)."""
+    E, C, K, N = 4, 8, 32, 16
+    x = jax.random.normal(KEY, (E, C, K))
+    w = jax.random.normal(jax.random.fold_in(KEY, 3), (E, K, N)) * 0.2
+    r = jax.random.normal(jax.random.fold_in(KEY, 4), (E, C, N))
+
+    g0 = jax.grad(lambda x, w: jnp.sum(
+        jnp.einsum("eck,ekn->ecn", x, w) * r), argnums=(0, 1))(x, w)
+    sim, pal = _pair("int16")
+    for cfg in (sim, pal):
+        g = jax.grad(lambda x, w, c=cfg: jnp.sum(
+            int_ops.int_batched_linear(x, w, None, c) * r),
+            argnums=(0, 1))(x, w)
+        for a, b in zip(g, g0):
+            rel = float(jnp.abs(a - b).max() / (jnp.abs(b).max() + 1e-12))
+            assert rel < 1e-3, (cfg.backend, rel)
+
+
+@pytest.mark.parametrize("preset", ["int8", "int16"])
+def test_batched_dispatch_count_independent_of_experts(preset):
+    """The acceptance property of the batched kernels: the number of
+    pallas_call dispatches traced for int_batched_linear is the same at
+    E=1 and E=8 (one batched launch per limb pair per direction, plus the
+    grouped quantizations) — no Python loop over the expert axis."""
+    _, pal = _pair(preset)
+
+    def counts(E):
+        x = jax.random.normal(KEY, (E, 8, 32))
+        w = jax.random.normal(jax.random.fold_in(KEY, 1), (E, 32, 16))
+        fwd = lambda x, w: int_ops.int_batched_linear(x, w, None, pal)
+        loss = lambda x, w: jnp.sum(fwd(x, w) ** 2)
+        return (count_pallas_calls(jax.make_jaxpr(fwd)(x, w)),
+                count_pallas_calls(
+                    jax.make_jaxpr(jax.grad(loss, argnums=(0, 1)))(x, w)))
+
+    assert counts(1) == counts(8)
+    nf, nb = counts(8)
+    limbs = {8: 1, 12: 2, 16: 3}
+    nl = limbs[pal.act_bits] * limbs[pal.weight_bits]
+    assert nf == 2 + nl      # quantize x, quantize w, one launch / limb pair
+
+
+@pytest.mark.parametrize("preset", ["int16", "int8"])
+def test_embedding_parity(preset):
+    """Bugfix regression: int_embedding used to bypass cfg.backend and
+    always quantize through the sim path."""
+    sim, pal = _pair(preset)
+    tbl = jax.random.normal(KEY, (100, 32))
+    ids = jnp.array([[1, 2, 3], [4, 5, 1]])
+    ys = int_ops.int_embedding(tbl, ids, None, sim)
+    yp = int_ops.int_embedding(tbl, ids, None, pal)
+    # both backends use RN quantization of the same table: bit-equal
+    np.testing.assert_array_equal(np.asarray(ys), np.asarray(yp))
+    gs = jax.grad(lambda t: jnp.sum(
+        int_ops.int_embedding(t, ids, None, sim) ** 2))(tbl)
+    gp = jax.grad(lambda t: jnp.sum(
+        int_ops.int_embedding(t, ids, None, pal) ** 2))(tbl)
+    _assert_close(gs, gp, min(sim.grad_bits, sim.weight_bits), preset)
+
+
+@pytest.mark.parametrize("preset", ["int16", "int8"])
+def test_dwconv_parity(preset):
+    """Bugfix regression: int_conv1d_depthwise used to bypass cfg.backend."""
+    sim, pal = _pair(preset)
+    x = jax.random.normal(KEY, (2, 10, 8))
+    w = jax.random.normal(jax.random.fold_in(KEY, 2), (4, 8))
+    ys = int_ops.int_conv1d_depthwise(x, w, None, sim)
+    yp = int_ops.int_conv1d_depthwise(x, w, None, pal)
+    np.testing.assert_array_equal(np.asarray(ys), np.asarray(yp))
+
+    def loss(x, w, c):
+        return jnp.sum(int_ops.int_conv1d_depthwise(x, w, None, c) ** 2)
+
+    gs = jax.grad(loss, argnums=(0, 1))(x, w, sim)
+    gp = jax.grad(loss, argnums=(0, 1))(x, w, pal)
+    for a, bb in zip(gs, gp):
+        _assert_close(a, bb, min(sim.grad_bits, sim.act_bits), preset)
+
+
+@pytest.mark.parametrize("backend", ["sim", "pallas"])
+def test_batched_linear_stochastic_fwd(backend):
+    """Bugfix regression: int_batched_linear used to ignore
+    cfg.stochastic_fwd (no key split, RN activations on both backends)."""
+    cfg = dataclasses.replace(QuantConfig.int8(), backend=backend,
+                              stochastic_fwd=True, stochastic_grad=False)
+    x = jax.random.normal(KEY, (2, 8, 32))
+    w = jax.random.normal(jax.random.fold_in(KEY, 3), (2, 32, 16)) * 0.2
+    y1 = int_ops.int_batched_linear(x, w, jax.random.fold_in(KEY, 10), cfg)
+    y2 = int_ops.int_batched_linear(x, w, jax.random.fold_in(KEY, 11), cfg)
+    y1b = int_ops.int_batched_linear(x, w, jax.random.fold_in(KEY, 10), cfg)
+    assert float(jnp.abs(y1 - y2).max()) > 0.0       # noise actually applied
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y1b))
+    # without a key the forward stays deterministic RN (serve-time contract)
+    rn = dataclasses.replace(cfg, stochastic_fwd=False)
+    np.testing.assert_array_equal(
+        np.asarray(int_ops.int_batched_linear(x, w, None, cfg)),
+        np.asarray(int_ops.int_batched_linear(x, w, None, rn)))
+
+
+def test_batched_linear_stochastic_fwd_cross_backend():
+    """Same key => both backends draw the identical activation noise; the
+    outputs differ only by accumulation rounding."""
+    k = jax.random.fold_in(KEY, 12)
+    x = jax.random.normal(KEY, (2, 8, 32))
+    w = jax.random.normal(jax.random.fold_in(KEY, 3), (2, 32, 16)) * 0.2
+    outs = []
+    for backend in ("sim", "pallas"):
+        cfg = dataclasses.replace(QuantConfig.int8(), backend=backend,
+                                  stochastic_fwd=True, stochastic_grad=False)
+        outs.append(int_ops.int_batched_linear(x, w, k, cfg))
+    _assert_close(outs[0], outs[1], 8, "stochastic_fwd")
 
 
 @pytest.mark.parametrize("preset", PRESETS)

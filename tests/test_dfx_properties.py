@@ -110,6 +110,56 @@ def test_storage_dtype(bits, expected):
     assert dfx.storage_dtype(bits) == expected
 
 
+def test_misaligned_out_exp_raises():
+    """Regression: _broadcast_out_exp used to silently return an unaligned
+    exponent when a per-axis scale neither was scalar nor matched the output
+    shape — the output could be scaled wrongly instead of failing."""
+    key = jax.random.PRNGKey(7)
+    # lhs (16, 8) quantized per-COLUMN: its scale varies along the contracted
+    # axis, so no output scale exists. Must raise, not mis-scale. (Out shape
+    # is (16, 8) too, so the old trailing-broadcast fallback would have
+    # silently applied the contracted-axis scales to the output columns.)
+    a = dfx.quantize(jax.random.normal(key, (16, 8)), 8, reduce_axes=(0,))
+    b = dfx.quantize(jax.random.normal(jax.random.fold_in(key, 1), (8, 8)), 8)
+    with pytest.raises(ValueError, match="contracted"):
+        dfx.dfx_matmul(a, b)
+    # rank-mismatched exponent layouts are rejected too
+    bad = dfx.DfxTensor(m=a.m, exp=jnp.zeros((16,), jnp.int32))
+    with pytest.raises(ValueError, match="keep-dims"):
+        dfx.dfx_matmul(bad, b)
+    with pytest.raises(ValueError, match="broadcast"):
+        dfx._broadcast_out_exp(jnp.zeros((3, 1), jnp.int32), (4, 5))
+
+
+def test_per_axis_scale_aligns_with_output_axes():
+    """Regression: a kept-dims scale on a non-standard contraction layout
+    used to broadcast positionally onto the WRONG output axis. Contracting
+    lhs axis 0, the lhs per-column scale (exp shape (1, C)) must scale
+    output *rows* (the lhs free axis), not columns."""
+    key = jax.random.PRNGKey(9)
+    x = jax.random.normal(key, (16, 8)) * jnp.exp2(jnp.arange(8.0) - 4)
+    a = dfx.quantize(x, 8, reduce_axes=(0,))          # exp shape (1, 8)
+    b = dfx.quantize(jax.random.normal(jax.random.fold_in(key, 1), (16, 8)), 8)
+    y = dfx.dfx_dot_general(a, b, (((0,), (0,)), ((), ())))
+    manual = (a.m.astype(jnp.float32).T @ b.m.astype(jnp.float32)) \
+        * 2.0 ** (a.exp.reshape(8, 1) + b.exp).astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(manual), rtol=1e-6)
+
+
+def test_per_row_lhs_scale_broadcasts_correctly():
+    """The legitimate per-axis case: a per-row lhs scale (constant over the
+    contraction) must scale each output row by its own exponent."""
+    key = jax.random.PRNGKey(8)
+    x = jax.random.normal(key, (4, 32)) * jnp.array([[1e-2], [1.0], [1e2], [5.0]])
+    w = jax.random.normal(jax.random.fold_in(key, 1), (32, 8)) * 0.1
+    qx = dfx.quantize(x, 8, reduce_axes=(1,))        # exp shape (4, 1)
+    qw = dfx.quantize(w, 8)
+    y = dfx.dfx_matmul(qx, qw)
+    manual = (qx.m.astype(jnp.float32) @ qw.m.astype(jnp.float32)) \
+        * 2.0 ** (qx.exp + qw.exp).astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(manual), rtol=0)
+
+
 def test_per_axis_scales():
     key = jax.random.PRNGKey(5)
     # rows with wildly different magnitudes: per-row scales must beat per-tensor

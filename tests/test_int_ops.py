@@ -120,6 +120,22 @@ def test_batched_linear_per_expert_scales():
         assert rel(y[e], y0[e]) < 2e-2, e
 
 
+@pytest.mark.parametrize("backend", ["sim", "pallas"])
+def test_batched_linear_matches_int_linear_forward_contract(backend):
+    """Regression: int_batched_linear used to ignore cfg.stochastic_fwd.
+    With E=1 it must follow int_linear's forward contract bit-for-bit —
+    same key split, same stochastic activation noise, RN weights."""
+    import dataclasses
+    cfg = dataclasses.replace(QuantConfig.int8(), backend=backend,
+                              stochastic_fwd=True, stochastic_grad=False)
+    x = jax.random.normal(KEY, (8, 32))
+    w = jax.random.normal(jax.random.fold_in(KEY, 1), (32, 16)) * 0.2
+    k = jax.random.fold_in(KEY, 5)
+    y_lin = int_ops.int_linear(x, w, None, k, cfg)
+    y_bat = int_ops.int_batched_linear(x[None], w[None], k, cfg)[0]
+    np.testing.assert_array_equal(np.asarray(y_lin), np.asarray(y_bat))
+
+
 def test_batched_linear_grads():
     cfg = QuantConfig.int16()
     x = jax.random.normal(KEY, (2, 8, 16))
