@@ -13,7 +13,10 @@ and reports
   interpreter, not the kernel),
 * an MoE section (``moe_dispatch``) counting traced ``pallas_call``
   dispatches of the batched expert-axis kernels vs the per-expert unrolled
-  loop they replaced — the dispatch-count reduction is ~E× per direction.
+  loop they replaced — the dispatch-count reduction is ~E× per direction,
+* a norm section (``norm_bwd``) timing the fused layer-norm / RMS-norm
+  forward+backward kernels against the sim backend and pinning their
+  dispatch counts (3 fwd / 5 fwd+bwd — no XLA statistics recompute).
 
 Emits a single JSON document (stdout, or ``--out FILE``):
 
@@ -42,6 +45,9 @@ SHAPES = ((32, 256, 128), (128, 128, 128), (96, 200, 72))
 
 #: (E, C, K, N): a Mixtral-ish expert FFN tile, scaled to CPU interpret mode.
 MOE_SHAPE = (8, 64, 256, 128)
+
+#: (R, D) norm shapes: a train-ish tile and a ragged row count (pad path).
+NORM_SHAPES = ((256, 512), (96, 384))
 
 
 def _time_us(fn, repeats: int) -> float:
@@ -149,6 +155,55 @@ def moe_dispatch_report(preset: str = "int8") -> dict:
     }
 
 
+def norm_bwd_report(preset: str = "int16", repeats: int = 3) -> dict:
+    """Fused norm fwd+bwd: traced dispatch counts + per-backend timing.
+
+    ``fwd_pallas_calls`` / ``fwd_bwd_pallas_calls`` pin the acceptance
+    property of the fused norm kernels: forward is 3 dispatches (quantize x,
+    quantize gamma, fused multi-output fwd) and forward+backward is 5
+    (+ quantize g, fused bwd) — the statistics are never recomputed in XLA.
+    Timings carry the same caveat as the rest of this file: off-TPU the
+    pallas numbers measure the interpreter (``pallas_interpret`` in the
+    top-level document), not the kernel.
+    """
+    key = jax.random.PRNGKey(0)
+    sim = dataclasses.replace(QuantConfig.preset(preset),
+                              stochastic_grad=False, backend="sim")
+    pal = dataclasses.replace(sim, backend="pallas")
+    layers = {}
+    for name in ("layernorm", "rmsnorm"):
+        rows = []
+        for (R, D) in NORM_SHAPES:
+            x = jax.random.normal(key, (R, D)) * 2.0
+            gm = jnp.ones((D,)) * 1.1
+            bt = jnp.zeros((D,))
+            if name == "layernorm":
+                apply = lambda x, c: int_ops.int_layernorm(x, gm, bt, None, c)
+            else:
+                apply = lambda x, c: int_ops.int_rmsnorm(x, gm, None, c)
+            fwd = {c.backend: jax.jit(lambda x, c=c: apply(x, c))
+                   for c in (sim, pal)}
+            bwd = {c.backend: jax.jit(jax.grad(
+                lambda x, c=c: jnp.sum(apply(x, c) ** 2))) for c in (sim, pal)}
+            ys, yp = fwd["sim"](x), fwd["pallas"](x)
+            gs, gp = bwd["sim"](x), bwd["pallas"](x)
+            rows.append({
+                "shape": [R, D],
+                "fwd_max_abs_diff": float(jnp.abs(ys - yp).max()),
+                "bwd_max_abs_diff": float(jnp.abs(gs - gp).max()),
+                "fwd_pallas_calls": count_pallas_calls(
+                    jax.make_jaxpr(lambda x: apply(x, pal))(x)),
+                "fwd_bwd_pallas_calls": count_pallas_calls(jax.make_jaxpr(
+                    jax.grad(lambda x: jnp.sum(apply(x, pal) ** 2)))(x)),
+                "sim_fwd_us": _time_us(lambda: fwd["sim"](x), repeats),
+                "pallas_fwd_us": _time_us(lambda: fwd["pallas"](x), repeats),
+                "sim_bwd_us": _time_us(lambda: bwd["sim"](x), repeats),
+                "pallas_bwd_us": _time_us(lambda: bwd["pallas"](x), repeats),
+            })
+        layers[name] = rows
+    return {"preset": preset, "layers": layers}
+
+
 def run(repeats: int = 3) -> dict:
     return {
         "task": "backend_compare",
@@ -156,6 +211,7 @@ def run(repeats: int = 3) -> dict:
         "pallas_interpret": jax.default_backend() != "tpu",
         "presets": [compare_preset(p, repeats) for p in PRESETS],
         "moe_dispatch": moe_dispatch_report(),
+        "norm_bwd": norm_bwd_report(repeats=repeats),
     }
 
 

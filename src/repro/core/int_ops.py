@@ -35,7 +35,11 @@ expert layer (``int_batched_linear``) uses the batched twins
 (``dfx_matmul_tiled_batched{,_nt,_tn}``, ``quantize_pallas_batched``): the
 expert axis rides a leading parallel grid dimension with an (E,)-vector
 scale-exponent operand, so each limb pair is ONE kernel dispatch for all E
-experts in both directions — no Python loop over experts.
+experts in both directions — no Python loop over experts.  The norm layers
+(``int_layernorm``, ``int_rmsnorm``) run forward AND backward through the
+fused kernels in ``repro.kernels.int_norm`` (multi-output forwards whose
+saved statistics are exactly what the kernel normalized with; backwards
+computing dx plus per-block parameter-gradient partials — DESIGN.md §2).
 """
 from __future__ import annotations
 
@@ -331,11 +335,29 @@ int_embedding.defvjp(_int_embedding_fwd, _int_embedding_bwd)
 # =========================================================================
 # Layer norm (and RMS norm)
 # =========================================================================
-# The reductions (sums for mean/var, and the three backward reductions) are
-# performed on integer-valued quantized tensors — exact integer arithmetic.
-# The rsqrt stays FP32 (precision-critical, same category as softmax in the
-# paper's recipe); Ghaffari et al. 2022 additionally integerize the sqrt via
-# Newton iterations — we document this as an FP32-kept op in DESIGN.md.
+# Backend semantics of the normalization reductions:
+#
+# * pallas — forward AND backward are fused kernels over the integer
+#   mantissas (kernels/int_norm.py).  The forward moment sums are exact
+#   int32-limb accumulations; the multi-output forward returns the
+#   value-domain (mu, rstd) it actually normalized with, and the backward
+#   kernel rebuilds xn from those residuals (bit-identical to the forward's
+#   xn) and computes dx plus per-block dgamma/dbeta partials in-kernel —
+#   dbeta's row sums are exact int32 over the gradient mantissas; the only
+#   XLA epilogue is the small cross-block partial combine.  The upstream
+#   gradient is quantized through the quantize kernel first.
+# * sim — the same reductions as value-domain FP32 reductions over the
+#   *quantized* (integer-valued, but FP32-stored) tensors: two-pass
+#   mean/var forward, XLA sums backward.  Integer-valued operands, float
+#   arithmetic — parity with pallas is bounded by f32 rounding, not exact.
+#
+# The rsqrt stays FP32 on both (precision-critical, same category as softmax
+# in the paper's recipe); Ghaffari et al. 2022 additionally integerize the
+# sqrt via Newton iterations — we document this as an FP32-kept op in
+# DESIGN.md.  Both layers honor cfg.stochastic_fwd with the same key-split
+# contract as the linear layers (activation noise from the first split,
+# grad-quantization noise from the remainder; bit-identical across backends
+# under the same key).
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
 def int_layernorm(x: Array, gamma: Array, beta: Array, key,
@@ -345,24 +367,23 @@ def int_layernorm(x: Array, gamma: Array, beta: Array, key,
 
 
 def _int_ln_fwd(x, gamma, beta, key, cfg: QuantConfig, eps):
-    if cfg.enabled and cfg.int_layernorm and cfg.backend == "pallas":
-        xq = _pallas_quantize(x, cfg.act_bits)
-        gv = dfx.dequantize(_pallas_quantize(gamma, cfg.weight_bits))
-        D = x.shape[-1]
-        y = kops.layernorm_pallas(xq.m.reshape(-1, D), xq.exp, gv, beta,
-                                  eps=eps).reshape(x.shape)
-        # the backward reductions need the statistics; recompute them from
-        # the saved mantissas (O(N) value-domain reduce, not a hot path)
-        xv = dfx.dequantize(xq)
-        mu = jnp.mean(xv, axis=-1, keepdims=True)
-        var = jnp.mean(jnp.square(xv - mu), axis=-1, keepdims=True)
-        rstd = jax.lax.rsqrt(var + eps)
-        return y, (xq, gv, rstd, mu, key)
     if cfg.enabled and cfg.int_layernorm:
-        xq = dfx.quantize(x, cfg.act_bits)
+        kf = None
+        if cfg.stochastic_fwd and key is not None:
+            key, kf = jax.random.split(key)
+        xq = _quantize(x, cfg.act_bits, cfg, stochastic=kf is not None, key=kf)
+        gv = dfx.dequantize(_quantize(gamma, cfg.weight_bits, cfg))
+        if cfg.backend == "pallas":
+            D = x.shape[-1]
+            y, mu, rstd = kops.layernorm_pallas(xq.m.reshape(-1, D), xq.exp,
+                                                gv, beta, eps=eps)
+            # the residual statistics ARE the kernel's outputs — the exact
+            # (mu, rstd) it normalized with, not a value-domain recompute
+            lead = x.shape[:-1]
+            return (y.reshape(x.shape),
+                    (xq, gv, rstd.reshape(lead + (1,)),
+                     mu.reshape(lead + (1,)), key))
         xv = dfx.dequantize(xq)
-        gq = dfx.quantize(gamma, cfg.weight_bits)
-        gv = dfx.dequantize(gq)
         res_x = xq
     else:
         xv, gv = x, gamma
@@ -377,6 +398,14 @@ def _int_ln_fwd(x, gamma, beta, key, cfg: QuantConfig, eps):
 
 def _int_ln_bwd(cfg: QuantConfig, eps, res, g):
     xr, gv, rstd, mu, key = res
+    if cfg.enabled and cfg.int_layernorm and cfg.backend == "pallas":
+        qg = _quant_grad(g, cfg, key)
+        D = g.shape[-1]
+        dx, dgamma, dbeta = kops.layernorm_bwd_pallas(
+            xr.m.reshape(-1, D), xr.exp, qg.m.reshape(-1, D), qg.exp,
+            gv, mu.reshape(-1, 1), rstd.reshape(-1, 1))
+        return (dx.reshape(g.shape), dgamma, dbeta,
+                _float0(key) if key is not None else None)
     if cfg.enabled and cfg.int_layernorm:
         xv = dfx.dequantize(xr)
         gq = dfx.dequantize(_quant_grad(g, cfg, key))
@@ -404,11 +433,18 @@ def int_rmsnorm(x: Array, gamma: Array, key, cfg: QuantConfig,
 
 def _int_rms_fwd(x, gamma, key, cfg: QuantConfig, eps):
     if cfg.enabled and cfg.int_layernorm:
-        # no fused rms kernel yet: quantization routes by backend, the
-        # normalization reductions stay in XLA (DESIGN.md §2)
-        xq = _quantize(x, cfg.act_bits, cfg)
-        xv = dfx.dequantize(xq)
+        kf = None
+        if cfg.stochastic_fwd and key is not None:
+            key, kf = jax.random.split(key)
+        xq = _quantize(x, cfg.act_bits, cfg, stochastic=kf is not None, key=kf)
         gv = dfx.dequantize(_quantize(gamma, cfg.weight_bits, cfg))
+        if cfg.backend == "pallas":
+            D = x.shape[-1]
+            y, rstd = kops.rmsnorm_pallas(xq.m.reshape(-1, D), xq.exp, gv,
+                                          eps=eps)
+            return (y.reshape(x.shape),
+                    (xq, gv, rstd.reshape(x.shape[:-1] + (1,)), key))
+        xv = dfx.dequantize(xq)
         res_x = xq
     else:
         xv, gv = x, gamma
@@ -421,6 +457,14 @@ def _int_rms_fwd(x, gamma, key, cfg: QuantConfig, eps):
 
 def _int_rms_bwd(cfg: QuantConfig, eps, res, g):
     xr, gv, rstd, key = res
+    if cfg.enabled and cfg.int_layernorm and cfg.backend == "pallas":
+        qg = _quant_grad(g, cfg, key)
+        D = g.shape[-1]
+        dx, dgamma = kops.rmsnorm_bwd_pallas(
+            xr.m.reshape(-1, D), xr.exp, qg.m.reshape(-1, D), qg.exp,
+            gv, rstd.reshape(-1, 1))
+        return (dx.reshape(g.shape), dgamma,
+                _float0(key) if key is not None else None)
     if cfg.enabled and cfg.int_layernorm:
         xv = dfx.dequantize(xr)
         gq = dfx.dequantize(_quant_grad(g, cfg, key))

@@ -29,6 +29,15 @@ Each layout has a **batched** twin for the MoE expert stack —
 the expert axis as a leading parallel grid dimension (the per-expert Python
 loop this replaces unrolled up to 9·E dispatches per direction).
 ``quantize_pallas_batched`` is the matching grouped-scale quantizer.
+
+The norm layers get four fused entry points over ``kernels/int_norm.py`` —
+``layernorm_pallas`` / ``layernorm_bwd_pallas`` and ``rmsnorm_pallas`` /
+``rmsnorm_bwd_pallas``: the forwards are multi-output (y + the value-domain
+statistics the kernel normalized with, saved as backward residuals), the
+backwards compute dx plus per-row-block dgamma/dbeta partials whose
+cross-block combine is the only XLA epilogue.  All four share the same
+row-padding pattern (zero rows are exact; padded gradient mantissas are
+zero, so padded rows contribute nothing to the parameter-gradient partials).
 """
 from __future__ import annotations
 
@@ -42,7 +51,8 @@ from repro.kernels.bfp_matmul import (bfp_matmul, bfp_matmul_batched,
                                       bfp_matmul_batched_tn, bfp_matmul_nt,
                                       bfp_matmul_tn)
 from repro.kernels.dfx_quant import dfx_quantize, dfx_quantize_grouped
-from repro.kernels.int_layernorm import int_layernorm_fwd
+from repro.kernels.int_norm import (int_layernorm_bwd, int_layernorm_fwd,
+                                    int_rmsnorm_bwd, int_rmsnorm_fwd)
 
 #: balanced-digit radix: every limb lies in [-64, 63], so limb products span
 #: at most 12 magnitude bits — safely inside the MXU int8×int8→int32 path.
@@ -324,16 +334,76 @@ def quantize_pallas_batched(x: jax.Array, exp: jax.Array, bits: int,
     return out[:, :M]
 
 
-def layernorm_pallas(xm: jax.Array, x_exp: jax.Array, gamma: jax.Array,
-                     beta: jax.Array, eps: float = 1e-5,
-                     interpret: bool | None = None) -> jax.Array:
-    if interpret is None:
-        interpret = not on_tpu()
-    R, D = xm.shape
-    br = min(8, _round_up_multiple(R, _SUBLANE))
+def _pad_rows(R: int, cap: int, *arrs):
+    """Row padding shared by the norm wrappers.
+
+    Picks ``br = min(cap, R rounded up to a sublane multiple)`` and zero-pads
+    every array's rows to a ``br`` multiple.  Zero rows are exact: their
+    statistics are computed but trimmed by the caller, and zero *gradient*
+    mantissa rows contribute nothing to the parameter-gradient partials (so
+    any fill value in padded mu/rstd rows is safe).  Returns ``(br, arrs)``.
+    """
+    br = min(cap, _round_up_multiple(R, _SUBLANE))
     pr = (-R) % br
     if pr:
-        xm = jnp.pad(xm, ((0, pr), (0, 0)))
-    out = int_layernorm_fwd(xm, x_exp, gamma, beta, br=br, eps=eps,
-                            interpret=interpret)
-    return out[:R]
+        arrs = tuple(jnp.pad(a, ((0, pr), (0, 0))) for a in arrs)
+    return br, arrs
+
+
+def layernorm_pallas(xm: jax.Array, x_exp: jax.Array, gamma: jax.Array,
+                     beta: jax.Array, eps: float = 1e-5,
+                     interpret: bool | None = None):
+    """Fused LN forward with row padding. Returns ``(y, mu, rstd)``.
+
+    ``mu``/``rstd`` (R, 1) are the value-domain statistics the kernel
+    normalized with — the backward residuals.
+    """
+    if interpret is None:
+        interpret = not on_tpu()
+    R = xm.shape[0]
+    br, (xm,) = _pad_rows(R, 8, xm)
+    y, mu, rstd = int_layernorm_fwd(xm, x_exp, gamma, beta, br=br, eps=eps,
+                                    interpret=interpret)
+    return y[:R], mu[:R], rstd[:R]
+
+
+def layernorm_bwd_pallas(xm: jax.Array, x_exp: jax.Array, gm: jax.Array,
+                         g_exp: jax.Array, gamma: jax.Array, mu: jax.Array,
+                         rstd: jax.Array, interpret: bool | None = None):
+    """Fused LN backward with row padding. Returns ``(dx, dgamma, dbeta)``.
+
+    The kernel emits per-row-block dgamma/dbeta partials; the cross-block
+    combine here is a small (R/br, D) XLA tree-sum.
+    """
+    if interpret is None:
+        interpret = not on_tpu()
+    R = xm.shape[0]
+    br, (xm, gm, mu, rstd) = _pad_rows(R, 64, xm, gm, mu, rstd)
+    dx, dgp, dbp = int_layernorm_bwd(xm, gm, x_exp, g_exp, gamma, mu, rstd,
+                                     br=br, interpret=interpret)
+    return dx[:R], jnp.sum(dgp, axis=0), jnp.sum(dbp, axis=0)
+
+
+def rmsnorm_pallas(xm: jax.Array, x_exp: jax.Array, gamma: jax.Array,
+                   eps: float = 1e-6, interpret: bool | None = None):
+    """Fused RMS-norm forward with row padding. Returns ``(y, rstd)``."""
+    if interpret is None:
+        interpret = not on_tpu()
+    R = xm.shape[0]
+    br, (xm,) = _pad_rows(R, 8, xm)
+    y, rstd = int_rmsnorm_fwd(xm, x_exp, gamma, br=br, eps=eps,
+                              interpret=interpret)
+    return y[:R], rstd[:R]
+
+
+def rmsnorm_bwd_pallas(xm: jax.Array, x_exp: jax.Array, gm: jax.Array,
+                       g_exp: jax.Array, gamma: jax.Array, rstd: jax.Array,
+                       interpret: bool | None = None):
+    """Fused RMS-norm backward with row padding. Returns ``(dx, dgamma)``."""
+    if interpret is None:
+        interpret = not on_tpu()
+    R = xm.shape[0]
+    br, (xm, gm, rstd) = _pad_rows(R, 64, xm, gm, rstd)
+    dx, dgp = int_rmsnorm_bwd(xm, gm, x_exp, g_exp, gamma, rstd, br=br,
+                              interpret=interpret)
+    return dx[:R], jnp.sum(dgp, axis=0)

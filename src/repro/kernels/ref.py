@@ -7,6 +7,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def bfp_matmul_ref(xm: jax.Array, wm: jax.Array, out_exp: jax.Array) -> jax.Array:
@@ -112,17 +113,88 @@ def dfx_quantize_ref(x: jax.Array, exp: jax.Array, bits: int,
     return jnp.clip(y, -lim, lim).astype(dt)
 
 
-def int_layernorm_ref(xm: jax.Array, x_exp: jax.Array, gamma: jax.Array,
-                      beta: jax.Array, eps: float = 1e-5) -> jax.Array:
-    """Fused integer layer-norm forward.
+def _f64(a) -> np.ndarray:
+    """Host float64 view — exact for any int16 mantissa moment sum.
 
-    Statistics are integer sums over the mantissas (scale factors cancel in
-    the normalized value up to the eps term, which we apply in the *value*
-    domain to match int_ops semantics); affine params are FP32.
-    xm: (..., D) integer mantissas, x_exp scalar.
+    The norm oracles accumulate in numpy float64 on purpose (the one
+    deviation from the pure-jnp rule): the moment budget is ``2(b-1) +
+    log2 D`` bits (~40 for int16 at D=768) and f64 holds 52, so these are
+    the exact ground truth the kernels' int32-limb accumulation is tested
+    against.  jnp can't provide that here — with x64 disabled it silently
+    truncates to f32, which is exactly the bug being guarded.
     """
-    xv = xm.astype(jnp.float32) * jnp.exp2(x_exp.astype(jnp.float32))
-    mu = jnp.mean(xv, axis=-1, keepdims=True)
-    var = jnp.mean(jnp.square(xv - mu), axis=-1, keepdims=True)
-    xn = (xv - mu) * jax.lax.rsqrt(var + eps)
-    return xn * gamma + beta
+    return np.asarray(a, np.float64)
+
+
+def int_layernorm_fwd_ref(xm: jax.Array, x_exp: jax.Array, gamma: jax.Array,
+                          beta: jax.Array, eps: float = 1e-5):
+    """Multi-output fused LN forward oracle: one-pass integer statistics.
+
+    Mirrors the kernel semantics — mantissa-domain ``E[x²] − μ²`` moments,
+    value-domain eps guard and rsqrt — with exact f64 sums.  Returns
+    ``(y, mu, rstd)``; mu/rstd are the value-domain per-row statistics.
+    """
+    x = _f64(xm)
+    d = x.shape[-1]
+    scale = 2.0 ** float(np.asarray(x_exp))
+    mu_m = x.sum(-1, keepdims=True) / d
+    # clamp like the kernel: the one-pass variance is >= 0 in exact
+    # arithmetic but rounding can push a constant row microscopically negative
+    var_m = np.maximum((x * x).sum(-1, keepdims=True) / d - mu_m * mu_m, 0.0)
+    mu = mu_m * scale
+    rstd = 1.0 / np.sqrt(var_m * scale * scale + eps)
+    xn = (x * scale - mu) * rstd
+    y = xn * _f64(gamma) + _f64(beta)
+    return (jnp.asarray(y, jnp.float32), jnp.asarray(mu, jnp.float32),
+            jnp.asarray(rstd, jnp.float32))
+
+
+def int_layernorm_bwd_ref(xm: jax.Array, x_exp: jax.Array, gm: jax.Array,
+                          g_exp: jax.Array, gamma: jax.Array, mu: jax.Array,
+                          rstd: jax.Array):
+    """Fused LN backward oracle: ``(dx, dgamma, dbeta)`` in exact f64.
+
+    ``xn`` is rebuilt from the integer activation mantissas and the
+    forward-saved statistics — the same contract as the kernel.
+    """
+    x, g = _f64(xm), _f64(gm)
+    xs = 2.0 ** float(np.asarray(x_exp))
+    gs = 2.0 ** float(np.asarray(g_exp))
+    d = x.shape[-1]
+    xn = (x * xs - _f64(mu)) * _f64(rstd)
+    gq = g * gs
+    gg = gq * _f64(gamma)
+    mean_gg = gg.sum(-1, keepdims=True) / d
+    mean_ggxn = (gg * xn).sum(-1, keepdims=True) / d
+    dx = _f64(rstd) * (gg - mean_gg - xn * mean_ggxn)
+    return (jnp.asarray(dx, jnp.float32),
+            jnp.asarray((gq * xn).sum(0), jnp.float32),
+            jnp.asarray(gq.sum(0), jnp.float32))
+
+
+def int_rmsnorm_fwd_ref(xm: jax.Array, x_exp: jax.Array, gamma: jax.Array,
+                        eps: float = 1e-6):
+    """Multi-output fused RMS-norm forward oracle. Returns ``(y, rstd)``."""
+    x = _f64(xm)
+    d = x.shape[-1]
+    scale = 2.0 ** float(np.asarray(x_exp))
+    ms = (x * x).sum(-1, keepdims=True) / d * scale * scale
+    rstd = 1.0 / np.sqrt(ms + eps)
+    y = x * scale * rstd * _f64(gamma)
+    return jnp.asarray(y, jnp.float32), jnp.asarray(rstd, jnp.float32)
+
+
+def int_rmsnorm_bwd_ref(xm: jax.Array, x_exp: jax.Array, gm: jax.Array,
+                        g_exp: jax.Array, gamma: jax.Array, rstd: jax.Array):
+    """Fused RMS-norm backward oracle: ``(dx, dgamma)`` in exact f64."""
+    x, g = _f64(xm), _f64(gm)
+    xs = 2.0 ** float(np.asarray(x_exp))
+    gs = 2.0 ** float(np.asarray(g_exp))
+    d = x.shape[-1]
+    xn = x * xs * _f64(rstd)
+    gq = g * gs
+    gg = gq * _f64(gamma)
+    mean_ggxn = (gg * xn).sum(-1, keepdims=True) / d
+    dx = _f64(rstd) * (gg - xn * mean_ggxn)
+    return (jnp.asarray(dx, jnp.float32),
+            jnp.asarray((gq * xn).sum(0), jnp.float32))

@@ -38,26 +38,38 @@ def checkpoint(f):
     return jax.checkpoint(f)
 
 
-def count_pallas_calls(jaxpr) -> int:
-    """Count ``pallas_call`` eqns in a (closed) jaxpr, recursing into
-    sub-jaxprs (pjit bodies, custom_vjp calls, ...).
+def count_eqns(jaxpr, name: str, *, recurse_pallas: bool = True) -> int:
+    """Count ``name`` eqns in a (closed) jaxpr, recursing into sub-jaxprs
+    (pjit bodies, custom_vjp calls, ...).
 
-    Used by the MoE dispatch-count acceptance test and by
-    ``benchmarks/backend_compare.py`` to measure the batched expert-axis
-    kernels against the per-expert unrolled loop they replaced.
+    ``recurse_pallas=False`` skips ``pallas_call`` bodies — used to assert
+    that an op (e.g. the norm layers' rsqrt) happens only *inside* fused
+    kernels, never as an XLA recompute.
     """
     if hasattr(jaxpr, "jaxpr"):
         jaxpr = jaxpr.jaxpr
     n = 0
     for eqn in jaxpr.eqns:
-        if eqn.primitive.name == "pallas_call":
+        if eqn.primitive.name == name:
             n += 1
+        if eqn.primitive.name == "pallas_call" and not recurse_pallas:
+            continue
         for val in eqn.params.values():
             for v in (val if isinstance(val, (list, tuple)) else [val]):
                 sub = getattr(v, "jaxpr", v)
                 if hasattr(sub, "eqns"):
-                    n += count_pallas_calls(sub)
+                    n += count_eqns(sub, name, recurse_pallas=recurse_pallas)
     return n
+
+
+def count_pallas_calls(jaxpr) -> int:
+    """Count ``pallas_call`` eqns in a (closed) jaxpr.
+
+    Used by the MoE and norm dispatch-count acceptance tests and by
+    ``benchmarks/backend_compare.py`` to measure the batched expert-axis
+    kernels against the per-expert unrolled loop they replaced.
+    """
+    return count_eqns(jaxpr, "pallas_call")
 
 
 class analysis_unroll:

@@ -8,7 +8,6 @@ from repro.core import dfx
 from repro.kernels import ops, ref
 from repro.kernels.bfp_matmul import bfp_matmul
 from repro.kernels.dfx_quant import dfx_quantize
-from repro.kernels.int_layernorm import int_layernorm_fwd
 
 KEY = jax.random.PRNGKey(0)
 
@@ -86,17 +85,24 @@ def test_quantize_kernel_stochastic_matches_oracle(bits):
     np.testing.assert_array_equal(np.asarray(m), np.asarray(mr))
 
 
-@pytest.mark.parametrize("R,D", [(16, 128), (8, 256), (24, 64)])
+@pytest.mark.parametrize("R,D", [(16, 128), (8, 256), (24, 64), (10, 96)])
 @pytest.mark.parametrize("bits", [12, 16])
 def test_layernorm_kernel(R, D, bits):
+    """Multi-output fused LN fwd vs the exact-f64 oracle: y AND the
+    (mu, rstd) statistics the kernel normalized with (the non-multiple-of-8
+    row count exercises the padding path)."""
     x = jax.random.normal(KEY, (R, D)) * 2
     t = dfx.quantize(x, bits)
     gm = jax.random.normal(jax.random.fold_in(KEY, 3), (D,))
     bt = jax.random.normal(jax.random.fold_in(KEY, 4), (D,))
-    y = ops.layernorm_pallas(t.m, t.exp, gm, bt, interpret=True)
-    yr = ref.int_layernorm_ref(t.m, t.exp, gm, bt)
+    y, mu, rstd = ops.layernorm_pallas(t.m, t.exp, gm, bt, interpret=True)
+    yr, mur, rstdr = ref.int_layernorm_fwd_ref(t.m, t.exp, gm, bt)
     np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
                                rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(mu), np.asarray(mur),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(rstd), np.asarray(rstdr),
+                               rtol=1e-6, atol=0)
 
 
 @pytest.mark.parametrize("E", [1, 4])

@@ -1,0 +1,334 @@
+"""Fused Pallas norm kernels: backward, statistics contracts, dispatch.
+
+Covers the statistics-mismatch regression (forward-saved mu/rstd must be
+bit-identical to what the kernel normalized with), the 16-bit ``s2``
+exactness fix, sim-vs-pallas backward parity for both norm layers at every
+preset (including non-multiple-of-8 row counts exercising the padding
+path), grad-level checks vs FP32, the stochastic-forward key-split
+contract, and the acceptance property that the pallas norm path issues only
+fused kernels + quantize-kernel calls (no XLA statistics recompute).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dfx, int_ops
+from repro.core.qconfig import PRESETS, QuantConfig
+from repro.kernels import ops as kops
+from repro.kernels import ref
+from repro.utils import count_eqns, count_pallas_calls
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _pair(preset):
+    sim = dataclasses.replace(QuantConfig.preset(preset),
+                              stochastic_grad=False, backend="sim")
+    return sim, dataclasses.replace(sim, backend="pallas")
+
+
+# =========================================================================
+# Kernel vs exact-f64 oracle
+# =========================================================================
+
+@pytest.mark.parametrize("R,D", [(16, 128), (21, 64), (10, 96)])
+@pytest.mark.parametrize("bits", [8, 12, 16])
+def test_ln_bwd_kernel_vs_oracle(R, D, bits):
+    x = jax.random.normal(KEY, (R, D)) * 2
+    g = jax.random.normal(jax.random.fold_in(KEY, 5), (R, D))
+    t, qg = dfx.quantize(x, bits), dfx.quantize(g, bits)
+    gm = jax.random.normal(jax.random.fold_in(KEY, 3), (D,))
+    bt = jnp.zeros((D,))
+    _, mu, rstd = kops.layernorm_pallas(t.m, t.exp, gm, bt, interpret=True)
+    dx, dgamma, dbeta = kops.layernorm_bwd_pallas(
+        t.m, t.exp, qg.m, qg.exp, gm, mu, rstd, interpret=True)
+    dxr, dgr, dbr = ref.int_layernorm_bwd_ref(t.m, t.exp, qg.m, qg.exp,
+                                              gm, mu, rstd)
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(dxr),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(dgamma), np.asarray(dgr),
+                               rtol=1e-4, atol=1e-4)
+    # dbeta partials are exact int32 sums of the gradient mantissas — the
+    # only rounding is the per-block f32 scale multiply and tree combine
+    np.testing.assert_allclose(np.asarray(dbeta), np.asarray(dbr),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("R,D", [(16, 128), (21, 64), (10, 96)])
+@pytest.mark.parametrize("bits", [8, 12, 16])
+def test_rms_kernels_vs_oracle(R, D, bits):
+    x = jax.random.normal(KEY, (R, D)) * 2
+    g = jax.random.normal(jax.random.fold_in(KEY, 5), (R, D))
+    t, qg = dfx.quantize(x, bits), dfx.quantize(g, bits)
+    gm = jax.random.normal(jax.random.fold_in(KEY, 3), (D,))
+    y, rstd = kops.rmsnorm_pallas(t.m, t.exp, gm, interpret=True)
+    yr, rstdr = ref.int_rmsnorm_fwd_ref(t.m, t.exp, gm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(rstd), np.asarray(rstdr),
+                               rtol=1e-6, atol=0)
+    dx, dgamma = kops.rmsnorm_bwd_pallas(t.m, t.exp, qg.m, qg.exp, gm, rstd,
+                                         interpret=True)
+    dxr, dgr = ref.int_rmsnorm_bwd_ref(t.m, t.exp, qg.m, qg.exp, gm, rstd)
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(dxr),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(dgamma), np.asarray(dgr),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("norm", ["layernorm", "rmsnorm"])
+def test_s2_exact_for_int16_mantissas(norm):
+    """The 16-bit exactness regression: ``Σx²`` of int16 mantissas at
+    D=768 needs ~40 accumulator bits.  The old direct f32 sum silently
+    rounded (each product up to 2^30 already exceeds f32's 24 mantissa
+    bits, ~1e-5 relative statistics error); the int32-limb accumulation
+    must track the exact f64 oracle to f32 round-off."""
+    D = 768
+    xm = jax.random.randint(KEY, (16, D), -32767, 32768,
+                            jnp.int32).astype(jnp.int16)
+    exp = jnp.int32(-15)
+    gm = jnp.ones((D,))
+    if norm == "layernorm":
+        _, _, rstd = kops.layernorm_pallas(xm, exp, gm, jnp.zeros((D,)),
+                                           interpret=True)
+        _, _, rstdr = ref.int_layernorm_fwd_ref(xm, exp, gm, jnp.zeros((D,)))
+    else:
+        _, rstd = kops.rmsnorm_pallas(xm, exp, gm, interpret=True)
+        _, rstdr = ref.int_rmsnorm_fwd_ref(xm, exp, gm)
+    np.testing.assert_allclose(np.asarray(rstd), np.asarray(rstdr),
+                               rtol=2e-6, atol=0)
+
+
+def test_ln_constant_row_stays_finite():
+    """One-pass variance cancellation guard: a constant row has true
+    variance 0 but the f32 recombination of the exact moments can come out
+    slightly *negative* (beyond the eps guard at large mantissa scales) —
+    without the kernel's clamp the rsqrt returns NaN and the whole batch
+    (forward residuals included) is poisoned.  sim's two-pass variance is
+    nonnegative by construction, so this was also a backend-parity break."""
+    sim, pal = _pair("int16")
+    D = 768
+    # row 0: constant (mantissa 11589 at exp -5 — computed var_m = -16 in
+    # f32, i.e. -0.0156 in the value domain, far past eps); row 1 pins the
+    # shared scale exponent at -5 via its larger max-abs; row 2 is generic.
+    # D=768's non-power-of-two divisions are what push the rounding negative
+    # (at D=64 every intermediate happens to stay exact).
+    x = jnp.stack([jnp.full((D,), 11589.0 * 2.0 ** -5),
+                   jnp.linspace(-1000.0, 1000.0, D),
+                   jax.random.normal(KEY, (D,)) * 100.0])
+    gm, bt = jnp.ones((D,)) * 1.1, jnp.zeros((D,))
+    r = jax.random.normal(jax.random.fold_in(KEY, 2), x.shape)
+    ys = int_ops.int_layernorm(x, gm, bt, None, sim)
+    yp = int_ops.int_layernorm(x, gm, bt, None, pal)
+    assert np.isfinite(np.asarray(yp)).all()
+    np.testing.assert_allclose(np.asarray(ys), np.asarray(yp),
+                               rtol=2e-4, atol=2e-4)
+    loss = lambda x, c: jnp.sum(int_ops.int_layernorm(x, gm, bt, None, c) * r)
+    gp = jax.grad(loss)(x, pal)
+    assert np.isfinite(np.asarray(gp)).all()
+
+
+# =========================================================================
+# Statistics-mismatch regression: residuals ARE the kernel's statistics
+# =========================================================================
+
+def test_ln_saved_stats_bit_match_kernel():
+    """The forward-saved (mu, rstd) residuals must be bit-identical to the
+    statistics the kernel normalized with — NOT a value-domain recompute
+    (the old two-pass ``mean(square(xv - mu))`` does not bit-match the
+    kernel's one-pass exact-moment statistics, so backward differentiated a
+    slightly different forward).  Would have caught the original bug."""
+    _, pal = _pair("int16")
+    D = 64
+    x = jax.random.normal(KEY, (4, 8, D)) * 2.0
+    gm, bt = jnp.ones((D,)) * 1.3, jnp.zeros((D,)) + 0.2
+    _, res = int_ops._int_ln_fwd(x, gm, bt, None, pal, 1e-5)
+    xq, gv, rstd, mu, _ = res
+    yk, muk, rstdk = kops.layernorm_pallas(xq.m.reshape(-1, D), xq.exp,
+                                           gv, bt, eps=1e-5)
+    np.testing.assert_array_equal(np.asarray(rstd).reshape(-1, 1),
+                                  np.asarray(rstdk))
+    np.testing.assert_array_equal(np.asarray(mu).reshape(-1, 1),
+                                  np.asarray(muk))
+    # the old recompute provably differs at the bit level on this input
+    xv = dfx.dequantize(xq)
+    mu2 = jnp.mean(xv, axis=-1, keepdims=True)
+    var2 = jnp.mean(jnp.square(xv - mu2), axis=-1, keepdims=True)
+    rstd2 = jax.lax.rsqrt(var2 + 1e-5)
+    assert np.any(np.asarray(rstd2) != np.asarray(rstd))
+
+
+def test_rms_saved_rstd_bit_match_kernel():
+    _, pal = _pair("int16")
+    D = 64
+    x = jax.random.normal(KEY, (4, 8, D)) * 2.0
+    gm = jnp.ones((D,)) * 1.3
+    _, res = int_ops._int_rms_fwd(x, gm, None, pal, 1e-6)
+    xq, gv, rstd, _ = res
+    _, rstdk = kops.rmsnorm_pallas(xq.m.reshape(-1, D), xq.exp, gv, eps=1e-6)
+    np.testing.assert_array_equal(np.asarray(rstd).reshape(-1, 1),
+                                  np.asarray(rstdk))
+
+
+# =========================================================================
+# Backend parity, every preset, padding path included
+# =========================================================================
+
+@pytest.mark.parametrize("shape", [(4, 8, 64), (3, 7, 64)])
+@pytest.mark.parametrize("norm", ["layernorm", "rmsnorm"])
+@pytest.mark.parametrize("preset", PRESETS)
+def test_norm_backward_parity(preset, norm, shape):
+    """sim-vs-pallas fwd+bwd parity for both norm layers at every preset;
+    the (3, 7, ·) shape's 21 rows exercise the fwd (br=8) and bwd row
+    padding.  The 16-bit presets are the regression the old inexact ``s2``
+    accumulation perturbed."""
+    sim, pal = _pair(preset)
+    x = jax.random.normal(KEY, shape) * 2.0
+    gm = jnp.ones((shape[-1],)) * 1.3
+    bt = jnp.zeros((shape[-1],)) + 0.2
+    r = jax.random.normal(jax.random.fold_in(KEY, 9), shape)
+
+    if norm == "layernorm":
+        apply = lambda x, gm, c: int_ops.int_layernorm(x, gm, bt, None, c)
+    else:
+        apply = lambda x, gm, c: int_ops.int_rmsnorm(x, gm, None, c)
+
+    ys, yp = apply(x, gm, sim), apply(x, gm, pal)
+    if not sim.enabled:
+        np.testing.assert_array_equal(np.asarray(ys), np.asarray(yp))
+        return
+    np.testing.assert_allclose(np.asarray(ys), np.asarray(yp),
+                               rtol=2e-4, atol=2e-4)
+    loss = lambda x, gm, c: jnp.sum(apply(x, gm, c) * r)
+    gs = jax.grad(loss, argnums=(0, 1))(x, gm, sim)
+    gp = jax.grad(loss, argnums=(0, 1))(x, gm, pal)
+    for a, b in zip(gs, gp):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("norm", ["layernorm", "rmsnorm"])
+@pytest.mark.parametrize("backend", ["sim", "pallas"])
+def test_norm_grad_e2e_vs_fp32(norm, backend):
+    """jax.grad end-to-end through the integer norm layers tracks the exact
+    FP32 autodiff gradients on both backends."""
+    cfg = dataclasses.replace(QuantConfig.int16(), stochastic_grad=False,
+                              backend=backend)
+    D = 64
+    x = jax.random.normal(KEY, (4, 8, D)) * 1.5
+    gm = jnp.ones((D,)) * 1.2
+    bt = jnp.zeros((D,)) + 0.1
+    r = jax.random.normal(jax.random.fold_in(KEY, 4), x.shape)
+
+    if norm == "layernorm":
+        ours = lambda x, gm: jnp.sum(
+            int_ops.int_layernorm(x, gm, bt, None, cfg) * r)
+
+        def fp32(x, gm):
+            mu = x.mean(-1, keepdims=True)
+            v = ((x - mu) ** 2).mean(-1, keepdims=True)
+            return jnp.sum(((x - mu) * jax.lax.rsqrt(v + 1e-5) * gm + bt) * r)
+    else:
+        ours = lambda x, gm: jnp.sum(int_ops.int_rmsnorm(x, gm, None, cfg) * r)
+
+        def fp32(x, gm):
+            ms = (x ** 2).mean(-1, keepdims=True)
+            return jnp.sum(x * jax.lax.rsqrt(ms + 1e-6) * gm * r)
+
+    g = jax.grad(ours, argnums=(0, 1))(x, gm)
+    g0 = jax.grad(fp32, argnums=(0, 1))(x, gm)
+    for a, b in zip(g, g0):
+        rel = float(jnp.abs(a - b).max() / (jnp.abs(b).max() + 1e-12))
+        assert rel < 2e-3, (norm, backend, rel)
+
+
+# =========================================================================
+# Stochastic forward (key-split contract, bugfix regression)
+# =========================================================================
+
+@pytest.mark.parametrize("norm", ["layernorm", "rmsnorm"])
+@pytest.mark.parametrize("backend", ["sim", "pallas"])
+def test_norm_stochastic_fwd(norm, backend):
+    """Bugfix regression: the norm layers used to ignore cfg.stochastic_fwd
+    (no key split, RN activations on both backends)."""
+    cfg = dataclasses.replace(QuantConfig.int8(), backend=backend,
+                              stochastic_fwd=True, stochastic_grad=False)
+    D = 64
+    x = jax.random.normal(KEY, (2, 8, D))
+    gm, bt = jnp.ones((D,)) * 1.1, jnp.zeros((D,))
+    if norm == "layernorm":
+        apply = lambda k, c: int_ops.int_layernorm(x, gm, bt, k, c)
+    else:
+        apply = lambda k, c: int_ops.int_rmsnorm(x, gm, k, c)
+    y1 = apply(jax.random.fold_in(KEY, 10), cfg)
+    y2 = apply(jax.random.fold_in(KEY, 11), cfg)
+    y1b = apply(jax.random.fold_in(KEY, 10), cfg)
+    assert float(jnp.abs(y1 - y2).max()) > 0.0       # noise actually applied
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y1b))
+    # without a key the forward stays deterministic RN (serve-time contract)
+    rn = dataclasses.replace(cfg, stochastic_fwd=False)
+    np.testing.assert_array_equal(np.asarray(apply(None, cfg)),
+                                  np.asarray(apply(None, rn)))
+
+
+@pytest.mark.parametrize("norm", ["layernorm", "rmsnorm"])
+def test_norm_stochastic_fwd_cross_backend(norm):
+    """Same key => both backends draw identical activation noise (bit-equal
+    mantissas); outputs differ only by statistics rounding."""
+    k = jax.random.fold_in(KEY, 12)
+    D = 64
+    x = jax.random.normal(KEY, (2, 8, D))
+    gm, bt = jnp.ones((D,)) * 1.1, jnp.zeros((D,))
+    outs = []
+    for backend in ("sim", "pallas"):
+        cfg = dataclasses.replace(QuantConfig.int8(), backend=backend,
+                                  stochastic_fwd=True, stochastic_grad=False)
+        if norm == "layernorm":
+            outs.append(int_ops.int_layernorm(x, gm, bt, k, cfg))
+        else:
+            outs.append(int_ops.int_rmsnorm(x, gm, k, cfg))
+    np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(outs[1]),
+                               rtol=2e-4, atol=2e-4)
+
+
+# =========================================================================
+# Acceptance: fused kernels only — no XLA statistics recompute
+# =========================================================================
+
+@pytest.mark.parametrize("norm", ["layernorm", "rmsnorm"])
+@pytest.mark.parametrize("preset", ["int8", "int16"])
+def test_norm_pallas_dispatch_and_no_xla_stats(preset, norm):
+    """On backend='pallas' the norm layers issue ONLY fused norm kernels and
+    quantize-kernel calls: forward = 3 dispatches (quantize x, quantize
+    gamma, fused fwd), forward+backward = 5 (+ quantize g, fused bwd), and
+    no ``rsqrt`` appears outside a pallas_call — the statistics are never
+    recomputed in XLA from dequantized activations."""
+    _, pal = _pair(preset)
+    D = 64
+    x = jax.random.normal(KEY, (3, 8, D))
+    gm = jnp.ones((D,)) * 1.2
+    bt = jnp.zeros((D,))
+    if norm == "layernorm":
+        fwd = lambda x, gm: int_ops.int_layernorm(x, gm, bt, None, pal)
+    else:
+        fwd = lambda x, gm: int_ops.int_rmsnorm(x, gm, None, pal)
+    loss = lambda x, gm: jnp.sum(fwd(x, gm) ** 2)
+
+    jx_fwd = jax.make_jaxpr(fwd)(x, gm)
+    jx_bwd = jax.make_jaxpr(jax.grad(loss, argnums=(0, 1)))(x, gm)
+    assert count_pallas_calls(jx_fwd) == 3
+    assert count_pallas_calls(jx_bwd) == 5
+    assert count_eqns(jx_fwd, "rsqrt", recurse_pallas=False) == 0
+    assert count_eqns(jx_bwd, "rsqrt", recurse_pallas=False) == 0
+    # the sim backend by contrast does keep its statistics in XLA
+    sim, _ = _pair(preset)
+    if norm == "layernorm":
+        jx_sim = jax.make_jaxpr(
+            lambda x: int_ops.int_layernorm(x, gm, bt, None, sim))(x)
+    else:
+        jx_sim = jax.make_jaxpr(
+            lambda x: int_ops.int_rmsnorm(x, gm, None, sim))(x)
+    assert count_eqns(jx_sim, "rsqrt", recurse_pallas=False) == 1
