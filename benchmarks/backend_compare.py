@@ -16,7 +16,13 @@ and reports
   loop they replaced — the dispatch-count reduction is ~E× per direction,
 * a norm section (``norm_bwd``) timing the fused layer-norm / RMS-norm
   forward+backward kernels against the sim backend and pinning their
-  dispatch counts (3 fwd / 5 fwd+bwd — no XLA statistics recompute).
+  dispatch counts (3 fwd / 5 fwd+bwd — no XLA statistics recompute),
+* a matmul section (``matmul_dispatch``): traced ``pallas_call`` counts and
+  timings per direction (NN/NT/TN and batched E=8) per bit-width — ONE
+  dispatch per direction at every width since the single-dispatch limb
+  fusion (was ``limbs²`` ≤ 9) — plus the HBM-bytes traffic model from
+  ``benchmarks/roofline.py`` (off-TPU the timings measure the Pallas
+  interpreter, so the byte model is what makes them interpretable).
 
 Emits a single JSON document (stdout, or ``--out FILE``):
 
@@ -112,10 +118,10 @@ def compare_preset(preset: str, repeats: int = 3) -> dict:
 def moe_dispatch_report(preset: str = "int8") -> dict:
     """Traced pallas_call dispatch counts for the MoE expert matmuls.
 
-    ``batched_*`` is the shipped path (expert axis on the kernel grid, one
-    launch per limb pair per direction); ``unrolled_fwd`` re-creates the
-    per-expert Python loop this PR removed, so the reduction factor is
-    measured, not assumed.
+    ``batched_*`` is the shipped path (expert axis on the kernel grid, ONE
+    launch per direction covering every expert and limb pair);
+    ``unrolled_fwd`` re-creates the per-expert Python loop PR 2 removed, so
+    the reduction factor is measured, not assumed.
     """
     E, C, K, N = MOE_SHAPE
     key = jax.random.PRNGKey(0)
@@ -153,6 +159,68 @@ def moe_dispatch_report(preset: str = "int8") -> dict:
         },
         "fwd_dispatch_reduction": n_unrolled / n_fwd,
     }
+
+
+def matmul_dispatch_report(repeats: int = 3) -> dict:
+    """Traced ``pallas_call`` counts + timings per matmul direction/bit-width.
+
+    The acceptance property of the single-dispatch limb fusion: every
+    direction (forward NN, backward NT/TN — unbatched and batched at E=8)
+    traces exactly ONE kernel launch at every bit-width; ``old_dispatches``
+    records the ``limbs²`` launches the removed per-pair loop issued.  The
+    ``hbm_bytes`` entries come from the traffic model in
+    ``benchmarks/roofline.py`` (fused vs unfused, same block shapes).
+    """
+    from benchmarks.roofline import matmul_hbm_bytes
+    from repro.kernels.dfx_quant import n_limbs
+
+    key = jax.random.PRNGKey(0)
+    M, K, N = 256, 384, 128
+    E = 8
+    x = jax.random.normal(key, (M, K)) * 2.0
+    w = jax.random.normal(jax.random.fold_in(key, 1), (K, N)) * 0.3
+    g = jax.random.normal(jax.random.fold_in(key, 2), (M, N))
+    xb = jax.random.normal(jax.random.fold_in(key, 3), (E, M, K))
+    wb = jax.random.normal(jax.random.fold_in(key, 4), (E, K, N)) * 0.3
+    gb = jax.random.normal(jax.random.fold_in(key, 5), (E, M, N))
+
+    out = {"shape": {"M": M, "K": K, "N": N, "E": E}, "bitwidths": {}}
+    for bits in (8, 12, 16):
+        L = n_limbs(bits)
+        qx, qw, qg = (dfx.quantize(x, bits), dfx.quantize(w, bits),
+                      dfx.quantize(g, bits))
+        qxb = dfx.quantize(xb, bits, reduce_axes=(1, 2))
+        qwb = dfx.quantize(wb, bits, reduce_axes=(1, 2))
+        qgb = dfx.quantize(gb, bits, reduce_axes=(1, 2))
+        dirs = {
+            "nn": lambda: kops.dfx_matmul_tiled(
+                qx.m, qx.exp, bits, qw.m, qw.exp, bits),
+            "nt": lambda: kops.dfx_matmul_tiled_nt(
+                qg.m, qg.exp, bits, qw.m, qw.exp, bits),
+            "tn": lambda: kops.dfx_matmul_tiled_tn(
+                qx.m, qx.exp, bits, qg.m, qg.exp, bits),
+            "batched_nn": lambda: kops.dfx_matmul_tiled_batched(
+                qxb.m, qxb.exp, bits, qwb.m, qwb.exp, bits),
+            "batched_nt": lambda: kops.dfx_matmul_tiled_batched_nt(
+                qgb.m, qgb.exp, bits, qwb.m, qwb.exp, bits),
+            "batched_tn": lambda: kops.dfx_matmul_tiled_batched_tn(
+                qxb.m, qxb.exp, bits, qgb.m, qgb.exp, bits),
+        }
+        rows = {}
+        for name, fn in dirs.items():
+            rows[name] = {
+                "pallas_calls": count_pallas_calls(jax.make_jaxpr(fn)()),
+                "us": _time_us(jax.jit(fn), repeats),
+            }
+        out["bitwidths"][f"b{bits}"] = {
+            "limbs": L,
+            "old_dispatches_per_direction": L * L,
+            "directions": rows,
+            "hbm_bytes_fused": matmul_hbm_bytes(M, K, N, L, L)["total"],
+            "hbm_bytes_unfused": matmul_hbm_bytes(M, K, N, L, L,
+                                                  fused=False)["total"],
+        }
+    return out
 
 
 def norm_bwd_report(preset: str = "int16", repeats: int = 3) -> dict:
@@ -211,6 +279,7 @@ def run(repeats: int = 3) -> dict:
         "pallas_interpret": jax.default_backend() != "tpu",
         "presets": [compare_preset(p, repeats) for p in PRESETS],
         "moe_dispatch": moe_dispatch_report(),
+        "matmul_dispatch": matmul_dispatch_report(repeats=repeats),
         "norm_bwd": norm_bwd_report(repeats=repeats),
     }
 

@@ -1,0 +1,140 @@
+"""Traced-dispatch regression gate (CI).
+
+Counts the ``pallas_call`` equations traced for every integer-layer entry
+point on the pallas backend — the quantity the single-dispatch limb fusion
+minimized (ISSUE 4) — and compares them against the checked-in baseline
+``benchmarks/dispatch_baseline.json``.  Any count ABOVE baseline fails the
+gate (a reintroduced per-limb or per-expert dispatch loop is a perf
+regression even when numerics stay correct); counts below baseline are
+reported as an improvement and accepted (refresh the baseline with
+``--update`` to lock them in).
+
+    PYTHONPATH=src python -m benchmarks.check_dispatch            # gate
+    PYTHONPATH=src python -m benchmarks.check_dispatch --update   # re-pin
+
+``tests/test_dispatch_baseline.py`` runs the same comparison as a tier-1
+test, so the gate also trips locally before CI.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import int_ops
+from repro.core.qconfig import QuantConfig
+from repro.utils import count_pallas_calls
+
+BASELINE_PATH = os.path.join(os.path.dirname(__file__),
+                             "dispatch_baseline.json")
+
+
+def _cfg(preset: str) -> QuantConfig:
+    # backend pinned: the counts must not depend on $REPRO_BACKEND
+    return dataclasses.replace(QuantConfig.preset(preset), backend="pallas",
+                               stochastic_grad=False)
+
+
+def current_counts() -> dict:
+    """Traced pallas_call counts per layer/preset, forward and fwd+bwd."""
+    key = jax.random.PRNGKey(0)
+    counts: dict = {}
+
+    def count(fn, *args):
+        return count_pallas_calls(jax.make_jaxpr(fn)(*args))
+
+    for preset in ("int8", "int12", "int16"):
+        cfg = _cfg(preset)
+        x = jax.random.normal(key, (4, 8, 32))
+        w = jax.random.normal(jax.random.fold_in(key, 1), (32, 16)) * 0.1
+        lin = lambda x, w: int_ops.int_linear(x, w, None, None, cfg)
+        lin_l = lambda x, w: jnp.sum(lin(x, w) ** 2)
+
+        xb = jax.random.normal(key, (4, 8, 32))
+        wb = jax.random.normal(jax.random.fold_in(key, 2), (4, 32, 16)) * 0.1
+        bl = lambda x, w: int_ops.int_batched_linear(x, w, None, cfg)
+        bl_l = lambda x, w: jnp.sum(bl(x, w) ** 2)
+
+        d = jax.random.normal(key, (16, 64))
+        gm = jnp.ones((64,))
+        bt = jnp.zeros((64,))
+        ln = lambda x: int_ops.int_layernorm(x, gm, bt, None, cfg)
+        ln_l = lambda x: jnp.sum(ln(x) ** 2)
+        rn = lambda x: int_ops.int_rmsnorm(x, gm, None, cfg)
+        rn_l = lambda x: jnp.sum(rn(x) ** 2)
+
+        counts[preset] = {
+            "linear_fwd": count(lin, x, w),
+            "linear_fwd_bwd": count(jax.grad(lin_l, argnums=(0, 1)), x, w),
+            "batched_linear_fwd": count(bl, xb, wb),
+            "batched_linear_fwd_bwd": count(
+                jax.grad(bl_l, argnums=(0, 1)), xb, wb),
+            "layernorm_fwd": count(ln, d),
+            "layernorm_fwd_bwd": count(jax.grad(ln_l), d),
+            "rmsnorm_fwd": count(rn, d),
+            "rmsnorm_fwd_bwd": count(jax.grad(rn_l), d),
+        }
+    return counts
+
+
+def compare(current: dict, baseline: dict) -> tuple[list, list]:
+    """Returns (regressions, improvements) as flat `(key, base, cur)` rows.
+
+    Regressions include entry points present in ``current`` but absent from
+    the baseline ("UNPINNED"): a newly counted layer must be pinned with
+    ``--update`` or it would silently escape the gate — exactly the code
+    most likely to regress.
+    """
+    regressions, improvements = [], []
+    for preset, entries in baseline.items():
+        for name, base in entries.items():
+            cur = current.get(preset, {}).get(name)
+            if cur is None:
+                regressions.append((f"{preset}.{name}", base, "MISSING"))
+            elif cur > base:
+                regressions.append((f"{preset}.{name}", base, cur))
+            elif cur < base:
+                improvements.append((f"{preset}.{name}", base, cur))
+    for preset, entries in current.items():
+        for name, cur in entries.items():
+            if baseline.get(preset, {}).get(name) is None:
+                regressions.append((f"{preset}.{name}", "UNPINNED", cur))
+    return regressions, improvements
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default=BASELINE_PATH)
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline with the current counts")
+    args = ap.parse_args()
+
+    current = current_counts()
+    if args.update:
+        with open(args.baseline, "w") as f:
+            json.dump(current, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.baseline}")
+        return
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    regressions, improvements = compare(current, baseline)
+    for key, base, cur in improvements:
+        print(f"IMPROVED  {key}: {base} -> {cur} (run --update to pin)")
+    if regressions:
+        for key, base, cur in regressions:
+            print(f"REGRESSED {key}: baseline {base}, current {cur}",
+                  file=sys.stderr)
+        sys.exit(1)
+    print(f"dispatch counts OK ({sum(len(v) for v in baseline.values())} "
+          "entries at or below baseline)")
+
+
+if __name__ == "__main__":
+    main()

@@ -15,9 +15,19 @@ per-device HLO's transfer volume, i.e. already the per-chip link load.
 Also reports MODEL_FLOPS = 6·N·D (6·N_active·D for MoE), the useful-compute
 ratio, the dominant term, and one-line advice per cell.
 
+This module also owns the **HBM-bytes-per-matmul traffic model** of the
+integer limb matmul (``matmul_hbm_bytes``, DESIGN.md §2): off-TPU all Pallas
+timings measure the interpreter, so the byte model is what makes interpret-
+mode dispatch/timing numbers interpretable — it quantifies the HBM traffic
+the single-dispatch limb fusion removes (the old path re-streamed every
+operand tile once per limb pair and round-tripped every f32 partial).
+``benchmarks/backend_compare.py`` embeds the model in its ``matmul_dispatch``
+section; ``--matmul-traffic`` prints the standalone table.
+
 Usage:
     PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun]
                                                  [--md experiments/roofline.md]
+    PYTHONPATH=src python -m benchmarks.roofline --matmul-traffic
 """
 from __future__ import annotations
 
@@ -33,6 +43,68 @@ LINK_BW = 50e9               # B/s per ICI link
 
 SHAPE_TOKENS = {"train_4k": 4096 * 256, "prefill_32k": 32768 * 32,
                 "decode_32k": 128, "long_500k": 1}
+
+
+def matmul_hbm_bytes(M: int, K: int, N: int, lx: int = 1, lw: int = 1,
+                     bm: int = 128, bn: int = 128, bk: int = 128,
+                     fused: bool = True) -> Dict:
+    """HBM traffic model of one (M, K)·(K, N) limb matmul (DESIGN.md §2).
+
+    Tiled-matmul streaming: each X tile is re-read once per output column
+    block (``ceil(N/bn)`` times) and each W tile once per output row block
+    (``ceil(M/bm)``); operand planes are int8, the output is f32.
+
+    ``fused=True`` (this PR): ONE launch streams all ``lx``/``lw`` planes of
+    a tile together and writes the combined f32 output once —
+
+        bytes = lx·M·K·ceil(N/bn) + lw·K·N·ceil(M/bm) + 4·M·N.
+
+    ``fused=False`` (the removed path): each of the ``lx·lw`` per-pair
+    launches re-streamed one X plane and one W plane and wrote its own f32
+    partial, and the XLA combine re-read two partials per add —
+
+        bytes = lx·lw·(M·K·ceil(N/bn) + K·N·ceil(M/bm) + 4·M·N)
+                + (lx·lw − 1)·8·M·N.
+
+    Returns the component breakdown plus the total.
+    """
+    rx = -(-N // bn)                       # X-tile re-reads
+    rw = -(-M // bm)                       # W-tile re-reads
+    out = 4 * M * N
+    if fused:
+        x_bytes = lx * M * K * rx
+        w_bytes = lw * K * N * rw
+        combine = 0
+        out_bytes = out
+    else:
+        pairs = lx * lw
+        x_bytes = pairs * M * K * rx
+        w_bytes = pairs * K * N * rw
+        out_bytes = pairs * out            # one f32 partial written per pair
+        combine = (pairs - 1) * 2 * out    # partial+accumulator re-reads
+    return {"x_bytes": x_bytes, "w_bytes": w_bytes, "out_bytes": out_bytes,
+            "combine_bytes": combine,
+            "total": x_bytes + w_bytes + out_bytes + combine}
+
+
+#: bit-width -> limb-plane count (mirrors kernels/dfx_quant.n_limbs without
+#: importing jax at roofline time).
+_LIMBS = {8: 1, 10: 2, 12: 2, 14: 2, 16: 3}
+
+
+def matmul_traffic_table(shapes=((512, 768, 768), (256, 1024, 4096)),
+                         bits=(8, 12, 16)) -> List[Dict]:
+    """Before/after HBM-bytes for representative shapes per bit-width."""
+    rows = []
+    for (M, K, N) in shapes:
+        for b in bits:
+            L = _LIMBS[b]
+            old = matmul_hbm_bytes(M, K, N, L, L, fused=False)["total"]
+            new = matmul_hbm_bytes(M, K, N, L, L, fused=True)["total"]
+            rows.append({"shape": [M, K, N], "bits": b, "limbs": L,
+                         "hbm_bytes_unfused": old, "hbm_bytes_fused": new,
+                         "traffic_reduction": old / new})
+    return rows
 
 
 def analyze_record(rec: Dict) -> Dict:
@@ -117,11 +189,31 @@ def to_markdown(rows: List[Dict]) -> str:
     return "\n".join(lines)
 
 
+def traffic_markdown(rows: List[Dict]) -> str:
+    lines = [
+        "| M×K×N | bits | limbs | HBM bytes (unfused ≤9 launches) | "
+        "HBM bytes (fused 1 launch) | reduction |",
+        "|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        M, K, N = r["shape"]
+        lines.append(
+            f"| {M}×{K}×{N} | {r['bits']} | {r['limbs']} "
+            f"| {r['hbm_bytes_unfused']:,} | {r['hbm_bytes_fused']:,} "
+            f"| {r['traffic_reduction']:.2f}× |")
+    return "\n".join(lines)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="experiments/dryrun")
     ap.add_argument("--md", default="experiments/roofline.md")
+    ap.add_argument("--matmul-traffic", action="store_true",
+                    help="print the limb-matmul HBM traffic model and exit")
     args = ap.parse_args()
+    if args.matmul_traffic:
+        print(traffic_markdown(matmul_traffic_table()))
+        return
     rows = load_all(args.dir)
     md = to_markdown(rows)
     os.makedirs(os.path.dirname(args.md), exist_ok=True)

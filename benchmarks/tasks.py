@@ -96,10 +96,8 @@ class FtConfig:
     seed: int = 0
 
 
-def finetune(task: str, qcfg: QuantConfig, ft: FtConfig = FtConfig(),
-             return_losses: bool = False):
-    """Fine-tune the task's model under ``qcfg``; returns (metric, losses)."""
-    key = jax.random.PRNGKey(ft.seed)
+def _task_setup(task: str, key, ft: FtConfig):
+    """Model config/params/sampler/loss for one proxy task."""
     if task == "cls":
         cfg = pm.bert_config(n_layers=4, d_model=128, n_heads=4, d_ff=256,
                              vocab=512, name="bert-tiny")
@@ -120,8 +118,15 @@ def finetune(task: str, qcfg: QuantConfig, ft: FtConfig = FtConfig(),
         loss_fn = lambda p, b, c, q, k: pm.vit_cls_loss(p, b, c, q, k, patch=8)
     else:
         raise KeyError(task)
-
     lr = {"span": 2e-3}.get(task, ft.lr)
+    return cfg, params, sampler, loss_fn, lr
+
+
+def finetune(task: str, qcfg: QuantConfig, ft: FtConfig = FtConfig(),
+             return_losses: bool = False):
+    """Fine-tune the task's model under ``qcfg``; returns (metric, losses)."""
+    key = jax.random.PRNGKey(ft.seed)
+    cfg, params, sampler, loss_fn, lr = _task_setup(task, key, ft)
     opt_cfg = opt_lib.OptimizerConfig(lr=lr, weight_decay=0.0)
     opt_state = opt_lib.init(params)
 
@@ -159,6 +164,43 @@ def finetune(task: str, qcfg: QuantConfig, ft: FtConfig = FtConfig(),
         metric = 100 * float(jnp.mean(jnp.argmax(logits, -1)
                                       == jnp.asarray(ev["labels"])))
     return (metric, losses) if return_losses else (metric, None)
+
+
+def step_stats(task: str, qcfg: QuantConfig, ft: FtConfig = FtConfig(),
+               repeats: int = 3) -> Dict[str, float]:
+    """Per-step traced-dispatch count + wall-clock of one train step.
+
+    ``pallas_calls`` is the number of ``pallas_call`` equations traced into
+    the jitted value-and-grad step (0 on the sim/fp32 paths) — the quantity
+    the single-dispatch limb fusion makes bit-width-independent.  ``step_us``
+    is the best-of-``repeats`` wall-clock of the compiled step; off-TPU the
+    pallas backend runs interpreted, so only relative deltas are meaningful.
+    """
+    from repro.utils import count_pallas_calls
+
+    key = jax.random.PRNGKey(ft.seed)
+    cfg, params, sampler, loss_fn, lr = _task_setup(task, key, ft)
+    opt_cfg = opt_lib.OptimizerConfig(lr=lr, weight_decay=0.0)
+    opt_state = opt_lib.init(params)
+    batch = {k_: jnp.asarray(v) for k_, v in sampler(ft.batch, 0).items()}
+
+    def step(params, opt_state, batch, k):
+        (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch, cfg, qcfg, k)
+        params, opt_state, _ = opt_lib.update(opt_cfg, g, opt_state, params)
+        return params, opt_state, loss
+
+    k0 = jax.random.fold_in(key, 0)
+    n_calls = count_pallas_calls(
+        jax.make_jaxpr(step)(params, opt_state, batch, k0))
+    jstep = jax.jit(step)
+    jax.block_until_ready(jstep(params, opt_state, batch, k0))   # compile
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.time()
+        jax.block_until_ready(jstep(params, opt_state, batch, k0))
+        best = min(best, time.time() - t0)
+    return {"pallas_calls": n_calls, "step_us": best * 1e6}
 
 
 def sweep(task: str, presets: List[str], ft: FtConfig = FtConfig()

@@ -30,12 +30,18 @@ Assumption 2 unbiasedness is preserved) and both matmul directions through
 the Pallas kernels: forward ``q(X)·q(W)`` via ``dfx_matmul_tiled``, backward
 ``dX = q(G)·q(W)ᵀ`` / ``dW = q(X)ᵀ·q(G)`` via the transpose-aware
 ``dfx_matmul_tiled_nt`` / ``dfx_matmul_tiled_tn`` entry points — bit-exact
-int32 limb accumulation at any supported bit-width (DESIGN.md §2).  The MoE
+int32 limb accumulation at any supported bit-width (DESIGN.md §2).  On this
+backend the matmul operands (activations, weights, gradients) are quantized
+straight into stacked int8 **limb planes** (``limb_planes=True`` — the
+balanced base-2⁷ digit split is fused into the quantize kernel) and each
+matmul direction is ONE ``pallas_call`` covering every limb pair; the limb
+planes are also what the custom-vjp residuals save, so the backward matmuls
+reuse them with no re-splitting anywhere in the traced jaxpr.  The MoE
 expert layer (``int_batched_linear``) uses the batched twins
 (``dfx_matmul_tiled_batched{,_nt,_tn}``, ``quantize_pallas_batched``): the
 expert axis rides a leading parallel grid dimension with an (E,)-vector
-scale-exponent operand, so each limb pair is ONE kernel dispatch for all E
-experts in both directions — no Python loop over experts.  The norm layers
+scale-exponent operand, so ONE kernel dispatch per direction covers all E
+experts and all limb pairs — no Python loop over experts.  The norm layers
 (``int_layernorm``, ``int_rmsnorm``) run forward AND backward through the
 fused kernels in ``repro.kernels.int_norm`` (multi-output forwards whose
 saved statistics are exactly what the kernel normalized with; backwards
@@ -62,13 +68,17 @@ def _float0(x):
 
 
 def _pallas_quantize(x: Array, bits: int, *, stochastic: bool = False,
-                     key=None) -> dfx.DfxTensor:
+                     key=None, limb_planes: bool = False) -> dfx.DfxTensor:
     """Linear fixed-point mapping via the Pallas quantize kernel.
 
     The max-abs exponent reduction stays in XLA (pass 1 of the two-pass
     structure, DESIGN.md §2); the shift-round-clip pass runs in the kernel.
     Stochastic rounding noise ``u`` is drawn from ``key`` here and fed to
     the kernel's noise input so gradient rounding stays unbiased.
+
+    ``limb_planes=True`` (the matmul operand path) makes the kernel emit the
+    stacked int8 limb planes directly — ``m`` is ``(L,) + x.shape`` and the
+    balanced base-2⁷ digit split never appears as XLA arithmetic.
     """
     x = x.astype(jnp.float32)
     e = dfx._scale_exponent(x, None)
@@ -79,23 +89,31 @@ def _pallas_quantize(x: Array, bits: int, *, stochastic: bool = False,
         if key is None:
             raise ValueError("stochastic rounding requires a PRNG key")
         u = jax.random.uniform(key, x2.shape, dtype=jnp.float32)
-    m = kops.quantize_pallas(x2, exp, bits, u=u)
-    return dfx.DfxTensor(m=m.reshape(x.shape), exp=exp)
+    m = kops.quantize_pallas(x2, exp, bits, u=u, limb_planes=limb_planes)
+    shape = (m.shape[0],) + x.shape if limb_planes else x.shape
+    return dfx.DfxTensor(m=m.reshape(shape), exp=exp)
 
 
 def _quantize(x: Array, bits: int, cfg: QuantConfig, *,
               stochastic: bool = False, key=None,
-              reduce_axes=None) -> dfx.DfxTensor:
-    """Backend-routed per-tensor quantization (per-axis stays on sim)."""
+              reduce_axes=None, limb_planes: bool = False) -> dfx.DfxTensor:
+    """Backend-routed per-tensor quantization (per-axis stays on sim).
+
+    ``limb_planes`` only takes effect on the pallas route — the sim path
+    always returns the logical mantissa it contracts in XLA.
+    """
     if cfg.backend == "pallas" and reduce_axes is None:
-        return _pallas_quantize(x, bits, stochastic=stochastic, key=key)
+        return _pallas_quantize(x, bits, stochastic=stochastic, key=key,
+                                limb_planes=limb_planes)
     return dfx.quantize(x, bits, stochastic=stochastic, key=key,
                         reduce_axes=reduce_axes)
 
 
-def _quant_grad(g: Array, cfg: QuantConfig, key) -> dfx.DfxTensor:
+def _quant_grad(g: Array, cfg: QuantConfig, key,
+                limb_planes: bool = False) -> dfx.DfxTensor:
     stoch = cfg.stochastic_grad and key is not None
-    return _quantize(g, cfg.grad_bits, cfg, stochastic=stoch, key=key)
+    return _quantize(g, cfg.grad_bits, cfg, stochastic=stoch, key=key,
+                     limb_planes=limb_planes)
 
 
 #: When True, FSDP-sharded weights are quantized *shard-locally* and the
@@ -143,13 +161,19 @@ def _int_linear_fwd(x, w, b, key, cfg: QuantConfig):
     kf = None
     if cfg.stochastic_fwd and key is not None:
         key, kf = jax.random.split(key)
-    qx = _quantize(x, cfg.act_bits, cfg, stochastic=kf is not None, key=kf)
-    qw = _maybe_gather_quantized(_quantize(w, cfg.weight_bits, cfg))
+    # On pallas the quantize kernel emits stacked limb planes directly (and
+    # those planes are the residuals the backward matmuls reuse — the digit
+    # split never runs as XLA arithmetic, forward or backward).
+    qx = _quantize(x, cfg.act_bits, cfg, stochastic=kf is not None, key=kf,
+                   limb_planes=True)
+    qw = _maybe_gather_quantized(
+        _quantize(w, cfg.weight_bits, cfg, limb_planes=True))
     if cfg.backend == "pallas":
-        # kernel path: batch dims flattened to the 2-D (M, K) @ (K, N) tiling
+        # kernel path: batch dims flattened to the 2-D (M, K) @ (K, N)
+        # tiling, limb planes riding the leading axis
         y2 = kops.dfx_matmul_tiled(
-            qx.m.reshape(-1, x.shape[-1]), qx.exp, cfg.act_bits,
-            qw.m, qw.exp, cfg.weight_bits)
+            qx.m.reshape(qx.m.shape[0], -1, x.shape[-1]), qx.exp,
+            cfg.act_bits, qw.m, qw.exp, cfg.weight_bits)
         y = y2.reshape(x.shape[:-1] + (w.shape[-1],))
     else:
         y = dfx.dfx_matmul(qx, qw, bits=(cfg.act_bits, cfg.weight_bits))
@@ -167,18 +191,20 @@ def _int_linear_bwd(cfg: QuantConfig, res, g):
         return dx, dw, db, _float0(key) if key is not None else None
 
     qx, qw, has_b, key = res
-    qg = _quant_grad(g, cfg, key)
+    qg = _quant_grad(g, cfg, key, limb_planes=True)
     if cfg.backend == "pallas":
         # both backward products through the transpose-aware kernel entry
         # points; operands stay in forward layout (kernel-side transpose)
+        # and arrive as the limb planes saved/emitted by the quantize kernel
         N = g.shape[-1]
         K = qx.m.shape[-1]
-        g2 = qg.m.reshape(-1, N)
+        g2 = qg.m.reshape(qg.m.shape[0], -1, N)
         dx2 = kops.dfx_matmul_tiled_nt(g2, qg.exp, cfg.grad_bits,
                                        qw.m, qw.exp, cfg.weight_bits)
         dx = dx2.reshape(g.shape[:-1] + (K,))
-        dw = kops.dfx_matmul_tiled_tn(qx.m.reshape(-1, K), qx.exp,
-                                      cfg.act_bits, g2, qg.exp, cfg.grad_bits)
+        dw = kops.dfx_matmul_tiled_tn(
+            qx.m.reshape(qx.m.shape[0], -1, K), qx.exp, cfg.act_bits,
+            g2, qg.exp, cfg.grad_bits)
     else:
         # dX = q(G) · q(W)ᵀ  — integer matmul (contract N)
         nd = qg.m.ndim
@@ -220,8 +246,9 @@ def _int_blinear_fwd(x, w, key, cfg: QuantConfig):
         key, kf = jax.random.split(key)
     if cfg.backend == "pallas":
         qx = _stacked_pallas_quantize(x, cfg.act_bits,
-                                      stochastic=kf is not None, key=kf)
-        qw = _stacked_pallas_quantize(w, cfg.weight_bits)
+                                      stochastic=kf is not None, key=kf,
+                                      limb_planes=True)
+        qw = _stacked_pallas_quantize(w, cfg.weight_bits, limb_planes=True)
         y = kops.dfx_matmul_tiled_batched(qx.m, qx.exp, cfg.act_bits,
                                           qw.m, qw.exp, cfg.weight_bits)
         return y, (qx, qw, key)
@@ -233,16 +260,20 @@ def _int_blinear_fwd(x, w, key, cfg: QuantConfig):
 
 
 def _stacked_pallas_quantize(x: Array, bits: int, *, stochastic: bool = False,
-                             key=None) -> dfx.DfxTensor:
+                             key=None,
+                             limb_planes: bool = False) -> dfx.DfxTensor:
     """Per-expert (leading-axis) pallas quantization with per-expert scales.
 
     Mirrors ``dfx.quantize(..., reduce_axes=(1, 2))``: each expert slice gets
     its own scale exponent (pass 1, an XLA max-abs reduce over the trailing
     axes); the shift-round-clip pass is ONE grouped-scale kernel launch for
     all E experts (``quantize_pallas_batched``, expert axis on the grid).
-    Mantissas keep the input shape and exponents are (E, 1, 1) so the
-    sim/pallas residual layouts match.  Stochastic noise is a single draw
-    over the full stack — bit-identical to the sim path under the same key.
+    Exponents are (E, 1, 1) so the sim/pallas residual layouts match;
+    ``limb_planes=True`` (the matmul operand path) makes ``m`` the
+    plane-major ``(L,) + x.shape`` int8 stack the batched matmul kernels
+    consume, with the digit split fused into the same launch.  Stochastic
+    noise is a single draw over the full stack — bit-identical to the sim
+    path under the same key.
     """
     x = x.astype(jnp.float32)
     E = x.shape[0]
@@ -254,8 +285,10 @@ def _stacked_pallas_quantize(x: Array, bits: int, *, stochastic: bool = False,
         if key is None:
             raise ValueError("stochastic rounding requires a PRNG key")
         u = jax.random.uniform(key, x3.shape, dtype=jnp.float32)
-    m = kops.quantize_pallas_batched(x3, exp, bits, u=u)
-    return dfx.DfxTensor(m=m.reshape(x.shape),
+    m = kops.quantize_pallas_batched(x3, exp, bits, u=u,
+                                     limb_planes=limb_planes)
+    shape = (m.shape[0],) + x.shape if limb_planes else x.shape
+    return dfx.DfxTensor(m=m.reshape(shape),
                          exp=exp.reshape((E,) + (1,) * (x.ndim - 1)))
 
 
@@ -277,9 +310,9 @@ def _int_blinear_bwd(cfg: QuantConfig, res, g):
     stoch = cfg.stochastic_grad and key is not None
     if cfg.backend == "pallas":
         qg = _stacked_pallas_quantize(g, cfg.grad_bits, stochastic=stoch,
-                                      key=key)
-        # dX[e] = G[e]·W[e]ᵀ (NT), dW[e] = X[e]ᵀ·G[e] (TN) — one batched
-        # kernel dispatch per limb pair covers every expert in each direction
+                                      key=key, limb_planes=True)
+        # dX[e] = G[e]·W[e]ᵀ (NT), dW[e] = X[e]ᵀ·G[e] (TN) — ONE batched
+        # kernel dispatch per direction covers every expert and limb pair
         dx = kops.dfx_matmul_tiled_batched_nt(qg.m, qg.exp, cfg.grad_bits,
                                               qw.m, qw.exp, cfg.weight_bits)
         dw = kops.dfx_matmul_tiled_batched_tn(qx.m, qx.exp, cfg.act_bits,

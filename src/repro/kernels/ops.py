@@ -2,14 +2,19 @@
 
 Adds the pieces that keep the kernels simple:
 
-* **int8 limb decomposition** for mantissas wider than 8 bits — the TPU MXU
-  multiplies int8×int8; ``_split_limbs`` rewrites a b<=16-bit mantissa as
-  **balanced base-2⁷ digits** ``m = sum_j limb_j · 2^(7j)`` with every
-  ``limb_j in [-64, 63]``, so each limb fits int8 and every limb product
-  fits the MXU's int8 path.  b<=8 is 1 limb, 8<b<=14 is 2, b<=16 is 3 —
-  ``X@W`` therefore becomes up to 3×3 = 9 kernel invocations; each partial
-  is bit-exact int32, the cross-limb combine is an f32 epilogue (rounding
-  ~1 ulp of the largest partial — DESIGN.md §2).
+* **int8 limb-plane layout** for mantissas wider than 8 bits — the TPU MXU
+  multiplies int8×int8, so a ``b <= 16``-bit mantissa is carried as a stack
+  of **balanced base-2⁷ digit planes** ``m = sum_j plane_j · 2^(7j)`` with
+  every non-final digit in ``[-64, 63]`` (the final plane keeps the raw
+  carry, ``|carry| <= 64``).  b<=8 is 1 plane, 8<b<=14 is 2, b<=16 is 3.
+  The split is **fused into the quantize kernel** (``dfx_quantize(...,
+  limb_planes=True)``) and ALL limb pairs of a matmul run in ONE
+  ``pallas_call`` (in-kernel unrolled pair loop, per-pair bit-exact int32
+  accumulators, ordered f32 cross-limb combine in the epilogue — rounding
+  ~1 ulp of the largest partial, DESIGN.md §2).  Dispatch count per matmul
+  direction is 1 at every bit-width; the former per-pair dispatch loop
+  issued up to 3×3 = 9 kernel launches and re-streamed every operand tile
+  from HBM once per pair.
 * shape padding to MXU tile multiples, and un-padding of the result;
 * automatic ``interpret=True`` when not running on real TPU hardware.
 
@@ -19,16 +24,21 @@ Three matmul layouts cover the integer layers end-to-end (DESIGN.md §2):
 * ``dfx_matmul_tiled_nt`` — backward ``dX = q(G)·q(W)ᵀ``
 * ``dfx_matmul_tiled_tn`` — backward ``dW = q(X)ᵀ·q(G)``
 
+Each accepts either the stacked limb planes emitted by the quantize kernel
+(the layer hot path — no split arithmetic appears in the traced jaxpr) or a
+logical int mantissa tensor, which is converted via ``split_limbs_stacked``
+(an XLA convenience path for tests and ad-hoc callers).
+
 The NT/TN variants keep both operands in their forward (row-major) layout —
 the transpose happens inside the kernel via the block index maps, never as a
 materialized HBM copy.
 
 Each layout has a **batched** twin for the MoE expert stack —
-``dfx_matmul_tiled_batched{,_nt,_tn}`` take (E, ...) mantissa stacks and
-(E,)-vector scale exponents and issue ONE ``pallas_call`` per limb pair with
-the expert axis as a leading parallel grid dimension (the per-expert Python
-loop this replaces unrolled up to 9·E dispatches per direction).
-``quantize_pallas_batched`` is the matching grouped-scale quantizer.
+``dfx_matmul_tiled_batched{,_nt,_tn}`` take plane-major (L, E, ...) mantissa
+stacks and (E,)-vector scale exponents and issue ONE ``pallas_call`` per
+direction with the expert axis as a leading parallel grid dimension
+composing with the in-block limb planes.  ``quantize_pallas_batched`` is the
+matching grouped-scale quantizer.
 
 The norm layers get four fused entry points over ``kernels/int_norm.py`` —
 ``layernorm_pallas`` / ``layernorm_bwd_pallas`` and ``rmsnorm_pallas`` /
@@ -38,6 +48,7 @@ backwards compute dx plus per-row-block dgamma/dbeta partials whose
 cross-block combine is the only XLA epilogue.  All four share the same
 row-padding pattern (zero rows are exact; padded gradient mantissas are
 zero, so padded rows contribute nothing to the parameter-gradient partials).
+They consume *logical* mantissas (int16 at b=16), not limb planes.
 """
 from __future__ import annotations
 
@@ -50,15 +61,10 @@ from repro.kernels.bfp_matmul import (bfp_matmul, bfp_matmul_batched,
                                       bfp_matmul_batched_nt,
                                       bfp_matmul_batched_tn, bfp_matmul_nt,
                                       bfp_matmul_tn)
-from repro.kernels.dfx_quant import dfx_quantize, dfx_quantize_grouped
+from repro.kernels.dfx_quant import (LIMB_BITS as _LIMB_BITS, dfx_quantize,
+                                     dfx_quantize_grouped, n_limbs)
 from repro.kernels.int_norm import (int_layernorm_bwd, int_layernorm_fwd,
                                     int_rmsnorm_bwd, int_rmsnorm_fwd)
-
-#: balanced-digit radix: every limb lies in [-64, 63], so limb products span
-#: at most 12 magnitude bits — safely inside the MXU int8×int8→int32 path.
-#: A b-bit mantissa needs ceil((b-1)/7)+ limbs: 1 for b<=8, 2 for b<=14,
-#: 3 for b<=16 (so a 16×16-bit matmul is at most 9 limb-pair kernel calls).
-_LIMB_BITS = 7
 
 #: MXU lane width: the last block dimension must be a multiple of this.
 _LANE = 128
@@ -66,32 +72,54 @@ _LANE = 128
 #: VPU sublane width: the second-to-last block dimension's multiple.
 _SUBLANE = 8
 
+#: VMEM budget for one matmul grid step (operand blocks double-buffered,
+#: per-limb-pair int32 accumulator scratch, output block) — conservatively
+#: half of a TPU core's ~16 MB so the compiler keeps headroom for spills.
+_VMEM_BUDGET = 8 * 1024 * 1024
+
 
 def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def _split_limbs(m: jax.Array, bits: int):
-    """Split an integer mantissa tensor into int8 limbs (balanced digits).
+def split_limbs_stacked(m: jax.Array, bits: int) -> jax.Array:
+    """Stacked balanced base-2⁷ limb planes of a logical integer mantissa.
 
-    Returns a list of (limb_int8, shift) with ``m = sum(limb * 2**shift)``.
+    Returns an int8 array of shape ``(L,) + m.shape`` with
+    ``m = sum_j planes[j] * 2**(7*j)`` — the same digit set the quantize
+    kernel emits in its fused split (``dfx_quantize(limb_planes=True)``).
+    XLA convenience/reference path only: the layer hot path gets its planes
+    straight from the quantize kernel and never runs this.
+
+    Non-final digits are the balanced remainder in [-64, 63]; the final
+    plane keeps the raw carry (|carry| <= 64 for every b <= 16 — storing it
+    unreduced fixes the b=14 corner where a final mod-extraction dropped a
+    carry of ±1·2^14).
     """
-    if bits <= 8:
-        return [(m.astype(jnp.int8), 0)]
+    L = n_limbs(bits)
+    if L == 1:
+        return m.astype(jnp.int8)[None]
     m32 = m.astype(jnp.int32)
-    limbs = []
-    shift = 0
-    while bits > 0:
-        take = min(_LIMB_BITS, bits)
-        base = 1 << _LIMB_BITS
-        # Balanced remainder in [-base/2, base/2): keeps limbs centred so the
-        # carry into the next limb is exact integer arithmetic.
+    base = 1 << _LIMB_BITS
+    planes = []
+    for _ in range(L - 1):
+        # Balanced remainder in [-base/2, base/2): keeps digits centred so
+        # the carry into the next plane is exact integer arithmetic.
         lo = ((m32 + base // 2) % base) - base // 2
         m32 = (m32 - lo) // base
-        limbs.append((lo.astype(jnp.int8), shift))
-        shift += _LIMB_BITS
-        bits -= take
-    return limbs
+        planes.append(lo.astype(jnp.int8))
+    planes.append(m32.astype(jnp.int8))
+    return jnp.stack(planes)
+
+
+def _as_planes(m: jax.Array, bits: int, base_ndim: int) -> jax.Array:
+    """Accept stacked limb planes or a logical mantissa (split on the fly)."""
+    if m.ndim == base_ndim + 1:
+        assert m.shape[0] == n_limbs(bits), (m.shape, bits)
+        assert m.dtype == jnp.int8, m.dtype
+        return m
+    assert m.ndim == base_ndim, (m.shape, base_ndim)
+    return split_limbs_stacked(m, bits)
 
 
 def _round_up_multiple(x: int, mult: int) -> int:
@@ -100,33 +128,61 @@ def _round_up_multiple(x: int, mult: int) -> int:
     return max(r, mult)
 
 
-def _pick_blocks(M: int, N: int, K: int):
-    """Block shapes for an (M, K) @ (K, N) tiling.
+def matmul_vmem_bytes(bm: int, bn: int, bk: int, lx: int = 1,
+                      lw: int = 1, contracted_sublane: bool = False) -> int:
+    """VMEM bytes one grid step of the fused limb matmul keeps resident.
+
+    Double-buffered int8 operand blocks (all ``lx``/``lw`` planes of a tile
+    arrive together), one int32 accumulator plane per limb pair, and the
+    double-buffered f32 output block.
+
+    ``contracted_sublane=False`` (NN/NT): ``bm`` is the OUTPUT tile's
+    sublane dim — the operand stacks, the accumulator planes, and the output
+    block all scale with it.  ``contracted_sublane=True`` (TN): ``bm`` is
+    the CONTRACTED block (the output tile stays ``(_LANE, _LANE)``) — both
+    operand stacks scale with it but the accumulator scratch and output
+    block do not.
+    """
+    if contracted_sublane:
+        return (2 * (lx * bm * _LANE + lw * bm * bn)  # int8 operand stacks
+                + lx * lw * _LANE * bn * 4            # fixed-size acc planes
+                + 2 * _LANE * bn * 4)                 # fixed f32 out block
+    return (2 * (lx * bm * bk + lw * bk * bn)        # int8 operand stacks
+            + lx * lw * bm * bn * 4                  # per-pair accumulators
+            + 2 * bm * bn * 4)                       # f32 output block
+
+
+def _pick_blocks(M: int, N: int, K: int, lx: int = 1, lw: int = 1,
+                 budget: int = _VMEM_BUDGET, contracted_sublane: bool = False):
+    """Block shapes for an (M, K) @ (K, N) tiling with ``lx``×``lw`` limbs.
 
     The lane dimensions (N and K here) must be full 128-lane tiles — inputs
     smaller than 128 are padded up to one tile.  Only the sublane dimension
     (M) may shrink, in multiples of 8, to avoid padding small row counts all
-    the way to 128.
+    the way to 128 — and it also shrinks when the limb-plane stacks plus the
+    per-pair accumulator scratch would overflow the VMEM budget (the 1-limb
+    working set is ~9× smaller than the 3×3-limb one; blocks that fit the
+    former can overflow the latter).
+
+    ``contracted_sublane=True`` is the TN callers' interpretation: the
+    shrinkable first dimension they receive is the CONTRACTED block (the
+    output tile stays full-lane), so the budget model must not scale the
+    accumulator scratch with it — see ``matmul_vmem_bytes``.
     """
     bm = _LANE if M >= _LANE else _round_up_multiple(M, _SUBLANE)
-    return bm, _LANE, _LANE
-
-
-def _pad2(a: jax.Array, r: int, c: int) -> jax.Array:
-    M, N = a.shape
-    pm = (-M) % r
-    pn = (-N) % c
-    if pm or pn:
-        a = jnp.pad(a, ((0, pm), (0, pn)))
-    return a
+    bn = bk = _LANE
+    while bm > _SUBLANE and matmul_vmem_bytes(
+            bm, bn, bk, lx, lw, contracted_sublane) > budget:
+        bm = _round_up_multiple(bm // 2, _SUBLANE)
+    return bm, bn, bk
 
 
 def _pad_last2(a: jax.Array, r: int, c: int) -> jax.Array:
     """Pad the trailing two dims to (r, c) multiples; leading dims untouched.
 
-    Zero padding is exact for every expert regardless of its scale exponent:
-    zero mantissas contribute nothing to the integer accumulation, and a
-    zero row quantizes to zero under any per-expert exponent.
+    Zero padding is exact for every limb plane and every expert regardless
+    of its scale exponent: zero mantissas contribute nothing to the integer
+    accumulation, and a zero row quantizes to zero under any exponent.
     """
     *lead, M, N = a.shape
     pm = (-M) % r
@@ -136,36 +192,28 @@ def _pad_last2(a: jax.Array, r: int, c: int) -> jax.Array:
     return a
 
 
-def _limb_loop(kernel_call, x_limbs, w_limbs):
-    """Accumulate kernel partials over all limb pairs (f32 combine)."""
-    out = None
-    for xl, xs in x_limbs:
-        for wl, ws in w_limbs:
-            part = kernel_call(xl, wl) * (2.0 ** (xs + ws))
-            out = part if out is None else out + part
-    return out
-
-
 def dfx_matmul_tiled(
     xm: jax.Array, x_exp: jax.Array, x_bits: int,
     wm: jax.Array, w_exp: jax.Array, w_bits: int,
     *, interpret: bool | None = None,
 ) -> jax.Array:
-    """Integer DFX matmul via the Pallas kernel, with limb decomposition.
+    """Integer DFX matmul via the fused single-dispatch Pallas kernel.
 
-    xm: (M, K) int mantissas, wm: (K, N). Returns FP32 ``(x·w)`` dequantized.
+    xm: (Lx, M, K) int8 limb planes (or a logical (M, K) int mantissa, split
+    here for convenience); wm: (Lw, K, N) / (K, N).  Returns FP32 ``(x·w)``
+    dequantized.  One ``pallas_call`` regardless of bit-width.
     """
     if interpret is None:
         interpret = not on_tpu()
-    M, K = xm.shape
-    _, N = wm.shape
-    bm, bn, bk = _pick_blocks(M, N, K)
-    xm, wm = _pad2(xm, bm, bk), _pad2(wm, bk, bn)
+    xm = _as_planes(xm, x_bits, 2)
+    wm = _as_planes(wm, w_bits, 2)
+    _, M, K = xm.shape
+    _, _, N = wm.shape
+    bm, bn, bk = _pick_blocks(M, N, K, xm.shape[0], wm.shape[0])
+    xm, wm = _pad_last2(xm, bm, bk), _pad_last2(wm, bk, bn)
     out_exp = (x_exp + w_exp).astype(jnp.int32)
-    out = _limb_loop(
-        lambda xl, wl: bfp_matmul(xl, wl, out_exp, bm=bm, bn=bn, bk=bk,
-                                  interpret=interpret),
-        _split_limbs(xm, x_bits), _split_limbs(wm, w_bits))
+    out = bfp_matmul(xm, wm, out_exp, bm=bm, bn=bn, bk=bk,
+                     interpret=interpret)
     return out[:M, :N]
 
 
@@ -176,22 +224,22 @@ def dfx_matmul_tiled_nt(
 ) -> jax.Array:
     """Backward dX product: ``q(G)·q(W)ᵀ`` with W in forward (K, N) layout.
 
-    gm: (M, N) grad mantissas, wm: (K, N) weight mantissas. Returns FP32
-    (M, K). The kernel contracts the shared N axis in place — no transpose
-    is materialized.
+    gm: (Lg, M, N) grad limb planes, wm: (Lw, K, N) weight limb planes
+    (logical 2-D mantissas also accepted).  Returns FP32 (M, K).  The kernel
+    contracts the shared N axis in place — no transpose is materialized.
     """
     if interpret is None:
         interpret = not on_tpu()
-    M, N = gm.shape
-    K, _ = wm.shape
+    gm = _as_planes(gm, g_bits, 2)
+    wm = _as_planes(wm, w_bits, 2)
+    _, M, N = gm.shape
+    _, K, _ = wm.shape
     # out is (M, K): M is the sublane-flexible dim, K and N ride the lanes.
-    bm, bn, bk = _pick_blocks(M, K, N)
-    gm, wm = _pad2(gm, bm, bk), _pad2(wm, bn, bk)
+    bm, bn, bk = _pick_blocks(M, K, N, gm.shape[0], wm.shape[0])
+    gm, wm = _pad_last2(gm, bm, bk), _pad_last2(wm, bn, bk)
     out_exp = (g_exp + w_exp).astype(jnp.int32)
-    out = _limb_loop(
-        lambda gl, wl: bfp_matmul_nt(gl, wl, out_exp, bm=bm, bn=bn, bk=bk,
-                                     interpret=interpret),
-        _split_limbs(gm, g_bits), _split_limbs(wm, w_bits))
+    out = bfp_matmul_nt(gm, wm, out_exp, bm=bm, bn=bn, bk=bk,
+                        interpret=interpret)
     return out[:M, :K]
 
 
@@ -202,22 +250,25 @@ def dfx_matmul_tiled_tn(
 ) -> jax.Array:
     """Backward dW product: ``q(X)ᵀ·q(G)`` with X in forward (M, K) layout.
 
-    xm: (M, K) activation mantissas, gm: (M, N) grad mantissas. Returns FP32
-    (K, N). The kernel contracts the shared M axis in place.
+    xm: (Lx, M, K) activation limb planes, gm: (Lg, M, N) grad limb planes
+    (logical 2-D mantissas also accepted).  Returns FP32 (K, N).  The kernel
+    contracts the shared M axis in place.
     """
     if interpret is None:
         interpret = not on_tpu()
-    M, K = xm.shape
-    _, N = gm.shape
+    xm = _as_planes(xm, x_bits, 2)
+    gm = _as_planes(gm, g_bits, 2)
+    _, M, K = xm.shape
+    _, _, N = gm.shape
     # out is (K, N): K and N ride the lanes of the output tile; the
-    # contracted M axis is the sublane-flexible one here.
-    bk, bm, bn = _pick_blocks(M, K, N)
-    xm, gm = _pad2(xm, bk, bm), _pad2(gm, bk, bn)
+    # contracted M axis is the sublane-flexible one here (so the budget
+    # model must hold the accumulator/output tiles fixed — see _pick_blocks)
+    bk, bm, bn = _pick_blocks(M, K, N, xm.shape[0], gm.shape[0],
+                              contracted_sublane=True)
+    xm, gm = _pad_last2(xm, bk, bm), _pad_last2(gm, bk, bn)
     out_exp = (x_exp + g_exp).astype(jnp.int32)
-    out = _limb_loop(
-        lambda xl, gl: bfp_matmul_tn(xl, gl, out_exp, bm=bm, bn=bn, bk=bk,
-                                     interpret=interpret),
-        _split_limbs(xm, x_bits), _split_limbs(gm, g_bits))
+    out = bfp_matmul_tn(xm, gm, out_exp, bm=bm, bn=bn, bk=bk,
+                        interpret=interpret)
     return out[:K, :N]
 
 
@@ -226,23 +277,25 @@ def dfx_matmul_tiled_batched(
     wm: jax.Array, w_exp: jax.Array, w_bits: int,
     *, interpret: bool | None = None,
 ) -> jax.Array:
-    """Batched NN: ``q(X[e])·q(W[e])`` for all experts in one launch/limb pair.
+    """Batched NN: ``q(X[e])·q(W[e])`` for all experts AND limb pairs in one
+    launch.
 
-    xm: (E, M, K), wm: (E, K, N); x_exp/w_exp are (E,)-broadcastable scale
-    exponents (the (E, 1, 1) keep-dims layout of the per-expert quantizers is
-    accepted). Returns FP32 (E, M, N).
+    xm: (Lx, E, M, K) limb planes (or logical (E, M, K)), wm: (Lw, E, K, N);
+    x_exp/w_exp are (E,)-broadcastable scale exponents (the (E, 1, 1)
+    keep-dims layout of the per-expert quantizers is accepted).  Returns
+    FP32 (E, M, N).
     """
     if interpret is None:
         interpret = not on_tpu()
-    E, M, K = xm.shape
-    _, _, N = wm.shape
-    bm, bn, bk = _pick_blocks(M, N, K)
+    xm = _as_planes(xm, x_bits, 3)
+    wm = _as_planes(wm, w_bits, 3)
+    _, E, M, K = xm.shape
+    _, _, _, N = wm.shape
+    bm, bn, bk = _pick_blocks(M, N, K, xm.shape[0], wm.shape[0])
     xm, wm = _pad_last2(xm, bm, bk), _pad_last2(wm, bk, bn)
     out_exp = (jnp.reshape(x_exp, (E,)) + jnp.reshape(w_exp, (E,))).astype(jnp.int32)
-    out = _limb_loop(
-        lambda xl, wl: bfp_matmul_batched(xl, wl, out_exp, bm=bm, bn=bn,
-                                          bk=bk, interpret=interpret),
-        _split_limbs(xm, x_bits), _split_limbs(wm, w_bits))
+    out = bfp_matmul_batched(xm, wm, out_exp, bm=bm, bn=bn, bk=bk,
+                             interpret=interpret)
     return out[:, :M, :N]
 
 
@@ -251,21 +304,22 @@ def dfx_matmul_tiled_batched_nt(
     wm: jax.Array, w_exp: jax.Array, w_bits: int,
     *, interpret: bool | None = None,
 ) -> jax.Array:
-    """Batched NT: ``dX[e] = q(G[e])·q(W[e])ᵀ``, W in forward (E, K, N) layout.
+    """Batched NT: ``dX[e] = q(G[e])·q(W[e])ᵀ``, W in forward layout.
 
-    gm: (E, M, N), wm: (E, K, N). Returns FP32 (E, M, K).
+    gm: (Lg, E, M, N) limb planes (or logical (E, M, N)), wm: (Lw, E, K, N).
+    Returns FP32 (E, M, K).
     """
     if interpret is None:
         interpret = not on_tpu()
-    E, M, N = gm.shape
-    _, K, _ = wm.shape
-    bm, bn, bk = _pick_blocks(M, K, N)
+    gm = _as_planes(gm, g_bits, 3)
+    wm = _as_planes(wm, w_bits, 3)
+    _, E, M, N = gm.shape
+    _, _, K, _ = wm.shape
+    bm, bn, bk = _pick_blocks(M, K, N, gm.shape[0], wm.shape[0])
     gm, wm = _pad_last2(gm, bm, bk), _pad_last2(wm, bn, bk)
     out_exp = (jnp.reshape(g_exp, (E,)) + jnp.reshape(w_exp, (E,))).astype(jnp.int32)
-    out = _limb_loop(
-        lambda gl, wl: bfp_matmul_batched_nt(gl, wl, out_exp, bm=bm, bn=bn,
-                                             bk=bk, interpret=interpret),
-        _split_limbs(gm, g_bits), _split_limbs(wm, w_bits))
+    out = bfp_matmul_batched_nt(gm, wm, out_exp, bm=bm, bn=bn, bk=bk,
+                                interpret=interpret)
     return out[:, :M, :K]
 
 
@@ -274,28 +328,36 @@ def dfx_matmul_tiled_batched_tn(
     gm: jax.Array, g_exp: jax.Array, g_bits: int,
     *, interpret: bool | None = None,
 ) -> jax.Array:
-    """Batched TN: ``dW[e] = q(X[e])ᵀ·q(G[e])``, X in forward (E, M, K) layout.
+    """Batched TN: ``dW[e] = q(X[e])ᵀ·q(G[e])``, X in forward layout.
 
-    xm: (E, M, K), gm: (E, M, N). Returns FP32 (E, K, N).
+    xm: (Lx, E, M, K) limb planes (or logical (E, M, K)), gm: (Lg, E, M, N).
+    Returns FP32 (E, K, N).
     """
     if interpret is None:
         interpret = not on_tpu()
-    E, M, K = xm.shape
-    _, _, N = gm.shape
-    bk, bm, bn = _pick_blocks(M, K, N)
+    xm = _as_planes(xm, x_bits, 3)
+    gm = _as_planes(gm, g_bits, 3)
+    _, E, M, K = xm.shape
+    _, _, _, N = gm.shape
+    bk, bm, bn = _pick_blocks(M, K, N, xm.shape[0], gm.shape[0],
+                              contracted_sublane=True)
     xm, gm = _pad_last2(xm, bk, bm), _pad_last2(gm, bk, bn)
     out_exp = (jnp.reshape(x_exp, (E,)) + jnp.reshape(g_exp, (E,))).astype(jnp.int32)
-    out = _limb_loop(
-        lambda xl, gl: bfp_matmul_batched_tn(xl, gl, out_exp, bm=bm, bn=bn,
-                                             bk=bk, interpret=interpret),
-        _split_limbs(xm, x_bits), _split_limbs(gm, g_bits))
+    out = bfp_matmul_batched_tn(xm, gm, out_exp, bm=bm, bn=bn, bk=bk,
+                                interpret=interpret)
     return out[:, :K, :N]
 
 
 def quantize_pallas(x: jax.Array, exp: jax.Array, bits: int,
                     u: jax.Array | None = None,
-                    interpret: bool | None = None) -> jax.Array:
-    """2-D wrapper over the quantize kernel with row padding."""
+                    interpret: bool | None = None,
+                    limb_planes: bool = False) -> jax.Array:
+    """2-D wrapper over the quantize kernel with row padding.
+
+    ``limb_planes=True`` returns the (L, M, N) int8 limb-plane stack the
+    matmul kernels consume (split fused into the quantize launch); the
+    default returns the logical (M, N) int8/int16 mantissa.
+    """
     if interpret is None:
         interpret = not on_tpu()
     M, N = x.shape
@@ -305,13 +367,15 @@ def quantize_pallas(x: jax.Array, exp: jax.Array, bits: int,
         x = jnp.pad(x, ((0, pm), (0, 0)))
         if u is not None:
             u = jnp.pad(u, ((0, pm), (0, 0)))
-    out = dfx_quantize(x, exp, bits=bits, u=u, br=br, interpret=interpret)
-    return out[:M]
+    out = dfx_quantize(x, exp, bits=bits, u=u, br=br, interpret=interpret,
+                       limb_planes=limb_planes)
+    return out[:, :M] if limb_planes else out[:M]
 
 
 def quantize_pallas_batched(x: jax.Array, exp: jax.Array, bits: int,
                             u: jax.Array | None = None,
-                            interpret: bool | None = None) -> jax.Array:
+                            interpret: bool | None = None,
+                            limb_planes: bool = False) -> jax.Array:
     """3-D (E, M, N) wrapper over the grouped-scale quantize kernel.
 
     ``exp`` holds one scale exponent per leading slice ((E,) or any
@@ -319,6 +383,7 @@ def quantize_pallas_batched(x: jax.Array, exp: jax.Array, bits: int,
     experts (slices are uniform in shape); padded rows are zeros, which
     quantize to zero mantissas under every per-expert exponent, and the
     stochastic noise ``u`` is zero-padded identically (floor(0 + 0) = 0).
+    ``limb_planes=True`` returns the plane-major (L, E, M, N) int8 stack.
     """
     if interpret is None:
         interpret = not on_tpu()
@@ -330,8 +395,9 @@ def quantize_pallas_batched(x: jax.Array, exp: jax.Array, bits: int,
         if u is not None:
             u = jnp.pad(u, ((0, 0), (0, pm), (0, 0)))
     out = dfx_quantize_grouped(x, jnp.reshape(exp, (E,)), bits=bits, u=u,
-                               br=br, interpret=interpret)
-    return out[:, :M]
+                               br=br, interpret=interpret,
+                               limb_planes=limb_planes)
+    return out[:, :, :M] if limb_planes else out[:, :M]
 
 
 def _pad_rows(R: int, cap: int, *arrs):

@@ -5,6 +5,8 @@ tests sweep shapes/dtypes and ``assert_allclose`` kernel-vs-oracle.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -82,6 +84,43 @@ def bfp_matmul_batched_tn_ref(xm: jax.Array, gm: jax.Array,
         (((1,), (1,)), ((0,), (0,))), preferred_element_type=jnp.int32)
     scale = jnp.exp2(out_exp.astype(jnp.float32)).reshape(-1, 1, 1)
     return acc.astype(jnp.float32) * scale
+
+
+@functools.partial(jax.jit, static_argnames=("dimension_numbers",))
+def limb_loop_matmul_ref(xm: jax.Array, wm: jax.Array, out_exp: jax.Array,
+                         *, dimension_numbers) -> jax.Array:
+    """The REMOVED per-limb-pair dispatch path, reproduced bit-exactly.
+
+    ``xm``/``wm`` are stacked int8 limb planes (leading axis).  Each limb
+    pair contracts exactly in int32 (one partial per pair — what each of the
+    old per-pair ``pallas_call``s produced), the partial dequantizes by
+    ``2**out_exp`` in f32, is scaled by its ``2**(7(jx+jw))`` limb shift
+    (exact power-of-two multiplies), and the partials sum in the old loop
+    order (x-limbs outer, w-limbs inner).  The fused kernel's epilogue
+    follows the identical expression, so kernel-vs-this must be
+    **bit-equal** — the acceptance property of the single-dispatch rewrite.
+
+    This function is deliberately **jitted**: the removed path's combine ran
+    inside the layers' jitted custom-vjp bodies, where XLA canonicalizes the
+    flat f32 add chain (tree-reassociation) — that compiled program, not a
+    strictly-left-to-right eager sum, is the semantics being matched.  The
+    fused kernel's epilogue compiles through the same canonicalization.
+
+    ``dimension_numbers`` is the per-pair int32 ``dot_general`` contraction
+    of the LOGICAL mantissas (e.g. ``(((1,), (0,)), ((), ()))`` for NN);
+    ``out_exp`` must already broadcast against the contraction output (pass
+    ``(E, 1, 1)`` for the batched layouts).
+    """
+    scale0 = jnp.exp2(out_exp.astype(jnp.float32))
+    out = None
+    for jx in range(xm.shape[0]):
+        for jw in range(wm.shape[0]):
+            acc = jax.lax.dot_general(
+                xm[jx].astype(jnp.int32), wm[jw].astype(jnp.int32),
+                dimension_numbers, preferred_element_type=jnp.int32)
+            part = (acc.astype(jnp.float32) * scale0) * (2.0 ** (7 * (jx + jw)))
+            out = part if out is None else out + part
+    return out
 
 
 def dfx_quantize_grouped_ref(x: jax.Array, exp: jax.Array, bits: int,

@@ -127,8 +127,9 @@ def test_batched_linear_grad_e2e_vs_fp32():
 def test_batched_dispatch_count_independent_of_experts(preset):
     """The acceptance property of the batched kernels: the number of
     pallas_call dispatches traced for int_batched_linear is the same at
-    E=1 and E=8 (one batched launch per limb pair per direction, plus the
-    grouped quantizations) — no Python loop over the expert axis."""
+    E=1 and E=8 (one batched launch per direction covering every expert AND
+    limb pair, plus the grouped quantizations) — no Python loop over the
+    expert axis, and no per-limb-pair dispatch loop."""
     _, pal = _pair(preset)
 
     def counts(E):
@@ -142,9 +143,10 @@ def test_batched_dispatch_count_independent_of_experts(preset):
 
     assert counts(1) == counts(8)
     nf, nb = counts(8)
-    limbs = {8: 1, 12: 2, 16: 3}
-    nl = limbs[pal.act_bits] * limbs[pal.weight_bits]
-    assert nf == 2 + nl      # quantize x, quantize w, one launch / limb pair
+    # quantize x, quantize w, ONE fused matmul launch — at every bit-width
+    assert nf == 3
+    # + quantize g, one NT launch (dX), one TN launch (dW)
+    assert nb == 6
 
 
 @pytest.mark.parametrize("preset", ["int16", "int8"])

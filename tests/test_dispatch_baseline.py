@@ -1,0 +1,39 @@
+"""Tier-1 wrapper around the CI dispatch-count regression gate.
+
+The checked-in ``benchmarks/dispatch_baseline.json`` pins the traced
+``pallas_call`` count of every integer-layer entry point on the pallas
+backend (3 dispatches forward / 6 forward+backward for the linear layers at
+EVERY bit-width since the single-dispatch limb fusion; 3/5 for the fused
+norms).  Any count rising above baseline is a perf regression — a
+reintroduced per-limb-pair or per-expert dispatch loop — and fails here
+before it fails the CI gate (``python -m benchmarks.check_dispatch``).
+"""
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks import check_dispatch  # noqa: E402
+
+
+def test_dispatch_counts_at_or_below_baseline():
+    with open(check_dispatch.BASELINE_PATH) as f:
+        baseline = json.load(f)
+    regressions, _ = check_dispatch.compare(
+        check_dispatch.current_counts(), baseline)
+    assert not regressions, regressions
+
+
+def test_baseline_pins_single_dispatch_property():
+    """The baseline itself must encode the acceptance property: the linear
+    layers' dispatch counts are bit-width-independent (one matmul launch per
+    direction), so every preset pins the same numbers."""
+    with open(check_dispatch.BASELINE_PATH) as f:
+        baseline = json.load(f)
+    assert set(baseline) == {"int8", "int12", "int16"}
+    for preset, entries in baseline.items():
+        assert entries["linear_fwd"] == 3, preset
+        assert entries["linear_fwd_bwd"] == 6, preset
+        assert entries["batched_linear_fwd"] == 3, preset
+        assert entries["batched_linear_fwd_bwd"] == 6, preset

@@ -33,14 +33,27 @@ def test_linear_grads_approach_fp32(preset, tol):
 
 
 def test_linear_residuals_are_quantized_mantissas():
-    """Activation memory saving: the saved residuals are int8/int16."""
+    """Activation memory saving: the saved residuals are narrow integers,
+    never FP32.  The sim backend stores the logical int8/int16 mantissa; the
+    pallas backend stores the quantize kernel's stacked int8 limb planes
+    (``(L,) + shape``, L = ceil(bits/7) planes) so the backward matmuls
+    reuse them with no re-splitting — 2 bytes/element at b=12, same as the
+    logical int16 residual and half of FP32."""
+    from repro.kernels.dfx_quant import n_limbs
+
     cfg = QuantConfig.int8()
     x = jax.random.normal(KEY, (8, 64))
     w = jax.random.normal(KEY, (64, 32))
     _, res = int_ops._int_linear_fwd(x, w, None, KEY, cfg)
     qx, qw = res[0], res[1]
-    assert qx.m.dtype == jnp.int16        # act_bits=12 -> int16
-    assert qw.m.dtype == jnp.int8         # weight_bits=8 -> int8
+    if cfg.backend == "pallas":
+        assert qx.m.dtype == jnp.int8
+        assert qx.m.shape == (n_limbs(cfg.act_bits),) + x.shape   # 2 planes
+        assert qw.m.dtype == jnp.int8
+        assert qw.m.shape == (n_limbs(cfg.weight_bits),) + w.shape
+    else:
+        assert qx.m.dtype == jnp.int16    # act_bits=12 -> int16
+        assert qw.m.dtype == jnp.int8     # weight_bits=8 -> int8
 
 
 @pytest.mark.parametrize("norm", ["layernorm", "rmsnorm"])

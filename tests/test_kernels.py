@@ -20,7 +20,8 @@ def test_bfp_matmul_exact(M, K, N, dtype):
     wm = jax.random.randint(jax.random.fold_in(KEY, 1), (K, N), -127, 128,
                             jnp.int32).astype(dtype)
     for e in (-7, 0, 3):
-        y = bfp_matmul(xm, wm, jnp.int32(e), interpret=True)
+        # single-limb planes: the kernel takes (L, M, K) stacks
+        y = bfp_matmul(xm[None], wm[None], jnp.int32(e), interpret=True)
         yr = ref.bfp_matmul_ref(xm, wm, jnp.int32(e))
         np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
 
@@ -31,20 +32,33 @@ def test_bfp_matmul_block_shapes(blocks):
     M, K, N = 2 * bm, 2 * bk, 2 * bn
     xm = jax.random.randint(KEY, (M, K), -127, 128, jnp.int32).astype(jnp.int8)
     wm = jax.random.randint(KEY, (K, N), -127, 128, jnp.int32).astype(jnp.int8)
-    y = bfp_matmul(xm, wm, jnp.int32(-2), bm=bm, bn=bn, bk=bk, interpret=True)
+    y = bfp_matmul(xm[None], wm[None], jnp.int32(-2), bm=bm, bn=bn, bk=bk,
+                   interpret=True)
     np.testing.assert_array_equal(
         np.asarray(y), np.asarray(ref.bfp_matmul_ref(xm, wm, jnp.int32(-2))))
 
 
-@pytest.mark.parametrize("bits", [8, 10, 12, 16])
+@pytest.mark.parametrize("bits", [8, 10, 12, 14, 16])
 def test_limb_decomposition_roundtrip(bits):
-    m = jax.random.randint(KEY, (64, 64), -(2 ** (bits - 1) - 1),
-                           2 ** (bits - 1), jnp.int32)
-    limbs = ops._split_limbs(m, bits)
-    rec = sum(l.astype(jnp.int32) * (2 ** s) for l, s in limbs)
+    """Stacked limb planes reconstruct the logical mantissa exactly.
+
+    b=14 is the regression width: the old mod-extracting final limb dropped
+    a carry of ±1·2^14 at the extreme mantissa ±8191 (the raw-carry final
+    plane keeps it)."""
+    lim = 2 ** (bits - 1) - 1
+    m = jax.random.randint(KEY, (64, 64), -lim, lim + 1, jnp.int32)
+    m = m.at[0, 0].set(lim).at[0, 1].set(-lim)     # force the carry corners
+    planes = ops.split_limbs_stacked(m, bits)
+    rec = sum(planes[j].astype(jnp.int32) * (2 ** (7 * j))
+              for j in range(planes.shape[0]))
     np.testing.assert_array_equal(np.asarray(rec), np.asarray(m))
-    for l, _ in limbs:
-        assert l.dtype == jnp.int8
+    assert planes.dtype == jnp.int8
+    assert planes.shape[0] == {8: 1, 10: 2, 12: 2, 14: 2, 16: 3}[bits]
+    # every non-final digit balanced in [-64, 63]; final carry within int8
+    pl_np = np.asarray(planes, np.int32)
+    if pl_np.shape[0] > 1:
+        assert pl_np[:-1].min() >= -64 and pl_np[:-1].max() <= 63
+        assert pl_np[-1].min() >= -64 and pl_np[-1].max() <= 64
 
 
 @pytest.mark.parametrize("xb,wb", [(8, 8), (12, 8), (12, 12), (16, 16)])
@@ -114,19 +128,19 @@ def test_bfp_matmul_batched_exact(E, M, K, N):
                                           bfp_matmul_batched_nt,
                                           bfp_matmul_batched_tn)
     exps = jnp.arange(E, dtype=jnp.int32) - 3
-    # NN: (E, M, K) @ (E, K, N)
+    # NN: (E, M, K) @ (E, K, N) — kernels take plane-major (L, E, ...) stacks
     xm = jax.random.randint(KEY, (E, 128, 128), -127, 128,
                             jnp.int32).astype(jnp.int8)
     wm = jax.random.randint(jax.random.fold_in(KEY, 1), (E, 128, 128),
                             -127, 128, jnp.int32).astype(jnp.int8)
-    y = bfp_matmul_batched(xm, wm, exps, interpret=True)
+    y = bfp_matmul_batched(xm[None], wm[None], exps, interpret=True)
     np.testing.assert_array_equal(
         np.asarray(y), np.asarray(ref.bfp_matmul_batched_ref(xm, wm, exps)))
-    ynt = bfp_matmul_batched_nt(xm, wm, exps, interpret=True)
+    ynt = bfp_matmul_batched_nt(xm[None], wm[None], exps, interpret=True)
     np.testing.assert_array_equal(
         np.asarray(ynt),
         np.asarray(ref.bfp_matmul_batched_nt_ref(xm, wm, exps)))
-    ytn = bfp_matmul_batched_tn(xm, wm, exps, interpret=True)
+    ytn = bfp_matmul_batched_tn(xm[None], wm[None], exps, interpret=True)
     np.testing.assert_array_equal(
         np.asarray(ytn),
         np.asarray(ref.bfp_matmul_batched_tn_ref(xm, wm, exps)))
@@ -225,6 +239,51 @@ def test_pick_blocks_small_and_ragged(M, N, K):
     assert ops._round_up_multiple(M, bm) % bm == 0
 
 
+@pytest.mark.parametrize("lx,lw", [(1, 1), (2, 2), (3, 3), (3, 1)])
+def test_pick_blocks_vmem_budget(lx, lw):
+    """The block chooser accounts for the limb-plane count and the per-pair
+    accumulator scratch: at any limb count the chosen blocks fit the VMEM
+    budget, and under a tight injected budget the 3×3-limb working set
+    shrinks the sublane dim where the 1-limb one would not (regression: the
+    old chooser sized blocks for the 1-limb case only)."""
+    bm, bn, bk = ops._pick_blocks(4096, 4096, 4096, lx, lw)
+    assert bn == 128 and bk == 128 and bm % 8 == 0
+    assert ops.matmul_vmem_bytes(bm, bn, bk, lx, lw) <= ops._VMEM_BUDGET
+    # the default budget has headroom even for 3x3 limbs at full tiles
+    if (lx, lw) == (3, 3):
+        assert bm == 128
+    # tight budget: fits 1-limb at bm=128 but NOT 3x3-limb
+    tight = ops.matmul_vmem_bytes(128, 128, 128, 1, 1)
+    b1 = ops._pick_blocks(4096, 4096, 4096, 1, 1, budget=tight)
+    b9 = ops._pick_blocks(4096, 4096, 4096, 3, 3, budget=tight)
+    assert b1 == (128, 128, 128)
+    assert b9[0] < 128 and b9[0] % 8 == 0          # sublane dim shrank
+    assert ops.matmul_vmem_bytes(*b9, 3, 3) <= tight or b9[0] == 8
+    # TN interpretation: the shrinkable first dim is the CONTRACTED block —
+    # the accumulator/output tiles stay (128, 128), so the budget model must
+    # not scale them with it (regression: the chooser used the NN model and
+    # returned blocks whose real TN working set exceeded the budget)
+    bt = ops._pick_blocks(4096, 4096, 4096, lx, lw, budget=tight,
+                          contracted_sublane=True)
+    assert ops.matmul_vmem_bytes(bt[0], bt[1], bt[2], lx, lw,
+                                 contracted_sublane=True) <= tight \
+        or bt[0] == 8
+    fixed = lx * lw * 128 * 128 * 4 + 2 * 128 * 128 * 4
+    assert ops.matmul_vmem_bytes(8, 128, 128, lx, lw,
+                                 contracted_sublane=True) >= fixed
+
+
+def test_matmul_vmem_bytes_model():
+    """9 limb pairs cost ~9x the accumulator scratch and 3x the operand
+    stacks of the 1-limb case — the quantities the chooser must see."""
+    one = ops.matmul_vmem_bytes(128, 128, 128, 1, 1)
+    nine = ops.matmul_vmem_bytes(128, 128, 128, 3, 3)
+    assert nine > 3 * one
+    assert nine == (2 * (3 + 3) * 128 * 128        # int8 operand stacks x2
+                    + 9 * 128 * 128 * 4            # per-pair int32 acc
+                    + 2 * 128 * 128 * 4)           # f32 out block x2
+
+
 @pytest.mark.parametrize("M,N,K", [(3, 5, 2), (100, 37, 60), (130, 128, 250)])
 def test_dfx_matmul_tiled_ragged_shapes(M, N, K):
     x = jax.random.normal(KEY, (M, K)) * 1.5
@@ -272,7 +331,7 @@ def test_bfp_matmul_nt_tn_block_shapes(blocks):
     gm = jax.random.randint(KEY, (M, N), -127, 128, jnp.int32).astype(jnp.int8)
     wm = jax.random.randint(jax.random.fold_in(KEY, 1), (K, N), -127, 128,
                             jnp.int32).astype(jnp.int8)
-    y = bfp_matmul_nt(gm, wm, jnp.int32(-1), bm=bm, bn=bn, bk=bk,
+    y = bfp_matmul_nt(gm[None], wm[None], jnp.int32(-1), bm=bm, bn=bn, bk=bk,
                       interpret=True)
     np.testing.assert_array_equal(
         np.asarray(y), np.asarray(ref.bfp_matmul_nt_ref(gm, wm, jnp.int32(-1))))
@@ -280,7 +339,7 @@ def test_bfp_matmul_nt_tn_block_shapes(blocks):
                             jnp.int32).astype(jnp.int8)
     gm2 = jax.random.randint(jax.random.fold_in(KEY, 3), (N, K), -127, 128,
                              jnp.int32).astype(jnp.int8)
-    y2 = bfp_matmul_tn(xm, gm2, jnp.int32(2), bm=bm, bn=bn, bk=bk,
+    y2 = bfp_matmul_tn(xm[None], gm2[None], jnp.int32(2), bm=bm, bn=bn, bk=bk,
                        interpret=True)
     np.testing.assert_array_equal(
         np.asarray(y2),
