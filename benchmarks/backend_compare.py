@@ -22,7 +22,11 @@ and reports
   dispatch per direction at every width since the single-dispatch limb
   fusion (was ``limbs²`` ≤ 9) — plus the HBM-bytes traffic model from
   ``benchmarks/roofline.py`` (off-TPU the timings measure the Pallas
-  interpreter, so the byte model is what makes them interpretable).
+  interpreter, so the byte model is what makes them interpretable),
+* a policy section (``policy``): per-scope resolved bit-widths of the
+  ``int8_embed16`` mixed-precision QuantPolicy plus per-step traced
+  dispatch counts and wall-clock for uniform-int8 vs mixed on the proxy
+  fine-tune step — the mixed policy's dispatch delta is pinned at 0.
 
 Emits a single JSON document (stdout, or ``--out FILE``):
 
@@ -272,6 +276,44 @@ def norm_bwd_report(preset: str = "int16", repeats: int = 3) -> dict:
     return {"preset": preset, "layers": layers}
 
 
+def policy_report(preset: str = "int8_embed16", repeats: int = 3) -> dict:
+    """Mixed-precision policy vs uniform base: per-scope resolved bits +
+    per-step traced dispatches and wall-clock on the proxy fine-tune task.
+
+    The resolved table is what a ``QuantPolicy`` actually hands each call
+    site (the per-tensor-class leaf configs); the step rows pin the
+    acceptance property that a policy touching only non-stacked scopes
+    (embeddings/head) traces the exact uniform dispatch count.  Explicit
+    policies are constructed so the section is independent of
+    ``$REPRO_QPOLICY``.
+    """
+    from benchmarks.tasks import FtConfig, step_stats
+    from repro.core.qpolicy import QuantPolicy, preset_rules
+
+    base = dataclasses.replace(QuantConfig.int8(), backend="pallas",
+                               stochastic_grad=False)
+    uniform = QuantPolicy(base=base)
+    mixed = QuantPolicy(base=base, rules=preset_rules(preset))
+    probe_paths = ("embed", "embed_ln", "blocks.0.attn.wq", "blocks.0.mlp.w1",
+                   "blocks.2.ln1", "head")
+    resolved = {}
+    for path in probe_paths:
+        leaf = mixed.resolve(path)
+        resolved[path] = {"weight_bits": leaf.weight_bits,
+                          "act_bits": leaf.act_bits,
+                          "grad_bits": leaf.grad_bits}
+    ft = FtConfig(steps=1)
+    rows = {}
+    for name, pol in (("uniform_int8", uniform), (preset, mixed)):
+        s = step_stats("cls", pol, ft, repeats=repeats)
+        rows[name] = {"pallas_calls_per_step": s["pallas_calls"],
+                      "step_us": s["step_us"]}
+    return {"preset": preset, "resolved_bits": resolved, "steps": rows,
+            "dispatch_delta_vs_uniform":
+                rows[preset]["pallas_calls_per_step"]
+                - rows["uniform_int8"]["pallas_calls_per_step"]}
+
+
 def run(repeats: int = 3) -> dict:
     return {
         "task": "backend_compare",
@@ -281,6 +323,7 @@ def run(repeats: int = 3) -> dict:
         "moe_dispatch": moe_dispatch_report(),
         "matmul_dispatch": matmul_dispatch_report(repeats=repeats),
         "norm_bwd": norm_bwd_report(repeats=repeats),
+        "policy": policy_report(repeats=repeats),
     }
 
 

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 
 from repro.core import int_ops
 from repro.core.qconfig import QuantConfig
+from repro.core.qpolicy import QuantPolicy, preset_rules
 from repro.utils import count_pallas_calls
 
 BASELINE_PATH = os.path.join(os.path.dirname(__file__),
@@ -79,7 +80,44 @@ def current_counts() -> dict:
             "rmsnorm_fwd": count(rn, d),
             "rmsnorm_fwd_bwd": count(jax.grad(rn_l), d),
         }
+    counts["policy"] = policy_counts()
     return counts
+
+
+def policy_counts() -> dict:
+    """Model-level traced dispatch counts under mixed-precision policies.
+
+    Pins the single-dispatch guarantee under non-uniform bit-widths: a
+    mixed policy whose rules only touch non-stacked scopes (embeddings /
+    head — ``int8_embed16``) must trace EXACTLY the uniform int8 count,
+    and a policy that splits the layer stack (``int8_firstlast16``) traces
+    one extra scan body per run of identically-resolved layers — both are
+    pinned so neither a reintroduced per-limb loop nor an accidental
+    stack split can land silently.  Explicit ``QuantPolicy`` objects are
+    used throughout so the counts are independent of ``$REPRO_QPOLICY``.
+    """
+    from repro.models import paper_models as pm
+
+    key = jax.random.PRNGKey(0)
+    cfg = pm.bert_config(n_layers=4, d_model=64, n_heads=4, d_ff=128,
+                         vocab=128, name="bert-gate")
+    params = pm.bert_init(key, cfg, num_labels=4)
+    batch = {"tokens": jax.random.randint(key, (2, 16), 0, cfg.vocab),
+             "labels": jnp.zeros((2,), jnp.int32)}
+    base = _cfg("int8")
+
+    def step_count(policy):
+        def loss(p):
+            return pm.bert_cls_loss(p, batch, cfg, policy, None)[0]
+        return count_pallas_calls(jax.make_jaxpr(jax.grad(loss))(params))
+
+    return {
+        "bert_step_int8": step_count(QuantPolicy(base=base)),
+        "bert_step_int8_embed16": step_count(
+            QuantPolicy(base=base, rules=preset_rules("int8_embed16"))),
+        "bert_step_int8_firstlast16": step_count(
+            QuantPolicy(base=base, rules=preset_rules("int8_firstlast16"))),
+    }
 
 
 def compare(current: dict, baseline: dict) -> tuple[list, list]:

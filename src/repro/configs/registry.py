@@ -48,6 +48,21 @@ def use_fsdp(arch: str) -> bool:
     return arch in FSDP_ARCHS
 
 
+#: every quantization preset a ``--quant`` flag accepts: the paper's uniform
+#: QuantConfig grid plus the mixed-precision QuantPolicy presets.
+def quant_ids():
+    from repro.core import qpolicy
+    return qpolicy.ALL_PRESETS
+
+
+def get_quant(name: str):
+    """``--quant <name>`` -> QuantConfig (uniform presets) or QuantPolicy
+    (path-scoped presets like ``int8_embed16``); every launcher and model
+    entry point accepts either."""
+    from repro.core import qpolicy
+    return qpolicy.get(name)
+
+
 # ---------------------------------------------------------------------------
 # input specs per (arch, shape)
 # ---------------------------------------------------------------------------

@@ -537,6 +537,11 @@ def int_conv1d_depthwise(x: Array, w: Array, key, cfg: QuantConfig) -> Array:
     elementwise products — each product is an integer multiply of two DFX
     mantissas, so forward and backward stay integer (backward follows from
     int_linear-style custom_vjp on the unrolled form).
+
+    Honors ``cfg.stochastic_fwd`` with the linear layers' key-split
+    contract: forward activation noise from the first split, gradient
+    quantization from the remainder — bit-identical across backends under
+    the same key (tests/test_conv_stochastic.py).
     """
     K = w.shape[0]
     if not cfg.enabled:
@@ -554,7 +559,10 @@ def _int_dwconv(x, w, key, cfg: QuantConfig, K: int):
 def _int_dwconv_fwd(x, w, key, cfg: QuantConfig, K: int):
     # backend-routed quantization (the shifted elementwise products stay in
     # XLA — they are VPU work, not MXU work; only the mapping runs in-kernel)
-    qx = _quantize(x, cfg.act_bits, cfg)
+    kf = None
+    if cfg.stochastic_fwd and key is not None:
+        key, kf = jax.random.split(key)
+    qx = _quantize(x, cfg.act_bits, cfg, stochastic=kf is not None, key=kf)
     qw = _quantize(w, cfg.weight_bits, cfg)
     xm = qx.m.astype(jnp.float32)
     wm = qw.m.astype(jnp.float32)

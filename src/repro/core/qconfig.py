@@ -18,7 +18,22 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import warnings
 from typing import Optional
+
+
+class StabilityWarning(UserWarning):
+    """The paper's empirical stability constraint is violated: Figure 4
+    shows w8·a8·g8 diverging while w8·a12·g8 tracks FP32 — 8-bit weights
+    need >= 12-bit activations.  A warning (not an error) because the
+    diverging configuration is itself a paper experiment
+    (``int8_naive``)."""
+
+
+def stability_violated(cfg: "QuantConfig") -> bool:
+    """Paper's empirical stability constraint (Fig. 4): 8-bit weights need
+    >= 12-bit activations."""
+    return cfg.enabled and cfg.weight_bits == 8 and cfg.act_bits < 12
 
 
 def _env_default_backend() -> str:
@@ -61,12 +76,22 @@ class QuantConfig:
     #: interpret mode off-TPU.  Defaults to $REPRO_BACKEND (else "sim") so
     #: CI can matrix the whole suite over both backends.
     backend: str = dataclasses.field(default_factory=_env_default_backend)
+    #: emit a ``StabilityWarning`` when the paper's "act_bits >= 12 when
+    #: weight_bits == 8" constraint is violated (Fig. 4's divergence).
+    #: Opt-out knob, not an error — ``int8_naive`` is a paper experiment.
+    warn_stability: bool = True
 
     def __post_init__(self):
         for name in ("weight_bits", "act_bits", "grad_bits"):
             b = getattr(self, name)
             if not (2 <= b <= 24):
                 raise ValueError(f"{name}={b} outside supported range [2, 24]")
+        if self.warn_stability and stability_violated(self):
+            warnings.warn(
+                f"weight_bits=8 with act_bits={self.act_bits} < 12 violates "
+                "the paper's stability constraint (Fig. 4: w8-a8-g8 diverges "
+                "while w8-a12-g8 matches FP32); pass warn_stability=False to "
+                "silence", StabilityWarning, stacklevel=2)
         if self.block_size is not None and self.block_size < 8:
             raise ValueError("block_size must be >= 8 (VMEM lane alignment)")
         if self.backend not in ("sim", "pallas"):
@@ -105,7 +130,11 @@ class QuantConfig:
         return QuantConfig(weight_bits=8, act_bits=8, grad_bits=8)
 
     @staticmethod
-    def preset(name: str) -> "QuantConfig":
+    def preset(name: str):
+        """Config preset by name.  Policy-preset names (``"int8_embed16"``,
+        ...) return a ``QuantPolicy`` — every model entry point accepts
+        either, so ``--quant int8_embed16`` works wherever ``--quant int8``
+        does."""
         table = {
             "fp32": QuantConfig.fp32,
             "int16": QuantConfig.int16,
@@ -114,9 +143,13 @@ class QuantConfig:
             "int8": QuantConfig.int8,
             "int8_naive": QuantConfig.int8_naive,
         }
-        if name not in table:
-            raise KeyError(f"unknown quant preset {name!r}; have {sorted(table)}")
-        return table[name]()
+        if name in table:
+            return table[name]()
+        from repro.core import qpolicy  # lazy: qpolicy imports this module
+        if name in qpolicy.POLICY_PRESETS:
+            return qpolicy.preset(name)
+        raise KeyError(f"unknown quant preset {name!r}; have "
+                       f"{sorted(table) + sorted(qpolicy.POLICY_PRESETS)}")
 
 
 PRESETS = ("fp32", "int16", "int12", "int10", "int8", "int8_naive")

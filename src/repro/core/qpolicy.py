@@ -1,0 +1,388 @@
+"""Path-scoped quantization policy: per-tensor-class bit-widths per module.
+
+The paper's central experiment varies the integer bit-width of the three
+tensor classes (weights / activations / gradients) — and its Figure 4 shows
+the *right* width is per-tensor-class (w8·a8·g8 diverges, w8·a12·g8 matches
+FP32).  In practice (I-BERT, the NVIDIA quantization recipe) the right width
+is also per-*layer*: embeddings and the classifier head are kept at higher
+precision than the transformer body.  ``QuantPolicy`` makes that expressible
+without touching the kernels:
+
+* every integer call site in the model stack has a hierarchical **path**
+  (``"blocks.3.attn.wq"``, ``"embed"``, ``"final_norm"``),
+* a policy is a frozen, JSON-round-trippable list of ``ScopeRule``s — glob
+  patterns over paths mapping to *partial* overrides of the ``QuantConfig``
+  knobs (``weight_bits`` / ``act_bits`` / ``grad_bits``, stochastic flags,
+  backend),
+* ``policy.resolve(path)`` folds every matching rule over the base config,
+  **most-specific-wins** (see below), and returns a plain ``QuantConfig`` —
+  the resolved *leaf*.  Kernels and ``core.int_ops`` only ever see leaves,
+  so the whole kernel stack is untouched by this layer.
+
+Resolution happens **at trace time** (paths are static Python strings), so a
+uniform policy traces the byte-identical jaxpr of the bare ``QuantConfig``
+it wraps — pinned by ``tests/test_qpolicy.py`` and the dispatch-count gate.
+
+Precedence
+----------
+A rule matches a path when ``fnmatch`` accepts it (``*`` crosses dot
+boundaries: ``"*.mlp.*"`` matches ``"blocks.3.mlp.wg"``).  All matching
+rules are applied in ascending ``(specificity, declaration order)``, so the
+most specific rule is applied last and wins; ties break toward the
+later-declared rule (CSS-like).  Specificity of a pattern is the pair
+``(#literal segments, #literal characters)`` — ``"blocks.0.attn.wq"`` beats
+``"blocks.0.*"`` beats ``"*.attn.*"`` beats ``"*"``.  With zero matching
+rules the base config is returned *by identity*, which is what makes the
+bare-config fast path exact.
+
+Scan-stacked layers
+-------------------
+Model backbones scan one traced layer body over stacked params, so a single
+trace cannot resolve different configs for different layer indices.
+``layer_groups`` partitions the stack into maximal runs of layers whose
+resolved leaves are all equal; the models scan each run with its own scope
+(one extra trace per distinct configuration, zero when uniform).  Block
+scopes carry a **negative-index alias** (`"blocks.-1"` is the last layer),
+so presets can pin first/last layers without knowing the depth.
+
+Environment default
+-------------------
+``$REPRO_QPOLICY=<policy preset>`` layers that preset's *rules* over any
+bare ``QuantConfig`` entering the model stack — the same env-default
+mechanism as ``$REPRO_BACKEND``, letting CI run a mixed-policy smoke leg
+without threading a flag through every test.  Explicitly constructed
+``QuantPolicy`` objects are never rewritten.
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+import functools
+import json
+import os
+import warnings
+from typing import Any, Dict, Iterable, List, Mapping, Optional, Sequence, \
+    Tuple, Union
+
+from repro.core.qconfig import PRESETS as CONFIG_PRESETS
+from repro.core.qconfig import QuantConfig, StabilityWarning, \
+    stability_violated
+
+_CONFIG_FIELDS = frozenset(f.name for f in dataclasses.fields(QuantConfig))
+_WILD = "*?["
+
+
+def _freeze_overrides(overrides: Mapping[str, Any]) -> Tuple[Tuple[str, Any], ...]:
+    bad = set(overrides) - _CONFIG_FIELDS
+    if bad:
+        raise ValueError(f"unknown QuantConfig field(s) in rule overrides: "
+                         f"{sorted(bad)}; have {sorted(_CONFIG_FIELDS)}")
+    return tuple(sorted(overrides.items()))
+
+
+@dataclasses.dataclass(frozen=True)
+class ScopeRule:
+    """One glob pattern -> partial QuantConfig override."""
+
+    pattern: str
+    #: sorted ``(field, value)`` pairs — kept as a tuple so the rule (and the
+    #: policy holding it) stays hashable / usable as a static jit argument.
+    overrides: Tuple[Tuple[str, Any], ...] = ()
+
+    def __post_init__(self):
+        if not isinstance(self.pattern, str) or not self.pattern:
+            raise ValueError("rule pattern must be a non-empty string")
+        object.__setattr__(self, "overrides",
+                           _freeze_overrides(dict(self.overrides)))
+
+    def matches(self, path: str) -> bool:
+        return fnmatch.fnmatchcase(path, self.pattern)
+
+
+def rule(pattern: str, **overrides: Any) -> ScopeRule:
+    """Convenience constructor: ``rule("embed*", weight_bits=16)``."""
+    return ScopeRule(pattern=pattern, overrides=tuple(overrides.items()))
+
+
+def specificity(pattern: str) -> Tuple[int, int]:
+    """``(#literal segments, #literal chars)`` — the precedence key."""
+    segs = pattern.split(".")
+    lit_segs = sum(1 for s in segs if s and not any(c in s for c in _WILD))
+    lit_chars = sum(1 for c in pattern if c not in "*?[]")
+    return (lit_segs, lit_chars)
+
+
+@functools.lru_cache(maxsize=8192)
+def _resolve(policy: "QuantPolicy", paths: Tuple[str, ...]) -> QuantConfig:
+    matched = []
+    for idx, r in enumerate(policy.rules):
+        if any(r.matches(p) for p in paths):
+            matched.append((specificity(r.pattern), idx, r))
+    if not matched:
+        return policy.base            # identity: bare-config fast path
+    matched.sort(key=lambda t: (t[0], t[1]))
+    over: Dict[str, Any] = {}
+    for _, _, r in matched:
+        over.update(dict(r.overrides))
+    with warnings.catch_warnings():
+        # the stability warning is emitted (uncached, per resolve call) by
+        # QuantPolicy.resolve — inside this cached body it would only fire
+        # on the first resolution of equal (policy, paths) per process
+        warnings.simplefilter("ignore", StabilityWarning)
+        return dataclasses.replace(policy.base, **over)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    """Frozen ordered rule list over a base ``QuantConfig``.
+
+    ``resolve(path)`` is total: every path resolves (to ``base`` when no
+    rule matches), deterministic, and cached per ``(policy, path)``.
+    """
+
+    base: QuantConfig = dataclasses.field(default_factory=QuantConfig)
+    rules: Tuple[ScopeRule, ...] = ()
+
+    def __post_init__(self):
+        if not isinstance(self.base, QuantConfig):
+            # e.g. a policy-preset name fed where a config preset was
+            # expected: QuantConfig.preset("int8_embed16") is already a
+            # QuantPolicy — fail fast instead of deep in resolution
+            raise TypeError(
+                f"QuantPolicy.base must be a QuantConfig, got "
+                f"{type(self.base).__name__}; policies do not nest — "
+                "compose rule lists instead")
+        object.__setattr__(self, "rules", tuple(
+            r if isinstance(r, ScopeRule) else ScopeRule(*r)
+            for r in self.rules))
+
+    # -- resolution -------------------------------------------------------
+    @property
+    def uniform(self) -> bool:
+        """True when resolution cannot depend on the path."""
+        return not self.rules
+
+    def resolve(self, path: Union[str, Sequence[str]]) -> QuantConfig:
+        """Resolved leaf config for ``path`` (or any of its alias paths)."""
+        paths = (path,) if isinstance(path, str) else tuple(path)
+        leaf = _resolve(self, paths)
+        if (leaf is not self.base          # base warned at construction
+                and leaf.warn_stability and stability_violated(leaf)):
+            warnings.warn(
+                f"policy resolution at {paths[0]!r} lands in the Fig. 4 "
+                f"divergence regime (weight_bits=8, act_bits="
+                f"{leaf.act_bits} < 12); override warn_stability=False in "
+                "the rule to silence", StabilityWarning, stacklevel=2)
+        return leaf
+
+    # -- JSON round trip --------------------------------------------------
+    def to_json(self) -> str:
+        doc = {
+            "base": dataclasses.asdict(self.base),
+            "rules": [{"pattern": r.pattern, "overrides": dict(r.overrides)}
+                      for r in self.rules],
+        }
+        return json.dumps(doc, sort_keys=True)
+
+    @staticmethod
+    def from_json(doc: Union[str, Mapping[str, Any]]) -> "QuantPolicy":
+        if isinstance(doc, str):
+            doc = json.loads(doc)
+        base = QuantConfig(**doc.get("base", {}))
+        rules = tuple(
+            ScopeRule(pattern=r["pattern"],
+                      overrides=tuple(r.get("overrides", {}).items()))
+            for r in doc.get("rules", ()))
+        return QuantPolicy(base=base, rules=rules)
+
+    # -- presets ----------------------------------------------------------
+    @staticmethod
+    def preset(name: str) -> "QuantPolicy":
+        return preset(name)
+
+
+# =========================================================================
+# Scope: a policy + the current position in the module-path hierarchy
+# =========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class Scope:
+    """A ``QuantPolicy`` plus the dotted path of the current module.
+
+    The model stack threads one of these down through its blocks:
+    ``scope.child("attn")`` descends, ``scope.leaf("wq")`` resolves the leaf
+    config an ``int_linear`` call site consumes.  ``aliases`` holds
+    alternative spellings of the same position (the negative layer index of
+    a block inside a stack), so rules like ``"blocks.-1.*"`` can address the
+    last layer without knowing the depth.
+    """
+
+    policy: QuantPolicy = dataclasses.field(default_factory=QuantPolicy)
+    path: Tuple[str, ...] = ()
+    aliases: Tuple[Tuple[str, ...], ...] = ()
+
+    def _paths_for(self, extra: Tuple[str, ...]) -> Tuple[str, ...]:
+        return tuple(".".join(p + extra)
+                     for p in (self.path,) + self.aliases)
+
+    def child(self, name: str, alias: Optional[str] = None) -> "Scope":
+        """Descend one level; ``alias`` registers an alternative segment
+        name for this level (e.g. the negative block index)."""
+        segs = tuple(str(name).split("."))
+        new_aliases: List[Tuple[str, ...]] = [a + segs for a in self.aliases]
+        if alias is not None:
+            asegs = tuple(str(alias).split("."))
+            new_aliases += [p + asegs
+                            for p in (self.path,) + self.aliases]
+        return Scope(policy=self.policy, path=self.path + segs,
+                     aliases=tuple(new_aliases))
+
+    def cfg(self) -> QuantConfig:
+        """Resolved leaf config at the scope's own path."""
+        return self.policy.resolve(self._paths_for(()))
+
+    def leaf(self, name: str) -> QuantConfig:
+        """Resolved leaf config at ``path + "." + name``."""
+        return self.policy.resolve(self._paths_for(tuple(name.split("."))))
+
+
+QuantLike = Union[QuantConfig, QuantPolicy, Scope]
+
+
+class PolicyScopeError(ValueError):
+    """A policy's scope rules cannot be realized on this model structure —
+    e.g. per-layer-index rules on the hybrid family's interleaved stack.
+    Sweep drivers catch this to record the cell as skipped, not failed."""
+
+
+def _env_default_rules() -> Tuple[ScopeRule, ...]:
+    """Rules layered over bare configs when ``$REPRO_QPOLICY`` names a
+    policy preset (CI mixed-policy smoke leg) — read per call so tests can
+    monkeypatch the environment."""
+    name = os.environ.get("REPRO_QPOLICY", "")
+    if not name:
+        return ()
+    return preset_rules(name)
+
+
+def as_policy(q: QuantLike) -> QuantPolicy:
+    """Coerce config-or-policy to a policy.
+
+    A bare ``QuantConfig`` becomes the implicit single-rule policy (just a
+    base, no rules — resolution is the identity), plus any
+    ``$REPRO_QPOLICY`` environment rules.  Explicit policies and scopes
+    pass through untouched.
+    """
+    if isinstance(q, Scope):
+        return q.policy
+    if isinstance(q, QuantPolicy):
+        return q
+    if isinstance(q, QuantConfig):
+        return QuantPolicy(base=q, rules=_env_default_rules())
+    raise TypeError(f"expected QuantConfig | QuantPolicy | Scope, got "
+                    f"{type(q).__name__}")
+
+
+def ensure_scope(q: QuantLike) -> Scope:
+    """Coerce any quantization argument to a root-or-descended ``Scope``."""
+    if isinstance(q, Scope):
+        return q
+    return Scope(policy=as_policy(q))
+
+
+# =========================================================================
+# Scan-stack grouping
+# =========================================================================
+
+def layer_scope(scope: Scope, stack: str, i: int, n: int) -> Scope:
+    """Scope of layer ``i`` of an ``n``-deep stack named ``stack``, with the
+    negative-index alias (``blocks.-1`` == last layer)."""
+    return scope.child(stack).child(str(i), alias=str(i - n))
+
+
+def layer_groups(scope: Scope, n: int, leaves: Sequence[str],
+                 stack: str = "blocks") -> List[Tuple[int, int, Scope]]:
+    """Partition layer indices ``0..n-1`` into maximal runs whose resolved
+    leaf configs are identical.
+
+    Returns ``[(start, stop, scope)]`` where ``scope`` is the first layer's
+    scope — valid for every layer in the run because all of the run's
+    ``leaves`` resolve equal.  A uniform policy always yields one group, and
+    callers take the unsliced scan path in that case, keeping the traced
+    jaxpr byte-identical to the bare-config one.
+    """
+    scopes = [layer_scope(scope, stack, i, n) for i in range(n)]
+    if scope.policy.uniform:
+        return [(0, n, scopes[0])]
+    keys = [tuple(s.leaf(l) for l in leaves) for s in scopes]
+    groups: List[Tuple[int, int, Scope]] = []
+    start = 0
+    for i in range(1, n + 1):
+        if i == n or keys[i] != keys[start]:
+            groups.append((start, i, scopes[start]))
+            start = i
+    return groups
+
+
+# =========================================================================
+# Presets
+# =========================================================================
+
+_HI16 = (("act_bits", 16), ("grad_bits", 16), ("weight_bits", 16))
+
+#: policy presets: name -> (base config preset, rule tuple).  Patterns are
+#: model-agnostic: "*embed*" covers embed / type_embed / patch_embed /
+#: embed_ln, "*head*" covers lm_head and the classifier heads, and the
+#: first/last rules use the stack names (blocks / enc / dec) with the
+#: negative-index alias for "last".
+_POLICY_TABLE: Dict[str, Tuple[str, Tuple[ScopeRule, ...]]] = {
+    # paper-style int8 body with 16-bit embeddings and final head (the
+    # I-BERT / NVIDIA-recipe "keep the sensitive ends wide" configuration)
+    "int8_embed16": ("int8", (
+        ScopeRule("*embed*", _HI16),
+        ScopeRule("*head*", _HI16),
+    )),
+    # additionally keep the first and last transformer block 16-bit
+    "int8_firstlast16": ("int8", (
+        ScopeRule("*embed*", _HI16),
+        ScopeRule("*head*", _HI16),
+        ScopeRule("blocks.0.*", _HI16),
+        ScopeRule("blocks.-1.*", _HI16),
+        ScopeRule("enc.0.*", _HI16),
+        ScopeRule("enc.-1.*", _HI16),
+        ScopeRule("dec.0.*", _HI16),
+        ScopeRule("dec.-1.*", _HI16),
+    )),
+}
+
+POLICY_PRESETS = tuple(_POLICY_TABLE)
+
+
+def preset_rules(name: str) -> Tuple[ScopeRule, ...]:
+    """The rule list of a policy preset (base config not included)."""
+    if name not in _POLICY_TABLE:
+        raise KeyError(f"unknown policy preset {name!r}; "
+                       f"have {sorted(_POLICY_TABLE)}")
+    return _POLICY_TABLE[name][1]
+
+
+def preset(name: str) -> QuantPolicy:
+    """A *policy* preset by name — ``get`` is the unified lookup that also
+    resolves the uniform config presets."""
+    rules = preset_rules(name)                  # KeyError on non-policy names
+    return QuantPolicy(base=QuantConfig.preset(_POLICY_TABLE[name][0]),
+                       rules=rules)
+
+
+def get(name: str) -> QuantLike:
+    """Unified preset lookup: plain config presets resolve to a bare
+    ``QuantConfig``, policy presets to a ``QuantPolicy``."""
+    if name in _POLICY_TABLE:
+        return preset(name)
+    if name in CONFIG_PRESETS:
+        return QuantConfig.preset(name)
+    raise KeyError(f"unknown quant preset {name!r}; have "
+                   f"{sorted(CONFIG_PRESETS) + sorted(_POLICY_TABLE)}")
+
+
+ALL_PRESETS = tuple(CONFIG_PRESETS) + POLICY_PRESETS

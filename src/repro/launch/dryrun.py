@@ -396,17 +396,26 @@ def run_cell(arch: str, shape: str, mesh, mesh_name: str,
             active_params=cfg.active_param_count(),
         )
     except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
-        rec.update(status="error", error=f"{type(e).__name__}: {e}",
-                   traceback=traceback.format_exc()[-4000:])
+        from repro.core.qpolicy import PolicyScopeError
+        if isinstance(e, PolicyScopeError):
+            # documented (policy x arch) incompatibility, not a failure —
+            # e.g. per-layer-index rules on the hybrid stack
+            rec.update(status="skipped", reason=str(e))
+        else:
+            rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                       traceback=traceback.format_exc()[-4000:])
     finally:
         sharding.set_mesh(None)
         restore_variant()
     return _write(rec, outdir)
 
 
-def dataclass_dict(qcfg: QuantConfig) -> Dict[str, Any]:
+def dataclass_dict(qcfg) -> Dict[str, Any]:
     import dataclasses
-    return dataclasses.asdict(qcfg)
+    import json as _json
+    if isinstance(qcfg, QuantConfig):
+        return dataclasses.asdict(qcfg)
+    return _json.loads(qcfg.to_json())          # QuantPolicy
 
 
 def _write(rec: Dict[str, Any], outdir: str) -> Dict[str, Any]:
@@ -423,8 +432,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None, choices=list(registry.ARCH_IDS))
     ap.add_argument("--shape", default=None, choices=list(SHAPES))
-    ap.add_argument("--quant", default="int8", choices=["fp32", "int16", "int12",
-                                                        "int10", "int8"])
+    ap.add_argument("--quant", default="int8",
+                    choices=list(registry.quant_ids()))
     ap.add_argument("--single-pod-only", action="store_true")
     ap.add_argument("--multi-pod-only", action="store_true")
     ap.add_argument("--outdir", default="experiments/dryrun")
@@ -436,7 +445,7 @@ def main() -> None:
                     help="skip cells whose JSON already exists with status ok/skipped")
     args = ap.parse_args()
 
-    qcfg = QuantConfig.preset(args.quant)
+    qcfg = registry.get_quant(args.quant)
     archs = [args.arch] if args.arch else list(registry.ARCH_IDS)
     shapes = [args.shape] if args.shape else list(SHAPES)
     meshes = []

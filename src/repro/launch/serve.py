@@ -14,7 +14,6 @@ import numpy as np
 
 from repro import sharding
 from repro.configs import registry
-from repro.core.qconfig import QuantConfig
 from repro.launch.mesh import make_host_mesh
 from repro.models import lm
 from repro.serve.engine import ContinuousBatcher, Engine, ServeConfig
@@ -41,7 +40,7 @@ def main() -> None:
         cfg = cfg.reduced()
     if cfg.enc_dec:
         raise SystemExit("use examples/whisper_serve.py for enc-dec archs")
-    qcfg = QuantConfig.preset(args.quant)
+    qcfg = registry.get_quant(args.quant)
     mesh = make_host_mesh()
     sharding.set_mesh(mesh)
 

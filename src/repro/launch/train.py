@@ -22,7 +22,6 @@ import numpy as np
 
 from repro import sharding
 from repro.configs import registry
-from repro.core.qconfig import QuantConfig
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.launch.mesh import make_host_mesh
 from repro.models import encdec, lm
@@ -37,7 +36,9 @@ def main() -> None:
                     choices=list(registry.ARCH_IDS))
     ap.add_argument("--reduced", action="store_true",
                     help="smoke-scale config (CPU)")
-    ap.add_argument("--quant", default="int8")
+    ap.add_argument("--quant", default="int8",
+                    help="uniform QuantConfig preset or mixed-precision "
+                         "QuantPolicy preset (e.g. int8_embed16)")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=256)
@@ -53,7 +54,7 @@ def main() -> None:
     cfg = registry.get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    qcfg = QuantConfig.preset(args.quant)
+    qcfg = registry.get_quant(args.quant)
     mesh = make_host_mesh(args.model_parallel)
     sharding.set_mesh(mesh)
 

@@ -5,6 +5,13 @@ layers); softmax / SiLU / GeLU / RoPE stay FP32 per the paper's recipe.
 
 Attention is flash-style (lax.scan over KV chunks, online softmax) so no
 S×S score tensor is ever materialized — required for the 32k/500k shapes.
+
+Quantization argument: every ``apply`` function takes ``qcfg`` as a bare
+``QuantConfig`` (uniform, the paper's setting), a ``QuantPolicy`` (path-
+scoped mixed precision) or a ``Scope`` (a policy already descended to this
+module's path by the caller).  Each integer call site resolves its own leaf
+config at trace time — ``scope.leaf("wq")`` — so the kernels below only
+ever see plain ``QuantConfig`` leaves.
 """
 from __future__ import annotations
 
@@ -17,7 +24,7 @@ import numpy as np
 
 from repro import utils
 from repro.core import int_ops
-from repro.core.qconfig import QuantConfig
+from repro.core.qpolicy import QuantLike, ensure_scope
 from repro.models.config import ArchConfig
 
 Array = jax.Array
@@ -36,6 +43,41 @@ def subkey(key: Optional[Array], i) -> Optional[Array]:
     if isinstance(i, int):
         i = i & 0xFFFFFFFF            # map negative tags into uint32 space
     return jax.random.fold_in(key, i)
+
+
+def mlp_leaves(cfg: ArchConfig, prefix: str = "mlp") -> list:
+    """Integer-layer leaf paths of one MLP (policy-resolution probe set)."""
+    names = ("wg", "wu", "wd") if cfg.act == "silu" else ("w1", "w2")
+    return [f"{prefix}.{n}" for n in names]
+
+
+def scan_stack(make_body, carry, groups, xs):
+    """Scan a layer stack in runs of identically-resolved policy scopes.
+
+    ``groups`` is ``qpolicy.layer_groups`` output (``[(start, stop,
+    scope)]``); ``make_body(scope)`` builds the scan body for one run;
+    ``xs`` is a pytree of per-layer stacked inputs whose leaves all have
+    the stack depth as leading dim — a ``jnp.arange(L)`` index vector rides
+    along as an ordinary element, since ``arange(L)[s:e] == arange(s, e)``.
+
+    With one group (uniform policy, or a bare config) this is exactly
+    ``utils.scan(make_body(scope), carry, xs)`` — no slicing, so the traced
+    jaxpr is byte-identical to the pre-policy path.  With several, each run
+    scans its slice of ``xs`` and stacked outputs are concatenated back in
+    layer order (decode caches, per-layer KV, ...).
+    """
+    if len(groups) == 1:
+        return utils.scan(make_body(groups[0][2]), carry, xs)
+    outs = []
+    for (s, e, bsc) in groups:
+        carry, out = utils.scan(
+            make_body(bsc), carry,
+            jax.tree.map(lambda a, s=s, e=e: a[s:e], xs))
+        outs.append(out)
+    if all(o is None for o in outs):
+        return carry, None
+    return carry, jax.tree.map(lambda *ys: jnp.concatenate(ys, axis=0),
+                               *outs)
 
 
 # =========================================================================
@@ -155,7 +197,7 @@ def attention_init(key, cfg: ArchConfig) -> Params:
 
 
 def attention_apply(
-    p: Params, x: Array, cfg: ArchConfig, qcfg: QuantConfig,
+    p: Params, x: Array, cfg: ArchConfig, qcfg: QuantLike,
     key: Optional[Array],
     *,
     causal: bool = True,
@@ -169,12 +211,15 @@ def attention_apply(
     B, S, D = x.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     G = H // KV
+    sc = ensure_scope(qcfg)
     bq = p.get("bq")
-    q = int_ops.int_linear(x, p["wq"], bq, subkey(key, 0), qcfg)
+    q = int_ops.int_linear(x, p["wq"], bq, subkey(key, 0), sc.leaf("wq"))
     q = q.reshape(B, S, KV, G, hd)
     if kv_override is None:
-        k = int_ops.int_linear(x, p["wk"], p.get("bk"), subkey(key, 1), qcfg)
-        v = int_ops.int_linear(x, p["wv"], p.get("bv"), subkey(key, 2), qcfg)
+        k = int_ops.int_linear(x, p["wk"], p.get("bk"), subkey(key, 1),
+                               sc.leaf("wk"))
+        v = int_ops.int_linear(x, p["wv"], p.get("bv"), subkey(key, 2),
+                               sc.leaf("wv"))
         k = k.reshape(B, S, KV, hd)
         v = v.reshape(B, S, KV, hd)
     else:
@@ -221,7 +266,7 @@ def attention_apply(
         o = flash_attention(q, k, v, causal=causal, q_offset=q_offset,
                             window=cfg.sliding_window if causal else None)
     o = o.reshape(B, S, H * hd)
-    out = int_ops.int_linear(o, p["wo"], None, subkey(key, 3), qcfg)
+    out = int_ops.int_linear(o, p["wo"], None, subkey(key, 3), sc.leaf("wo"))
     return out, new_cache
 
 
@@ -240,16 +285,19 @@ def mlp_init(key, cfg: ArchConfig, d_ff: Optional[int] = None) -> Params:
             "w2": _init(ks[1], (F, D)), "b2": jnp.zeros((D,))}
 
 
-def mlp_apply(p: Params, x: Array, cfg: ArchConfig, qcfg: QuantConfig,
+def mlp_apply(p: Params, x: Array, cfg: ArchConfig, qcfg: QuantLike,
               key: Optional[Array]) -> Array:
+    sc = ensure_scope(qcfg)
     if "wg" in p:
-        g = int_ops.int_linear(x, p["wg"], None, subkey(key, 0), qcfg)
-        u = int_ops.int_linear(x, p["wu"], None, subkey(key, 1), qcfg)
+        g = int_ops.int_linear(x, p["wg"], None, subkey(key, 0), sc.leaf("wg"))
+        u = int_ops.int_linear(x, p["wu"], None, subkey(key, 1), sc.leaf("wu"))
         h = jax.nn.silu(g) * u                       # FP32 non-linearity
-        return int_ops.int_linear(h, p["wd"], None, subkey(key, 2), qcfg)
-    h = int_ops.int_linear(x, p["w1"], p["b1"], subkey(key, 0), qcfg)
+        return int_ops.int_linear(h, p["wd"], None, subkey(key, 2),
+                                  sc.leaf("wd"))
+    h = int_ops.int_linear(x, p["w1"], p["b1"], subkey(key, 0), sc.leaf("w1"))
     h = jax.nn.gelu(h)
-    return int_ops.int_linear(h, p["w2"], p["b2"], subkey(key, 1), qcfg)
+    return int_ops.int_linear(h, p["w2"], p["b2"], subkey(key, 1),
+                              sc.leaf("w2"))
 
 
 # =========================================================================
@@ -271,7 +319,7 @@ def moe_init(key, cfg: ArchConfig) -> Params:
     return p
 
 
-def moe_apply(p: Params, x: Array, cfg: ArchConfig, qcfg: QuantConfig,
+def moe_apply(p: Params, x: Array, cfg: ArchConfig, qcfg: QuantLike,
               key: Optional[Array]) -> Tuple[Array, Array]:
     """Returns (out, aux_loss). x: (B, S, D).
 
@@ -288,8 +336,10 @@ def moe_apply(p: Params, x: Array, cfg: ArchConfig, qcfg: QuantConfig,
     B, S, D = x.shape
     E, K = cfg.moe_experts, cfg.moe_topk
     T = B * S
+    sc = ensure_scope(qcfg)
     xf = x.reshape(T, D)
-    logits = int_ops.int_linear(xf, p["router"], None, subkey(key, 0), qcfg)
+    logits = int_ops.int_linear(xf, p["router"], None, subkey(key, 0),
+                                sc.leaf("router"))
     probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)  # FP32 router
     gate, sel = jax.lax.top_k(probs, K)                          # (T, K)
     gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
@@ -336,11 +386,14 @@ def moe_apply(p: Params, x: Array, cfg: ArchConfig, qcfg: QuantConfig,
     ex_in = _sh.constrain(ex_in, None, _sh.batch_axes(), None)
 
     # --- per-expert integer SwiGLU (per-expert DFX scales) ---------------
-    g = int_ops.int_batched_linear(ex_in, p["wg_e"], subkey(key, 1), qcfg)
-    u = int_ops.int_batched_linear(ex_in, p["wu_e"], subkey(key, 2), qcfg)
+    g = int_ops.int_batched_linear(ex_in, p["wg_e"], subkey(key, 1),
+                                   sc.leaf("wg_e"))
+    u = int_ops.int_batched_linear(ex_in, p["wu_e"], subkey(key, 2),
+                                   sc.leaf("wu_e"))
     h = jax.nn.silu(g) * u
     h = _sh.constrain(h, None, _sh.batch_axes(), "model")
-    ex_out = int_ops.int_batched_linear(h, p["wd_e"], subkey(key, 3), qcfg)
+    ex_out = int_ops.int_batched_linear(h, p["wd_e"], subkey(key, 3),
+                                        sc.leaf("wd_e"))
     ex_out = _sh.constrain(ex_out, None, _sh.batch_axes(), None)
 
     # --- combine (shard-local gather) -------------------------------------
@@ -352,7 +405,8 @@ def moe_apply(p: Params, x: Array, cfg: ArchConfig, qcfg: QuantConfig,
     y = y.reshape(T, K, D).sum(axis=1)
 
     if "shared" in p:
-        y = y + mlp_apply(p["shared"], xf, cfg, qcfg, subkey(key, 4))
+        y = y + mlp_apply(p["shared"], xf, cfg, sc.child("shared"),
+                          subkey(key, 4))
     return y.reshape(B, S, D), aux
 
 
@@ -366,8 +420,9 @@ def norm_init(cfg: ArchConfig) -> Params:
     return {"g": jnp.ones((cfg.d_model,))}
 
 
-def norm_apply(p: Params, x: Array, cfg: ArchConfig, qcfg: QuantConfig,
+def norm_apply(p: Params, x: Array, cfg: ArchConfig, qcfg: QuantLike,
                key: Optional[Array]) -> Array:
+    leaf = ensure_scope(qcfg).cfg()      # the scope path IS the norm's path
     if "b" in p:
-        return int_ops.int_layernorm(x, p["g"], p["b"], key, qcfg)
-    return int_ops.int_rmsnorm(x, p["g"], key, qcfg)
+        return int_ops.int_layernorm(x, p["g"], p["b"], key, leaf)
+    return int_ops.int_rmsnorm(x, p["g"], key, leaf)

@@ -22,13 +22,47 @@ import jax.numpy as jnp
 from repro import sharding
 from repro import utils
 from repro.core import int_ops
-from repro.core.qconfig import QuantConfig
+from repro.core.qpolicy import (PolicyScopeError, QuantLike, ensure_scope,
+                                layer_groups)
 from repro.models import blocks, ssm
 from repro.models.blocks import subkey
 from repro.models.config import ArchConfig
 
 Array = jax.Array
 Params = Dict[str, Any]
+
+
+# =========================================================================
+# Quantization scoping
+# =========================================================================
+# Module paths (resolved against a QuantPolicy at trace time):
+#   embed, mm_proj, final_norm, lm_head
+#   blocks.{i}.{ln1, attn.{wq,wk,wv,wo}, ln2, mlp.{...}, moe.{...}}
+#   blocks.{i}.mamba.{wz,wx,wBC,wdt,conv_x,conv_BC,norm_g,out_proj}
+#   shared_attn.{ln1, attn.*, ln2, mlp.*}          (hybrid family)
+# Block indices also resolve under their negative alias (blocks.-1 = last
+# layer).  Layers are scan-stacked, so a policy that assigns different
+# configs to different block indices splits the scan into runs of
+# identically-resolved layers (qpolicy.layer_groups); a uniform policy keeps
+# the single scan and traces the byte-identical jaxpr of a bare QuantConfig.
+
+
+def _block_leaves(cfg: ArchConfig) -> list:
+    """Every integer-layer leaf path inside one dense transformer block —
+    the probe set layer_groups uses to prove two layers resolve equal."""
+    leaves = ["ln1", "ln2"] + [f"attn.{n}" for n in ("wq", "wk", "wv", "wo")]
+    if cfg.moe_experts:
+        leaves += ["moe.router", "moe.wg_e", "moe.wu_e", "moe.wd_e"]
+        if cfg.moe_shared_dff:
+            leaves += blocks.mlp_leaves(cfg, "moe.shared")
+    else:
+        leaves += blocks.mlp_leaves(cfg)
+    return leaves
+
+
+_MAMBA_LEAVES = ["mamba." + n for n in
+                 ("wz", "wx", "wBC", "wdt", "conv_x", "conv_BC",
+                  "norm_g", "out_proj")]
 
 
 def padded_vocab(cfg: ArchConfig) -> int:
@@ -83,51 +117,73 @@ def lm_init(key, cfg: ArchConfig) -> Params:
 # Layer bodies
 # =========================================================================
 
-def _attn_block(bp: Params, x: Array, cfg: ArchConfig, qcfg: QuantConfig,
+def _attn_block(bp: Params, x: Array, cfg: ArchConfig, qcfg: QuantLike,
                 key, *, cache=None, cache_index=0):
-    h = blocks.norm_apply(bp["ln1"], x, cfg, qcfg, subkey(key, 0))
+    sc = ensure_scope(qcfg)
+    h = blocks.norm_apply(bp["ln1"], x, cfg, sc.child("ln1"), subkey(key, 0))
     h, new_cache = blocks.attention_apply(
-        bp["attn"], h, cfg, qcfg, subkey(key, 1),
+        bp["attn"], h, cfg, sc.child("attn"), subkey(key, 1),
         kv_cache=cache, cache_index=cache_index)
     x = sharding.constrain_tokens(x + h)
-    h = blocks.norm_apply(bp["ln2"], x, cfg, qcfg, subkey(key, 2))
+    h = blocks.norm_apply(bp["ln2"], x, cfg, sc.child("ln2"), subkey(key, 2))
     aux = jnp.float32(0)
     if "moe" in bp:
-        h, aux = blocks.moe_apply(bp["moe"], h, cfg, qcfg, subkey(key, 3))
+        h, aux = blocks.moe_apply(bp["moe"], h, cfg, sc.child("moe"),
+                                  subkey(key, 3))
     else:
-        h = blocks.mlp_apply(bp["mlp"], h, cfg, qcfg, subkey(key, 3))
+        h = blocks.mlp_apply(bp["mlp"], h, cfg, sc.child("mlp"),
+                             subkey(key, 3))
     x = sharding.constrain_tokens(x + h)
     return x, aux, new_cache
 
 
+def _uniform_stack_scope(sc, L: int, leaves, what: str):
+    """Single scope for a stack that cannot be group-split (hybrid), with a
+    clear error when the policy tries to split it."""
+    groups = layer_groups(sc, L, leaves)
+    if len(groups) > 1:
+        raise PolicyScopeError(
+            f"quantization policy resolves non-uniformly over the {what} "
+            f"block stack ({len(groups)} groups); per-layer-index scope "
+            "rules are not supported for the hybrid family — use rules "
+            "uniform over 'blocks.*'")
+    return groups[0][2]
+
+
 def _backbone_train(params: Params, x: Array, cfg: ArchConfig,
-                    qcfg: QuantConfig, key) -> Tuple[Array, Array]:
+                    qcfg: QuantLike, key) -> Tuple[Array, Array]:
     """Runs all layers (training/prefill, no cache). Returns (x, aux_sum)."""
     L = cfg.n_layers
+    sc = ensure_scope(qcfg)
 
     if cfg.family in ("ssm", "hybrid"):
         every = cfg.hybrid_attn_every or L
 
-        def mamba_body(x, inp):
-            bp, idx = inp
-            k = subkey(key, idx)
-            h, _ = ssm.mamba2_apply(bp["mamba"], x, cfg, qcfg, k)
-            return sharding.constrain_tokens(x + h), None
-
-        mamba_body = utils.checkpoint(mamba_body)
+        def make_mamba_body(bsc):
+            def mamba_body(x, inp):
+                bp, idx = inp
+                k = subkey(key, idx)
+                h, _ = ssm.mamba2_apply(bp["mamba"], x, cfg,
+                                        bsc.child("mamba"), k)
+                return sharding.constrain_tokens(x + h), None
+            return utils.checkpoint(mamba_body)
 
         if cfg.family == "ssm":
-            x, _ = utils.scan(mamba_body, x,
-                                (params["blocks"], jnp.arange(L)))
+            groups = layer_groups(sc, L, _MAMBA_LEAVES)
+            x, _ = blocks.scan_stack(make_mamba_body, x, groups,
+                                     (params["blocks"], jnp.arange(L)))
             return x, jnp.float32(0)
 
         # hybrid: groups of ``every`` mamba layers + the shared attn block
+        bsc = _uniform_stack_scope(sc, L, _MAMBA_LEAVES, "hybrid")
+        mamba_body = make_mamba_body(bsc)
         G = L // every
         grouped = jax.tree.map(
             lambda a: a.reshape((G, every) + a.shape[1:]), params["blocks"])
 
         shared_body = utils.checkpoint(
-            lambda x, idx: _attn_block(params["shared_attn"], x, cfg, qcfg,
+            lambda x, idx: _attn_block(params["shared_attn"], x, cfg,
+                                       sc.child("shared_attn"),
                                        subkey(key, 10_000 + idx))[:2])
 
         def group_body(x, inp):
@@ -140,15 +196,17 @@ def _backbone_train(params: Params, x: Array, cfg: ArchConfig,
         x, _ = utils.scan(group_body, x, (grouped, jnp.arange(G)))
         return x, jnp.float32(0)
 
-    def body(carry, inp):
-        x, aux = carry
-        bp, idx = inp
-        x, a, _ = _attn_block(bp, x, cfg, qcfg, subkey(key, idx))
-        return (x, aux + a), None
+    def make_body(bsc):
+        def body(carry, inp):
+            x, aux = carry
+            bp, idx = inp
+            x, a, _ = _attn_block(bp, x, cfg, bsc, subkey(key, idx))
+            return (x, aux + a), None
+        return utils.checkpoint(body)
 
-    body = utils.checkpoint(body)
-    (x, aux), _ = utils.scan(body, (x, jnp.float32(0)),
-                               (params["blocks"], jnp.arange(L)))
+    groups = layer_groups(sc, L, _block_leaves(cfg))
+    (x, aux), _ = blocks.scan_stack(make_body, (x, jnp.float32(0)), groups,
+                                    (params["blocks"], jnp.arange(L)))
     return x, aux
 
 
@@ -156,23 +214,31 @@ def _backbone_train(params: Params, x: Array, cfg: ArchConfig,
 # Embedding / head
 # =========================================================================
 
-def _embed(params: Params, tokens: Array, cfg: ArchConfig, qcfg: QuantConfig,
+def _embed(params: Params, tokens: Array, cfg: ArchConfig, qcfg: QuantLike,
            key, prefix_embeds: Optional[Array] = None) -> Array:
-    x = int_ops.int_embedding(params["embed"], tokens, subkey(key, -1), qcfg)
+    sc = ensure_scope(qcfg)
+    x = int_ops.int_embedding(params["embed"], tokens, subkey(key, -1),
+                              sc.leaf("embed"))
     if prefix_embeds is not None:       # VLM: projected patch embeddings
         pe = int_ops.int_linear(prefix_embeds, params["mm_proj"], None,
-                                subkey(key, -2), qcfg)
+                                subkey(key, -2), sc.leaf("mm_proj"))
         x = jnp.concatenate([pe, x], axis=1)
     return sharding.constrain_tokens(x)
 
 
-def _logits(params: Params, x: Array, cfg: ArchConfig, qcfg: QuantConfig, key) -> Array:
-    x = blocks.norm_apply(params["final_norm"], x, cfg, qcfg, subkey(key, -3))
+def _logits(params: Params, x: Array, cfg: ArchConfig, qcfg: QuantLike,
+            key) -> Array:
+    sc = ensure_scope(qcfg)
+    x = blocks.norm_apply(params["final_norm"], x, cfg,
+                          sc.child("final_norm"), subkey(key, -3))
     if cfg.tie_embeddings:
         head = params["embed"].T
     else:
         head = params["lm_head"]
-    logits = int_ops.int_linear(x, head, None, subkey(key, -4), qcfg)
+    # the head resolves under "lm_head" whether or not it is tied to the
+    # embedding table (a tied table can still be *read* at head precision)
+    logits = int_ops.int_linear(x, head, None, subkey(key, -4),
+                                sc.leaf("lm_head"))
     return sharding.constrain(logits, sharding.batch_axes(), None, "model")
 
 
@@ -181,7 +247,7 @@ def _logits(params: Params, x: Array, cfg: ArchConfig, qcfg: QuantConfig, key) -
 # =========================================================================
 
 def lm_loss(params: Params, batch: Dict[str, Array], cfg: ArchConfig,
-            qcfg: QuantConfig, key) -> Tuple[Array, Dict[str, Array]]:
+            qcfg: QuantLike, key) -> Tuple[Array, Dict[str, Array]]:
     """batch: tokens (B, S) int32, labels (B, S) int32 (-1 = masked);
     VLM adds patch_embeds (B, P, D)."""
     tokens = sharding.constrain_batch(batch["tokens"])
@@ -254,30 +320,38 @@ def _constrain_cache(cache: Params) -> Params:
 
 
 def lm_decode_step(params: Params, token: Array, cache: Params,
-                   cfg: ArchConfig, qcfg: QuantConfig) -> Tuple[Array, Params]:
+                   cfg: ArchConfig, qcfg: QuantLike) -> Tuple[Array, Params]:
     """token: (B, 1) int32. Returns (logits (B, 1, V), new cache)."""
     key = None                                   # no stochastic rounding at serve
     index = cache["index"]
-    x = _embed(params, token, cfg, qcfg, key)
+    sc = ensure_scope(qcfg)
+    x = _embed(params, token, cfg, sc, key)
     L = cfg.n_layers
 
     if cfg.family in ("ssm", "hybrid"):
         every = cfg.hybrid_attn_every or L
 
-        def mamba_body(x, inp):
-            bp, s_ssm, s_cx, s_cbc = inp
-            h, (n_ssm, n_cx, n_cbc) = ssm.mamba2_apply(
-                bp["mamba"], x, cfg, qcfg, None,
-                state=(s_ssm, s_cx, s_cbc), decode=True)
-            return x + h, (n_ssm, n_cx, n_cbc)
+        def make_mamba_body(bsc):
+            def mamba_body(x, inp):
+                bp, s_ssm, s_cx, s_cbc = inp
+                h, (n_ssm, n_cx, n_cbc) = ssm.mamba2_apply(
+                    bp["mamba"], x, cfg, bsc.child("mamba"), None,
+                    state=(s_ssm, s_cx, s_cbc), decode=True)
+                return x + h, (n_ssm, n_cx, n_cbc)
+            return mamba_body
 
         if cfg.family == "ssm":
-            x, (n_ssm, n_cx, n_cbc) = utils.scan(
-                mamba_body, x,
-                (params["blocks"], cache["ssm"], cache["conv_x"], cache["conv_BC"]))
+            groups = layer_groups(sc, L, _MAMBA_LEAVES)
+            x, (n_ssm, n_cx, n_cbc) = blocks.scan_stack(
+                make_mamba_body, x, groups,
+                (params["blocks"], cache["ssm"], cache["conv_x"],
+                 cache["conv_BC"]))
             new_cache = {"ssm": n_ssm, "conv_x": n_cx, "conv_BC": n_cbc,
                          "index": index + 1}
         else:
+            bsc = _uniform_stack_scope(sc, L, _MAMBA_LEAVES, "hybrid")
+            mamba_body = make_mamba_body(bsc)
+            ssc = sc.child("shared_attn")
             G = L // every
             grouped = jax.tree.map(
                 lambda a: a.reshape((G, every) + a.shape[1:]), params["blocks"])
@@ -288,13 +362,16 @@ def lm_decode_step(params: Params, token: Array, cache: Params,
             def group_body(x, inp):
                 gp, s_ssm, s_cx, s_cbc, ck, cv = inp
                 x, ns = utils.scan(mamba_body, x, (gp, s_ssm, s_cx, s_cbc))
-                h = blocks.norm_apply(params["shared_attn"]["ln1"], x, cfg, qcfg, None)
+                h = blocks.norm_apply(params["shared_attn"]["ln1"], x, cfg,
+                                      ssc.child("ln1"), None)
                 h, (nk, nv) = blocks.attention_apply(
-                    params["shared_attn"]["attn"], h, cfg, qcfg, None,
-                    kv_cache=(ck, cv), cache_index=index)
+                    params["shared_attn"]["attn"], h, cfg, ssc.child("attn"),
+                    None, kv_cache=(ck, cv), cache_index=index)
                 x = x + h
-                h = blocks.norm_apply(params["shared_attn"]["ln2"], x, cfg, qcfg, None)
-                h = blocks.mlp_apply(params["shared_attn"]["mlp"], h, cfg, qcfg, None)
+                h = blocks.norm_apply(params["shared_attn"]["ln2"], x, cfg,
+                                      ssc.child("ln2"), None)
+                h = blocks.mlp_apply(params["shared_attn"]["mlp"], h, cfg,
+                                     ssc.child("mlp"), None)
                 return x + h, ns + (nk, nv)
 
             x, (n_ssm, n_cx, n_cbc, nk, nv) = utils.scan(
@@ -305,25 +382,28 @@ def lm_decode_step(params: Params, token: Array, cache: Params,
                 "conv_BC": n_cbc.reshape((L,) + n_cbc.shape[2:]),
                 "k": nk, "v": nv, "index": index + 1,
             }
-        logits = _logits(params, x, cfg, qcfg, key)
+        logits = _logits(params, x, cfg, sc, key)
         return logits, _constrain_cache(new_cache)
 
-    def body(carry, inp):
-        x, aux = carry
-        bp, ck, cv, idx = inp
-        x, a, ncache = _attn_block(bp, x, cfg, qcfg, None,
-                                   cache=(ck, cv), cache_index=index)
-        return (x, aux + a), ncache
+    def make_body(bsc):
+        def body(carry, inp):
+            x, aux = carry
+            bp, ck, cv, idx = inp
+            x, a, ncache = _attn_block(bp, x, cfg, bsc, None,
+                                       cache=(ck, cv), cache_index=index)
+            return (x, aux + a), ncache
+        return body
 
-    (x, _), (nk, nv) = utils.scan(
-        body, (x, jnp.float32(0)),
+    groups = layer_groups(sc, L, _block_leaves(cfg))
+    (x, _), (nk, nv) = blocks.scan_stack(
+        make_body, (x, jnp.float32(0)), groups,
         (params["blocks"], cache["k"], cache["v"], jnp.arange(L)))
-    logits = _logits(params, x, cfg, qcfg, key)
+    logits = _logits(params, x, cfg, sc, key)
     return logits, _constrain_cache({"k": nk, "v": nv, "index": index + 1})
 
 
 def lm_prefill(params: Params, tokens: Array, cfg: ArchConfig,
-               qcfg: QuantConfig,
+               qcfg: QuantLike,
                prefix_embeds: Optional[Array] = None) -> Tuple[Array, Array]:
     """Forward pass over the full prompt; returns (last-token logits, final
     hidden states). Cache filling for the dense path reuses the training

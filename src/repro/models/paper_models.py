@@ -13,13 +13,25 @@ import jax.numpy as jnp
 
 from repro import utils
 from repro.core import int_ops
-from repro.core.qconfig import QuantConfig
+from repro.core.qpolicy import QuantLike, ensure_scope, layer_groups
 from repro.models import blocks
 from repro.models.blocks import subkey
 from repro.models.config import ArchConfig
 
 Array = jax.Array
 Params = Dict[str, Any]
+
+# Quantization scope paths (resolved against a QuantPolicy at trace time):
+#   BERT: embed, type_embed, embed_ln, blocks.{i}.{ln1, attn.*, ln2,
+#         mlp.{w1,w2}}, head, span_head
+#   ViT:  patch_embed, blocks.{i}.*, final_ln, head
+# Block scopes carry the negative-index alias (blocks.-1 = last layer); a
+# policy resolving differently across block indices splits the encoder scan
+# into runs of identically-resolved layers (see models/lm.py).
+
+_ENC_BLOCK_LEAVES = (["ln1", "ln2"]
+                     + ["attn." + n for n in ("wq", "wk", "wv", "wo")]
+                     + ["mlp.w1", "mlp.w2"])
 
 
 def bert_config(n_layers=12, d_model=768, n_heads=12, d_ff=3072,
@@ -49,19 +61,29 @@ def _enc_block_init(key, cfg):
 
 
 def _encoder(params, x, cfg, qcfg, key):
-    def body(x, inp):
-        bp, idx = inp
-        k = subkey(key, idx)
-        h = blocks.norm_apply(bp["ln1"], x, cfg, qcfg, subkey(k, 0))
-        h, _ = blocks.attention_apply(bp["attn"], h, cfg, qcfg, subkey(k, 1),
-                                      causal=False, use_rope=False)
-        x = x + h
-        h = blocks.norm_apply(bp["ln2"], x, cfg, qcfg, subkey(k, 2))
-        h = blocks.mlp_apply(bp["mlp"], h, cfg, qcfg, subkey(k, 3))
-        return x + h, None
+    sc = ensure_scope(qcfg)
 
-    x, _ = utils.scan(utils.checkpoint(body), x,
-                        (params["blocks"], jnp.arange(cfg.n_layers)))
+    def make_body(bsc):
+        def body(x, inp):
+            bp, idx = inp
+            k = subkey(key, idx)
+            h = blocks.norm_apply(bp["ln1"], x, cfg, bsc.child("ln1"),
+                                  subkey(k, 0))
+            h, _ = blocks.attention_apply(bp["attn"], h, cfg,
+                                          bsc.child("attn"), subkey(k, 1),
+                                          causal=False, use_rope=False)
+            x = x + h
+            h = blocks.norm_apply(bp["ln2"], x, cfg, bsc.child("ln2"),
+                                  subkey(k, 2))
+            h = blocks.mlp_apply(bp["mlp"], h, cfg, bsc.child("mlp"),
+                                 subkey(k, 3))
+            return x + h, None
+        return utils.checkpoint(body)
+
+    L = cfg.n_layers
+    groups = layer_groups(sc, L, _ENC_BLOCK_LEAVES)
+    x, _ = blocks.scan_stack(make_body, x, groups,
+                             (params["blocks"], jnp.arange(L)))
     return x
 
 
@@ -86,21 +108,25 @@ def bert_init(key, cfg: ArchConfig, num_labels: int = 2,
 
 
 def bert_apply(params: Params, tokens: Array, cfg: ArchConfig,
-               qcfg: QuantConfig, key, segment: Optional[Array] = None,
+               qcfg: QuantLike, key, segment: Optional[Array] = None,
                pool: bool = True) -> Array:
     B, S = tokens.shape
-    x = int_ops.int_embedding(params["embed"], tokens, subkey(key, -1), qcfg)
+    sc = ensure_scope(qcfg)
+    x = int_ops.int_embedding(params["embed"], tokens, subkey(key, -1),
+                              sc.leaf("embed"))
     x = x + params["pos_embed"][None, :S]
     if segment is not None:
         x = x + int_ops.int_embedding(params["type_embed"], segment,
-                                      subkey(key, -2), qcfg)
-    x = blocks.norm_apply(params["embed_ln"], x, cfg, qcfg, subkey(key, -3))
-    x = _encoder(params, x, cfg, qcfg, key)
+                                      subkey(key, -2), sc.leaf("type_embed"))
+    x = blocks.norm_apply(params["embed_ln"], x, cfg, sc.child("embed_ln"),
+                          subkey(key, -3))
+    x = _encoder(params, x, cfg, sc, key)
     if pool:
         cls = x[:, 0]
         return int_ops.int_linear(cls, params["head"], params["head_b"],
-                                  subkey(key, -4), qcfg)
-    return int_ops.int_linear(x, params["span"], None, subkey(key, -4), qcfg)
+                                  subkey(key, -4), sc.leaf("head"))
+    return int_ops.int_linear(x, params["span"], None, subkey(key, -4),
+                              sc.leaf("span_head"))
 
 
 def bert_cls_loss(params, batch, cfg, qcfg, key):
@@ -141,16 +167,19 @@ def vit_init(key, cfg: ArchConfig, num_classes: int = 10,
 
 
 def vit_apply(params: Params, images: Array, cfg: ArchConfig,
-              qcfg: QuantConfig, key, patch: int = 16) -> Array:
+              qcfg: QuantLike, key, patch: int = 16) -> Array:
+    sc = ensure_scope(qcfg)
     x = int_ops.int_patch_embed(images, params["patch_w"], params["patch_b"],
-                                subkey(key, -1), qcfg, patch)
+                                subkey(key, -1), sc.leaf("patch_embed"),
+                                patch)
     B = x.shape[0]
     cls = jnp.broadcast_to(params["cls"], (B, 1, cfg.d_model))
     x = jnp.concatenate([cls, x], axis=1) + params["pos_embed"][None]
-    x = _encoder(params, x, cfg, qcfg, key)
-    x = blocks.norm_apply(params["final_ln"], x, cfg, qcfg, subkey(key, -2))
+    x = _encoder(params, x, cfg, sc, key)
+    x = blocks.norm_apply(params["final_ln"], x, cfg, sc.child("final_ln"),
+                          subkey(key, -2))
     return int_ops.int_linear(x[:, 0], params["head"], params["head_b"],
-                              subkey(key, -3), qcfg)
+                              subkey(key, -3), sc.leaf("head"))
 
 
 def vit_cls_loss(params, batch, cfg, qcfg, key, patch: int = 16):

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 
 from repro import utils
 from repro.core import int_ops
-from repro.core.qconfig import QuantConfig
+from repro.core.qpolicy import QuantLike, ensure_scope
 from repro.models.blocks import subkey, _init
 from repro.models.config import ArchConfig
 
@@ -125,7 +125,7 @@ def ssd_decode_step(state: Array, x: Array, dt: Array, A: Array,
 
 
 def mamba2_apply(
-    p: Params, x: Array, cfg: ArchConfig, qcfg: QuantConfig,
+    p: Params, x: Array, cfg: ArchConfig, qcfg: QuantLike,
     key: Optional[Array],
     *,
     state: Optional[Tuple[Array, Array, Array]] = None,  # (ssm, conv_x, conv_BC)
@@ -139,10 +139,11 @@ def mamba2_apply(
     """
     B_, S, D = x.shape
     DI, N, NH, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
-    z = int_ops.int_linear(x, p["wz"], None, subkey(key, 0), qcfg)
-    xi = int_ops.int_linear(x, p["wx"], None, subkey(key, 1), qcfg)
-    bc = int_ops.int_linear(x, p["wBC"], None, subkey(key, 2), qcfg)
-    dt = int_ops.int_linear(x, p["wdt"], None, subkey(key, 3), qcfg)
+    sc = ensure_scope(qcfg)
+    z = int_ops.int_linear(x, p["wz"], None, subkey(key, 0), sc.leaf("wz"))
+    xi = int_ops.int_linear(x, p["wx"], None, subkey(key, 1), sc.leaf("wx"))
+    bc = int_ops.int_linear(x, p["wBC"], None, subkey(key, 2), sc.leaf("wBC"))
+    dt = int_ops.int_linear(x, p["wdt"], None, subkey(key, 3), sc.leaf("wdt"))
     dt = jax.nn.softplus(dt + p["dt_bias"])
     A = -jnp.exp(p["A_log"])
 
@@ -155,10 +156,10 @@ def mamba2_apply(
         bc = jax.nn.silu(jnp.einsum("bkc,kc->bc", cbc, p["conv_BC"]))[:, None]
         new_cx, new_cbc = cx[:, 1:], cbc[:, 1:]
     else:
-        xi = jax.nn.silu(int_ops.int_conv1d_depthwise(xi, p["conv_x"],
-                                                      subkey(key, 4), qcfg))
-        bc = jax.nn.silu(int_ops.int_conv1d_depthwise(bc, p["conv_BC"],
-                                                      subkey(key, 5), qcfg))
+        xi = jax.nn.silu(int_ops.int_conv1d_depthwise(
+            xi, p["conv_x"], subkey(key, 4), sc.leaf("conv_x")))
+        bc = jax.nn.silu(int_ops.int_conv1d_depthwise(
+            bc, p["conv_BC"], subkey(key, 5), sc.leaf("conv_BC")))
 
     xs = xi.reshape(B_, S, NH, P)
     Bmat, Cmat = bc[..., :N], bc[..., N:]
@@ -175,8 +176,10 @@ def mamba2_apply(
 
     y = y + xs * p["D_skip"][None, None, :, None]
     y = y.reshape(B_, S, DI)
-    y = int_ops.int_rmsnorm(y * jax.nn.silu(z), p["norm_g"], subkey(key, 6), qcfg)
-    return int_ops.int_linear(y, p["out_proj"], None, subkey(key, 7), qcfg), new_state
+    y = int_ops.int_rmsnorm(y * jax.nn.silu(z), p["norm_g"], subkey(key, 6),
+                            sc.leaf("norm_g"))
+    return int_ops.int_linear(y, p["out_proj"], None, subkey(key, 7),
+                              sc.leaf("out_proj")), new_state
 
 
 def mamba2_init_state(cfg: ArchConfig, batch: int, dtype=jnp.float32):

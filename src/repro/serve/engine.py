@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.qconfig import QuantConfig
+from repro.core.qpolicy import QuantLike
 from repro.models import lm
 from repro.models.config import ArchConfig
 
@@ -32,8 +32,11 @@ class ServeConfig:
 class Engine:
     """Slot-based continuous batching over a fixed decode batch."""
 
-    def __init__(self, params, cfg: ArchConfig, qcfg: QuantConfig,
+    def __init__(self, params, cfg: ArchConfig, qcfg: QuantLike,
                  scfg: ServeConfig):
+        # qcfg: bare QuantConfig or path-scoped QuantPolicy — serve-time
+        # decode resolves the same per-scope leaves as training, so a model
+        # fine-tuned under a mixed policy serves under the identical one.
         self.params = params
         self.cfg = cfg
         self.qcfg = qcfg

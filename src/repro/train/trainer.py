@@ -20,7 +20,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import sharding
 from repro.core import grad_compress
-from repro.core.qconfig import QuantConfig
+from repro.core.qconfig import QuantConfig  # noqa: F401  (re-export)
+from repro.core.qpolicy import QuantLike
 from repro.train import optimizer as opt_lib
 
 LossFn = Callable[..., Tuple[jax.Array, Dict[str, Any]]]
@@ -38,7 +39,7 @@ def _split_micro(batch: Any, n: int) -> Any:
         lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch)
 
 
-def make_grads_fn(loss_fn: LossFn, cfg, qcfg: QuantConfig, microbatches: int):
+def make_grads_fn(loss_fn: LossFn, cfg, qcfg: QuantLike, microbatches: int):
     """(params, batch, key) -> (grads, metrics), with grad accumulation."""
 
     def single(params, batch, key):
@@ -79,7 +80,7 @@ def make_grads_fn(loss_fn: LossFn, cfg, qcfg: QuantConfig, microbatches: int):
 # Standard SPMD train step
 # =========================================================================
 
-def make_train_step(loss_fn: LossFn, cfg, qcfg: QuantConfig,
+def make_train_step(loss_fn: LossFn, cfg, qcfg: QuantLike,
                     opt_cfg: opt_lib.OptimizerConfig,
                     train_cfg: TrainConfig = TrainConfig()):
     grads_fn = make_grads_fn(loss_fn, cfg, qcfg, train_cfg.microbatches)
@@ -111,7 +112,7 @@ def jit_train_step(step, mesh: Mesh, param_specs, *, donate: bool = True):
 # Compressed cross-pod step (shard_map over "pod", auto inside)
 # =========================================================================
 
-def make_compressed_train_step(loss_fn: LossFn, cfg, qcfg: QuantConfig,
+def make_compressed_train_step(loss_fn: LossFn, cfg, qcfg: QuantLike,
                                opt_cfg: opt_lib.OptimizerConfig,
                                mesh: Mesh,
                                train_cfg: TrainConfig = TrainConfig()):

@@ -1,0 +1,140 @@
+"""Stochastic-forward key-split contract for the convolution layers.
+
+``int_linear``/``int_batched_linear`` and the norm layers honor
+``cfg.stochastic_fwd`` with a fixed contract (PR 2/3): when the flag is set
+and a key is provided, the layer splits the key, draws the forward
+activation noise from the first half, and quantizes the backward gradient
+with the remainder — bit-identically across backends under the same key.
+``int_conv1d_depthwise`` used to skip the split entirely (RN activations
+regardless of the flag); ``int_patch_embed`` delegates to ``int_linear`` and
+inherits the contract.  These are the regression tests for both.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import int_ops
+from repro.core.qconfig import QuantConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfg(backend, **kw):
+    return dataclasses.replace(QuantConfig.int8(), backend=backend,
+                               stochastic_grad=False, stochastic_fwd=True,
+                               **kw)
+
+
+def _conv_args():
+    x = jax.random.normal(KEY, (2, 16, 8))
+    w = jax.random.normal(jax.random.fold_in(KEY, 1), (4, 8)) * 0.3
+    return x, w
+
+
+def _patch_args():
+    imgs = jax.random.normal(KEY, (2, 16, 16, 3))
+    w = jax.random.normal(jax.random.fold_in(KEY, 2), (8 * 8 * 3, 16)) * 0.1
+    b = jnp.zeros((16,))
+    return imgs, w, b
+
+
+@pytest.mark.parametrize("backend", ["sim", "pallas"])
+def test_dwconv_stochastic_fwd(backend):
+    """Bugfix regression: int_conv1d_depthwise ignored cfg.stochastic_fwd
+    (no key split, RN activations on both backends)."""
+    cfg = _cfg(backend)
+    x, w = _conv_args()
+    apply = lambda k: int_ops.int_conv1d_depthwise(x, w, k, cfg)
+    y1 = apply(jax.random.fold_in(KEY, 10))
+    y2 = apply(jax.random.fold_in(KEY, 11))
+    y1b = apply(jax.random.fold_in(KEY, 10))
+    assert float(jnp.abs(y1 - y2).max()) > 0.0       # noise actually applied
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y1b))
+    # without a key the forward stays deterministic RN (serve-time contract)
+    rn = dataclasses.replace(cfg, stochastic_fwd=False)
+    np.testing.assert_array_equal(
+        np.asarray(int_ops.int_conv1d_depthwise(x, w, None, cfg)),
+        np.asarray(int_ops.int_conv1d_depthwise(x, w, None, rn)))
+
+
+def test_dwconv_stochastic_fwd_cross_backend_bit_identical():
+    """Same key => both backends draw the identical activation noise; the
+    depthwise products run in XLA on both, so the outputs are bit-equal."""
+    x, w = _conv_args()
+    k = jax.random.fold_in(KEY, 12)
+    outs = [np.asarray(int_ops.int_conv1d_depthwise(x, w, k, _cfg(b)))
+            for b in ("sim", "pallas")]
+    np.testing.assert_array_equal(outs[0], outs[1])
+
+
+@pytest.mark.parametrize("backend", ["sim", "pallas"])
+def test_dwconv_grad_key_split(backend):
+    """With stochastic_fwd AND stochastic_grad, the backward noise comes
+    from the split remainder: same key => identical grads, different key =>
+    different grads (Assumption 2 plumbing survives the fwd split)."""
+    cfg = dataclasses.replace(_cfg(backend), stochastic_grad=True)
+    x, w = _conv_args()
+
+    def g(k):
+        return jax.grad(lambda w: jnp.sum(jnp.tanh(
+            int_ops.int_conv1d_depthwise(x, w, k, cfg))))(w)
+
+    g1 = g(jax.random.fold_in(KEY, 7))
+    g2 = g(jax.random.fold_in(KEY, 8))
+    g1b = g(jax.random.fold_in(KEY, 7))
+    assert float(jnp.abs(g1 - g2).max()) > 0.0
+    np.testing.assert_array_equal(np.asarray(g1), np.asarray(g1b))
+
+
+def test_dwconv_grad_cross_backend_bit_identical():
+    """The gradient path is also XLA-elementwise on both backends — same
+    key must give bit-equal dx/dw across sim and pallas."""
+    x, w = _conv_args()
+    k = jax.random.fold_in(KEY, 13)
+    grads = []
+    for b in ("sim", "pallas"):
+        cfg = dataclasses.replace(_cfg(b), stochastic_grad=True)
+        grads.append(jax.grad(
+            lambda x, w: jnp.sum(jnp.tanh(
+                int_ops.int_conv1d_depthwise(x, w, k, cfg))),
+            argnums=(0, 1))(x, w))
+    for a, b_ in zip(grads[0], grads[1]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+
+
+@pytest.mark.parametrize("backend", ["sim", "pallas"])
+def test_patch_embed_stochastic_fwd(backend):
+    """int_patch_embed delegates to int_linear and must inherit its
+    key-split contract (audit of the delegation, not a fix)."""
+    cfg = _cfg(backend)
+    imgs, w, b = _patch_args()
+    apply = lambda k: int_ops.int_patch_embed(imgs, w, b, k, cfg, 8)
+    y1 = apply(jax.random.fold_in(KEY, 20))
+    y2 = apply(jax.random.fold_in(KEY, 21))
+    y1b = apply(jax.random.fold_in(KEY, 20))
+    assert float(jnp.abs(y1 - y2).max()) > 0.0
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y1b))
+    rn = dataclasses.replace(cfg, stochastic_fwd=False)
+    np.testing.assert_array_equal(
+        np.asarray(int_ops.int_patch_embed(imgs, w, b, None, cfg, 8)),
+        np.asarray(int_ops.int_patch_embed(imgs, w, b, None, rn, 8)))
+
+
+def test_patch_embed_stochastic_fwd_cross_backend():
+    """Same key => identical noise draw on both backends.  The matmul
+    accumulates differently (f32 XLA vs int32 limbs), so outputs agree to
+    accumulation rounding, not bit-exactly — but flipping the key on one
+    backend moves the output by a full quantization step, far more."""
+    imgs, w, b = _patch_args()
+    k = jax.random.fold_in(KEY, 22)
+    ys = np.asarray(int_ops.int_patch_embed(imgs, w, b, k, _cfg("sim"), 8))
+    yp = np.asarray(int_ops.int_patch_embed(imgs, w, b, k, _cfg("pallas"), 8))
+    np.testing.assert_allclose(ys, yp, rtol=1e-5, atol=1e-5)
+    yp2 = np.asarray(int_ops.int_patch_embed(
+        imgs, w, b, jax.random.fold_in(KEY, 23), _cfg("pallas"), 8))
+    assert np.abs(yp - yp2).max() > np.abs(ys - yp).max()

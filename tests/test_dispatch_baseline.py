@@ -31,9 +31,25 @@ def test_baseline_pins_single_dispatch_property():
     direction), so every preset pins the same numbers."""
     with open(check_dispatch.BASELINE_PATH) as f:
         baseline = json.load(f)
-    assert set(baseline) == {"int8", "int12", "int16"}
+    assert set(baseline) == {"int8", "int12", "int16", "policy"}
     for preset, entries in baseline.items():
+        if preset == "policy":
+            continue
         assert entries["linear_fwd"] == 3, preset
         assert entries["linear_fwd_bwd"] == 6, preset
         assert entries["batched_linear_fwd"] == 3, preset
         assert entries["batched_linear_fwd_bwd"] == 6, preset
+
+
+def test_baseline_pins_mixed_policy_dispatch_parity():
+    """A mixed policy whose rules only touch non-stacked scopes (16-bit
+    embeddings + head over an int8 body) must cost ZERO extra traced
+    dispatches vs uniform int8 — the single-dispatch guarantee holds under
+    non-uniform bit-widths."""
+    with open(check_dispatch.BASELINE_PATH) as f:
+        baseline = json.load(f)
+    pol = baseline["policy"]
+    assert pol["bert_step_int8_embed16"] == pol["bert_step_int8"]
+    # splitting the layer stack (first/last 16-bit) retraces the scan body
+    # once per run — more traced equations, same per-step runtime dispatches
+    assert pol["bert_step_int8_firstlast16"] >= pol["bert_step_int8"]

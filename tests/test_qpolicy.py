@@ -1,0 +1,302 @@
+"""QuantPolicy: resolution semantics, backward compatibility, and the
+dispatch-count acceptance properties of the path-scoped quantization API.
+
+The hypothesis-based property tests live in ``test_qpolicy_properties.py``
+(skipped when hypothesis is absent); everything here is deterministic.
+"""
+import dataclasses
+import json
+import re
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import qpolicy
+from repro.core.qconfig import QuantConfig, StabilityWarning
+from repro.core.qpolicy import (QuantPolicy, Scope, ScopeRule, as_policy,
+                                ensure_scope, layer_groups, rule)
+from repro.models import paper_models as pm
+from repro.utils import count_pallas_calls
+
+jax.config.update("jax_platform_name", "cpu")
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(autouse=True)
+def _no_env_policy(monkeypatch):
+    """The bit-identity and jaxpr tests compare bare configs against
+    explicit policies; a CI smoke leg's $REPRO_QPOLICY must not leak in."""
+    monkeypatch.delenv("REPRO_QPOLICY", raising=False)
+
+
+def _q8():
+    return dataclasses.replace(QuantConfig.int8(), stochastic_grad=False)
+
+
+# =========================================================================
+# Resolution semantics
+# =========================================================================
+
+def test_resolve_no_rules_is_identity():
+    cfg = _q8()
+    pol = QuantPolicy(base=cfg)
+    assert pol.resolve("blocks.3.attn.wq") is cfg     # same object, no copy
+    assert pol.uniform
+
+
+def test_resolve_total_on_any_path():
+    pol = qpolicy.preset("int8_embed16")
+    for path in ("", "x", "blocks.0", "a.b.c.d.e.f", "weird..path"):
+        leaf = pol.resolve(path)
+        assert isinstance(leaf, QuantConfig)
+
+
+def test_most_specific_wins_regardless_of_order():
+    cfg = _q8()
+    r_broad = rule("*", weight_bits=16)
+    r_mid = rule("blocks.*", weight_bits=12)
+    r_exact = rule("blocks.0.attn.wq", weight_bits=10)
+    import itertools
+    for perm in itertools.permutations((r_broad, r_mid, r_exact)):
+        pol = QuantPolicy(base=cfg, rules=tuple(perm))
+        assert pol.resolve("blocks.0.attn.wq").weight_bits == 10, perm
+        assert pol.resolve("blocks.1.attn.wq").weight_bits == 12, perm
+        assert pol.resolve("embed").weight_bits == 16, perm
+    assert pol.resolve("head").weight_bits == 16
+
+
+def test_equal_specificity_later_rule_wins():
+    cfg = _q8()
+    pol = QuantPolicy(base=cfg, rules=(rule("blocks.*", weight_bits=12),
+                                       rule("blocks.*", weight_bits=10)))
+    assert pol.resolve("blocks.0.mlp.w1").weight_bits == 10
+
+
+def test_partial_overrides_compose():
+    """Less specific rules still contribute the fields the winner leaves
+    untouched."""
+    pol = QuantPolicy(base=_q8(), rules=(
+        rule("blocks.*", act_bits=16),
+        rule("blocks.0.*", weight_bits=16),
+    ))
+    leaf = pol.resolve("blocks.0.attn.wq")
+    assert (leaf.weight_bits, leaf.act_bits) == (16, 16)
+    leaf1 = pol.resolve("blocks.1.attn.wq")
+    assert (leaf1.weight_bits, leaf1.act_bits) == (8, 16)
+
+
+def test_negative_index_alias():
+    pol = QuantPolicy(base=_q8(), rules=(rule("blocks.-1.*", weight_bits=16),))
+    sc = ensure_scope(pol)
+    last = qpolicy.layer_scope(sc, "blocks", 3, 4)
+    mid = qpolicy.layer_scope(sc, "blocks", 2, 4)
+    assert last.leaf("attn.wq").weight_bits == 16
+    assert mid.leaf("attn.wq").weight_bits == 8
+
+
+def test_rule_rejects_unknown_fields():
+    with pytest.raises(ValueError, match="unknown QuantConfig field"):
+        rule("blocks.*", weigth_bits=8)       # typo'd field name
+
+
+def test_json_round_trip_identity():
+    for name in qpolicy.POLICY_PRESETS:
+        pol = qpolicy.preset(name)
+        assert QuantPolicy.from_json(pol.to_json()) == pol
+        # and the document is valid JSON with the expected shape
+        doc = json.loads(pol.to_json())
+        assert set(doc) == {"base", "rules"}
+
+
+def test_preset_lookup():
+    assert isinstance(qpolicy.get("int8"), QuantConfig)
+    assert isinstance(qpolicy.get("int8_embed16"), QuantPolicy)
+    assert isinstance(QuantConfig.preset("int8_embed16"), QuantPolicy)
+    with pytest.raises(KeyError):
+        qpolicy.get("int9_nope")
+    from repro.configs import registry
+    assert isinstance(registry.get_quant("int8_firstlast16"), QuantPolicy)
+    assert "int8_embed16" in registry.quant_ids()
+
+
+def test_env_default_rules(monkeypatch):
+    cfg = _q8()
+    monkeypatch.setenv("REPRO_QPOLICY", "int8_embed16")
+    pol = as_policy(cfg)
+    assert pol.rules == qpolicy.preset_rules("int8_embed16")
+    assert pol.resolve("embed").weight_bits == 16
+    # explicit policies are never rewritten by the environment
+    explicit = QuantPolicy(base=cfg)
+    assert as_policy(explicit) is explicit
+    monkeypatch.delenv("REPRO_QPOLICY")
+    assert as_policy(cfg).rules == ()
+
+
+def test_scope_threading():
+    pol = QuantPolicy(base=_q8(), rules=(rule("a.b.c", weight_bits=16),))
+    sc = Scope(policy=pol).child("a").child("b")
+    assert sc.leaf("c").weight_bits == 16
+    assert sc.leaf("d").weight_bits == 8
+    assert sc.child("c").cfg().weight_bits == 16
+    assert ensure_scope(sc) is sc
+
+
+# =========================================================================
+# Scan-stack grouping
+# =========================================================================
+
+def test_layer_groups_uniform_single_group():
+    sc = ensure_scope(QuantPolicy(base=_q8()))
+    groups = layer_groups(sc, 8, ["attn.wq"])
+    assert [(s, e) for s, e, _ in groups] == [(0, 8)]
+
+
+def test_layer_groups_firstlast_split():
+    sc = ensure_scope(qpolicy.preset("int8_firstlast16"))
+    groups = layer_groups(sc, 6, pm._ENC_BLOCK_LEAVES)
+    assert [(s, e) for s, e, _ in groups] == [(0, 1), (1, 5), (5, 6)]
+    assert groups[0][2].leaf("attn.wq").weight_bits == 16
+    assert groups[1][2].leaf("attn.wq").weight_bits == 8
+    assert groups[2][2].leaf("attn.wq").weight_bits == 16
+
+
+def test_layer_groups_middle_rule():
+    pol = QuantPolicy(base=_q8(), rules=(rule("blocks.2.*", weight_bits=16),))
+    groups = layer_groups(ensure_scope(pol), 5, ["attn.wq"])
+    assert [(s, e) for s, e, _ in groups] == [(0, 2), (2, 3), (3, 5)]
+
+
+# =========================================================================
+# Backward compatibility: uniform policy == bare config, bit for bit
+# =========================================================================
+
+def _bert():
+    cfg = pm.bert_config(n_layers=3, d_model=32, n_heads=2, d_ff=64,
+                         vocab=64, name="bert-micro")
+    params = pm.bert_init(KEY, cfg, num_labels=4)
+    toks = jax.random.randint(KEY, (2, 8), 0, cfg.vocab)
+    return cfg, params, toks
+
+
+@pytest.mark.parametrize("backend", ["sim", "pallas"])
+def test_uniform_policy_bit_identical_to_bare_config(backend):
+    cfg, params, toks = _bert()
+    q = dataclasses.replace(_q8(), backend=backend)
+    y_bare = pm.bert_apply(params, toks, cfg, q, KEY)
+    y_pol = pm.bert_apply(params, toks, cfg, QuantPolicy(base=q), KEY)
+    np.testing.assert_array_equal(np.asarray(y_bare), np.asarray(y_pol))
+
+    def loss(p, qq):
+        return pm.bert_cls_loss(
+            p, {"tokens": toks, "labels": jnp.zeros((2,), jnp.int32)},
+            cfg, qq, KEY)[0]
+
+    g_bare = jax.grad(lambda p: loss(p, q))(params)
+    g_pol = jax.grad(lambda p: loss(p, QuantPolicy(base=q)))(params)
+    for a, b in zip(jax.tree.leaves(g_bare), jax.tree.leaves(g_pol)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def _strip_addrs(s: str) -> str:
+    # jaxpr reprs embed live object addresses (bound methods, Unhashable
+    # wrappers); two traces of the SAME function already differ there
+    return re.sub(r"0x[0-9a-f]+", "0xADDR", s)
+
+
+@pytest.mark.parametrize("backend", ["sim", "pallas"])
+def test_uniform_policy_traces_identical_jaxpr(backend):
+    """The whole policy layer resolves at trace time: wrapping a config in a
+    rule-free policy must not change one equation of the traced program."""
+    cfg, params, toks = _bert()
+    q = dataclasses.replace(_q8(), backend=backend)
+    j_bare = _strip_addrs(str(jax.make_jaxpr(
+        lambda t: pm.bert_apply(params, t, cfg, q, None))(toks)))
+    j_pol = _strip_addrs(str(jax.make_jaxpr(
+        lambda t: pm.bert_apply(params, t, cfg, QuantPolicy(base=q),
+                                None))(toks)))
+    assert j_bare == j_pol
+
+
+# =========================================================================
+# Acceptance: mixed policy costs zero extra dispatches; trains finitely
+# =========================================================================
+
+def test_mixed_policy_no_extra_dispatches():
+    """int8 body + 16-bit embeddings/head traces EXACTLY the uniform int8
+    pallas_call count on a full train step (the embed/head scopes are not
+    scan-stacked, so nothing splits)."""
+    cfg, params, toks = _bert()
+    base = dataclasses.replace(_q8(), backend="pallas")
+    batch = {"tokens": toks, "labels": jnp.zeros((2,), jnp.int32)}
+
+    def count(policy):
+        def loss(p):
+            return pm.bert_cls_loss(p, batch, cfg, policy, None)[0]
+        return count_pallas_calls(jax.make_jaxpr(jax.grad(loss))(params))
+
+    uniform = count(QuantPolicy(base=base))
+    mixed = count(QuantPolicy(base=base,
+                              rules=qpolicy.preset_rules("int8_embed16")))
+    assert mixed == uniform
+
+
+def test_mixed_policy_trains_and_differs():
+    cfg, params, toks = _bert()
+    batch = {"tokens": toks, "labels": jnp.zeros((2,), jnp.int32)}
+    base = QuantPolicy(base=_q8())
+    mixed = QuantPolicy(base=_q8(),
+                        rules=qpolicy.preset_rules("int8_embed16"))
+    for pol in (base, mixed):
+        (loss, _), grads = jax.value_and_grad(
+            lambda p: pm.bert_cls_loss(p, batch, cfg, pol, KEY),
+            has_aux=True)(params)
+        assert np.isfinite(float(loss))
+        assert all(np.all(np.isfinite(np.asarray(l)))
+                   for l in jax.tree.leaves(grads))
+    y_u = pm.bert_apply(params, toks, cfg, base, KEY)
+    y_m = pm.bert_apply(params, toks, cfg, mixed, KEY)
+    assert float(jnp.abs(y_u - y_m).max()) > 0.0   # the rules actually bite
+
+
+def test_grouped_scan_matches_unrolled_reference():
+    """A per-index policy must compute the same function as resolving each
+    block's leaf by hand: compare the grouped-scan output against a policy
+    expressed through an equivalent single uniform width per group."""
+    cfg, params, toks = _bert()
+    hi = rule("blocks.0.*", weight_bits=16, act_bits=16, grad_bits=16)
+    pol = QuantPolicy(base=_q8(), rules=(hi,))
+    y = pm.bert_apply(params, toks, cfg, pol, KEY)
+    assert np.all(np.isfinite(np.asarray(y)))
+    # group structure: [0,1) at 16-bit, [1,3) at 8-bit
+    groups = layer_groups(ensure_scope(pol), cfg.n_layers,
+                          pm._ENC_BLOCK_LEAVES)
+    assert [(s, e) for s, e, _ in groups] == [(0, 1), (1, 3)]
+    # and it differs from both uniform traces (the split is real)
+    y8 = pm.bert_apply(params, toks, cfg, _q8(), KEY)
+    assert float(jnp.abs(y - y8).max()) > 0.0
+
+
+# =========================================================================
+# Stability warning (paper: act_bits >= 12 when weight_bits == 8)
+# =========================================================================
+
+def test_stability_warning_emitted_and_optoutable():
+    with pytest.warns(StabilityWarning):
+        QuantConfig(weight_bits=8, act_bits=8, grad_bits=8)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        QuantConfig(weight_bits=8, act_bits=8, grad_bits=8,
+                    warn_stability=False)
+        QuantConfig(weight_bits=8, act_bits=12, grad_bits=8)   # paper int8
+        QuantConfig(enabled=False, weight_bits=8, act_bits=8)  # fp32 path
+
+
+def test_stability_warning_fires_through_policy_resolution():
+    pol = QuantPolicy(base=QuantConfig.int16(),
+                      rules=(rule("blocks.*", weight_bits=8, act_bits=8),))
+    with pytest.warns(StabilityWarning):
+        pol.resolve("blocks.0.attn.wq")

@@ -1,0 +1,103 @@
+"""Property tests of QuantPolicy resolution (via hypothesis): determinism,
+totality, most-specific-wins, and JSON round-trip identity over randomly
+generated rule sets and paths."""
+import dataclasses
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.qconfig import QuantConfig
+from repro.core.qpolicy import QuantPolicy, ScopeRule, specificity
+
+SEGMENTS = ("embed", "blocks", "0", "1", "-1", "attn", "wq", "mlp", "w1",
+            "ln1", "head")
+WILDS = ("*", "?", "emb*", "*ocks", "w?")
+
+segment = st.sampled_from(SEGMENTS + WILDS)
+path_segment = st.sampled_from(SEGMENTS)
+
+patterns = st.lists(segment, min_size=1, max_size=4).map(".".join)
+paths = st.lists(path_segment, min_size=1, max_size=5).map(".".join)
+
+#: overrides kept inside validated ranges so every resolution is
+#: constructible; warn_stability pinned off so w8/a8 draws don't spam
+overrides = st.fixed_dictionaries(
+    {}, optional={
+        "weight_bits": st.integers(min_value=4, max_value=20),
+        "act_bits": st.integers(min_value=4, max_value=20),
+        "grad_bits": st.integers(min_value=4, max_value=20),
+        "stochastic_grad": st.booleans(),
+        "stochastic_fwd": st.booleans(),
+    }).map(lambda d: {**d, "warn_stability": False})
+
+rules = st.builds(
+    lambda p, o: ScopeRule(pattern=p, overrides=tuple(o.items())),
+    patterns, overrides)
+
+policies = st.builds(
+    lambda rs: QuantPolicy(
+        base=QuantConfig.int16(), rules=tuple(rs)),
+    st.lists(rules, min_size=0, max_size=6))
+
+
+@settings(max_examples=120, deadline=None)
+@given(policies, paths)
+def test_resolution_is_total_and_deterministic(policy, path):
+    a = policy.resolve(path)
+    b = policy.resolve(path)
+    assert isinstance(a, QuantConfig)
+    assert a == b
+    # and stable across an identical reconstructed policy (no id() leakage)
+    clone = QuantPolicy(base=policy.base, rules=policy.rules)
+    assert clone.resolve(path) == a
+
+
+@settings(max_examples=120, deadline=None)
+@given(policies, paths)
+def test_resolution_only_applies_matching_rules(policy, path):
+    """The resolved leaf differs from base only in fields some matching
+    rule overrides."""
+    leaf = policy.resolve(path)
+    allowed = set()
+    for r in policy.rules:
+        if r.matches(path):
+            allowed |= {k for k, _ in r.overrides}
+    for f in dataclasses.fields(QuantConfig):
+        if f.name not in allowed:
+            assert getattr(leaf, f.name) == getattr(policy.base, f.name), \
+                f.name
+
+
+@settings(max_examples=120, deadline=None)
+@given(st.lists(rules, min_size=0, max_size=4), paths,
+       st.integers(min_value=4, max_value=20))
+def test_exact_path_rule_always_wins(rule_list, path, bits):
+    """A rule whose pattern IS the literal path has maximal specificity and
+    must win over any glob rule, wherever it sits in the declaration
+    order."""
+    exact = ScopeRule(pattern=path, overrides=(("weight_bits", bits),
+                                               ("warn_stability", False)))
+    # a generated rule with the *identical* literal pattern ties the exact
+    # rule's specificity (later declaration wins by design) — exclude it
+    rule_list = [r for r in rule_list if r.pattern != path]
+    for pos in range(len(rule_list) + 1):
+        rs = tuple(rule_list[:pos]) + (exact,) + tuple(rule_list[pos:])
+        pol = QuantPolicy(base=QuantConfig.int16(), rules=rs)
+        assert pol.resolve(path).weight_bits == bits
+
+
+@settings(max_examples=150, deadline=None)
+@given(policies)
+def test_json_round_trip_is_identity(policy):
+    assert QuantPolicy.from_json(policy.to_json()) == policy
+
+
+@settings(max_examples=100, deadline=None)
+@given(patterns, patterns)
+def test_specificity_is_a_total_deterministic_order(p1, p2):
+    s1, s2 = specificity(p1), specificity(p2)
+    assert isinstance(s1, tuple) and len(s1) == 2
+    assert (s1 < s2) or (s1 > s2) or (s1 == s2)
+    assert specificity(p1) == s1
