@@ -1,13 +1,16 @@
-"""Traced-dispatch regression gate (CI).
+"""Traced-dispatch regression gate (CI) — quantlint QL004.
 
 Counts the ``pallas_call`` equations traced for every integer-layer entry
 point on the pallas backend — the quantity the single-dispatch limb fusion
 minimized (ISSUE 4) — and compares them against the checked-in baseline
-``benchmarks/dispatch_baseline.json``.  Any count ABOVE baseline fails the
-gate (a reintroduced per-limb or per-expert dispatch loop is a perf
-regression even when numerics stay correct); counts below baseline are
-reported as an improvement and accepted (refresh the baseline with
-``--update`` to lock them in).
+``benchmarks/dispatch_baseline.json``.  Counting and comparison are the
+analyzer's (``repro.analysis``): the layer sections pin plain traced
+counts, while the model-level ``policy`` section pins BOTH the ``traced``
+count (program-text size) and the scan-``effective`` count (per-step kernel
+launches, scan bodies multiplied by their trip count) — so neither a
+reintroduced per-limb dispatch loop nor an accidental layer-stack split can
+land silently.  Any count ABOVE baseline fails the gate; counts below are
+reported as improvements (refresh with ``--update`` to lock them in).
 
     PYTHONPATH=src python -m benchmarks.check_dispatch            # gate
     PYTHONPATH=src python -m benchmarks.check_dispatch --update   # re-pin
@@ -26,6 +29,7 @@ import sys
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import rules
 from repro.core import int_ops
 from repro.core.qconfig import QuantConfig
 from repro.core.qpolicy import QuantPolicy, preset_rules
@@ -93,8 +97,13 @@ def policy_counts() -> dict:
     and a policy that splits the layer stack (``int8_firstlast16``) traces
     one extra scan body per run of identically-resolved layers — both are
     pinned so neither a reintroduced per-limb loop nor an accidental
-    stack split can land silently.  Explicit ``QuantPolicy`` objects are
-    used throughout so the counts are independent of ``$REPRO_QPOLICY``.
+    stack split can land silently.  Each entry pins ``{"traced",
+    "effective"}`` (statically derived by ``repro.analysis``): the traced
+    number is program-text size, the effective number is per-step kernel
+    launches with scan bodies multiplied by their trip count — a stack
+    split grows the former but must NOT grow the latter.  Explicit
+    ``QuantPolicy`` objects are used throughout so the counts are
+    independent of ``$REPRO_QPOLICY``.
     """
     from repro.models import paper_models as pm
 
@@ -106,43 +115,31 @@ def policy_counts() -> dict:
              "labels": jnp.zeros((2,), jnp.int32)}
     base = _cfg("int8")
 
-    def step_count(policy):
+    def step_counts(policy):
         def loss(p):
             return pm.bert_cls_loss(p, batch, cfg, policy, None)[0]
-        return count_pallas_calls(jax.make_jaxpr(jax.grad(loss))(params))
+        return rules.dispatch_counts(jax.make_jaxpr(jax.grad(loss))(params))
 
     return {
-        "bert_step_int8": step_count(QuantPolicy(base=base)),
-        "bert_step_int8_embed16": step_count(
+        "bert_step_int8": step_counts(QuantPolicy(base=base)),
+        "bert_step_int8_embed16": step_counts(
             QuantPolicy(base=base, rules=preset_rules("int8_embed16"))),
-        "bert_step_int8_firstlast16": step_count(
+        "bert_step_int8_firstlast16": step_counts(
             QuantPolicy(base=base, rules=preset_rules("int8_firstlast16"))),
     }
 
 
 def compare(current: dict, baseline: dict) -> tuple[list, list]:
-    """Returns (regressions, improvements) as flat `(key, base, cur)` rows.
+    """Returns (QL004 findings, improvements).
 
-    Regressions include entry points present in ``current`` but absent from
-    the baseline ("UNPINNED"): a newly counted layer must be pinned with
-    ``--update`` or it would silently escape the gate — exactly the code
-    most likely to regress.
+    Delegates to ``repro.analysis.rules.check_dispatch_budget``: any count
+    above baseline, a baseline entry with no derived counterpart
+    ("MISSING"), or a derived entry the baseline does not pin ("UNPINNED")
+    is a finding — a newly counted layer must be pinned with ``--update``
+    or it would silently escape the gate, exactly the code most likely to
+    regress.  Improvements are ``(key, base, cur)`` rows to re-pin.
     """
-    regressions, improvements = [], []
-    for preset, entries in baseline.items():
-        for name, base in entries.items():
-            cur = current.get(preset, {}).get(name)
-            if cur is None:
-                regressions.append((f"{preset}.{name}", base, "MISSING"))
-            elif cur > base:
-                regressions.append((f"{preset}.{name}", base, cur))
-            elif cur < base:
-                improvements.append((f"{preset}.{name}", base, cur))
-    for preset, entries in current.items():
-        for name, cur in entries.items():
-            if baseline.get(preset, {}).get(name) is None:
-                regressions.append((f"{preset}.{name}", "UNPINNED", cur))
-    return regressions, improvements
+    return rules.check_dispatch_budget(current, baseline)
 
 
 def main() -> None:
@@ -162,13 +159,12 @@ def main() -> None:
 
     with open(args.baseline) as f:
         baseline = json.load(f)
-    regressions, improvements = compare(current, baseline)
+    findings, improvements = compare(current, baseline)
     for key, base, cur in improvements:
         print(f"IMPROVED  {key}: {base} -> {cur} (run --update to pin)")
-    if regressions:
-        for key, base, cur in regressions:
-            print(f"REGRESSED {key}: baseline {base}, current {cur}",
-                  file=sys.stderr)
+    if findings:
+        for f in findings:
+            print(f"REGRESSED {f}", file=sys.stderr)
         sys.exit(1)
     print(f"dispatch counts OK ({sum(len(v) for v in baseline.values())} "
           "entries at or below baseline)")

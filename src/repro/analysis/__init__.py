@@ -1,0 +1,28 @@
+"""quantlint — jaxpr-level static analysis of the integer-training invariants.
+
+The analyzer proves, on the *traced* jaxpr and before any kernel runs, the
+properties the paper's recipe depends on (DESIGN.md §5):
+
+* integer closure — the mantissa arithmetic stays inside the Pallas kernels
+  on the pallas backend (no XLA-side ``rsqrt``/limb-split ``rem``/``div``,
+  no float ``dot_general`` over integer mantissas),
+* PRNG key discipline — no stochastic-rounding draw consumes a key another
+  draw already consumed without an intervening ``split``/``fold_in``,
+* policy hygiene — no dead or shadowed ``QuantPolicy`` rules, no unscoped
+  call sites under a scoped policy,
+* dispatch budget — statically derived per-direction ``pallas_call`` counts
+  at or below ``benchmarks/dispatch_baseline.json``,
+* stability — no resolved scope lands in the Fig. 4 divergence regime,
+* accumulator budget — no matmul/reduction site whose worst-case mantissa
+  magnitude overflows its accumulator's exact range.
+
+Layout:
+
+* ``walker``  — the closed-jaxpr IR walk every other module builds on
+* ``rules``   — the QL00x diagnostics registry
+* ``budget``  — the interval-arithmetic accumulator-overflow checker
+* ``lint``    — the CLI (``python -m repro.analysis.lint``)
+"""
+from repro.analysis.rules import (ALL_RULES, Finding, run_rules)  # noqa: F401
+from repro.analysis.walker import (count_eqns, count_pallas_calls,  # noqa: F401
+                                   iter_eqns)

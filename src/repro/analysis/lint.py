@@ -1,0 +1,181 @@
+"""quantlint CLI — trace a registry config under a quantization preset and
+run every graph/policy rule on the fwd+bwd jaxpr.
+
+    python -m repro.analysis.lint --config bert_base --preset int8
+    python -m repro.analysis.lint --config all --preset all --json
+
+Nothing executes: the model is *traced* (``jax.make_jaxpr`` of the loss
+gradient, backend pinned to ``pallas``) and the analyzer proves the
+integer-training invariants on the program text — integer closure (QL001),
+PRNG key discipline (QL002), policy hygiene (QL003), stability regime
+(QL005) and accumulator budgets (QL006).  The dispatch budget (QL004)
+compares *against a pinned baseline* and therefore lives with the gate —
+``benchmarks/check_dispatch.py`` — which delegates its counting and
+comparison to the same analyzer.
+
+Exit status is 1 when any finding is reported, 0 otherwise; ``--json``
+emits a machine-readable document (one entry per ``config × preset`` cell)
+for CI artifacts.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+from typing import Any, Dict, List, Tuple
+
+#: paper-subject configs traced through ``repro.models.paper_models`` (the
+#: registry archs are traced through the lm / encdec stacks)
+PAPER_CONFIGS = ("bert_base", "vit_base")
+
+#: preset cells the CI lint job sweeps
+DEFAULT_PRESETS = ("int8", "int16", "int8_embed16")
+
+
+def all_configs() -> Tuple[str, ...]:
+    from repro.configs import registry
+    return PAPER_CONFIGS + tuple(registry.ARCH_IDS)
+
+
+def _pallas_policy(preset: str):
+    """Preset name -> QuantPolicy with the backend pinned to pallas."""
+    from repro.core import qpolicy
+    from repro.core.qconfig import QuantConfig
+
+    q = qpolicy.get(preset)
+    if isinstance(q, QuantConfig):
+        q = dataclasses.replace(q, backend="pallas")
+    else:
+        q = dataclasses.replace(
+            q, base=dataclasses.replace(q.base, backend="pallas"))
+    return qpolicy.as_policy(q)
+
+
+def _loss_thunk(config: str, policy):
+    """Build ``(loss_of_params, params)`` for one config, policy closed over.
+
+    Reduced dims everywhere — the invariants are structural, so the tiny
+    variant proves the same properties as the published shape while keeping
+    a full ``--config all`` sweep tractable on CPU.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    key = jax.random.PRNGKey(0)
+
+    if config == "bert_base":
+        from repro.models import paper_models as pm
+        cfg = pm.bert_config(n_layers=4, d_model=64, n_heads=4, d_ff=128,
+                             vocab=128, name="bert-lint")
+        params = pm.bert_init(key, cfg, num_labels=4)
+        batch = {"tokens": jnp.zeros((2, 16), jnp.int32),
+                 "labels": jnp.zeros((2,), jnp.int32)}
+        return (lambda p: pm.bert_cls_loss(p, batch, cfg, policy, key)[0],
+                params)
+
+    if config == "vit_base":
+        from repro.models import paper_models as pm
+        cfg = pm.vit_config(n_layers=4, d_model=64, n_heads=4, d_ff=128,
+                            img=32, patch=16, name="vit-lint")
+        params = pm.vit_init(key, cfg, num_classes=4, img=32, patch=16)
+        batch = {"images": jnp.zeros((2, 32, 32, 3), jnp.float32),
+                 "labels": jnp.zeros((2,), jnp.int32)}
+        return (lambda p: pm.vit_cls_loss(p, batch, cfg, policy, key,
+                                          patch=16)[0],
+                params)
+
+    from repro.configs import registry
+    from repro.models import encdec, lm
+    cfg = registry.get_config(config).reduced()
+    loss_fn = encdec.encdec_loss if cfg.enc_dec else lm.lm_loss
+    init_fn = encdec.encdec_init if cfg.enc_dec else lm.lm_init
+    params = init_fn(key, cfg)
+    B, S = 2, 32
+    batch = {"tokens": jnp.zeros((B, S), jnp.int32),
+             "labels": jnp.zeros((B, S), jnp.int32)}
+    if cfg.enc_dec:
+        batch["frames"] = jnp.zeros((B, S, cfg.d_model), jnp.float32)
+    if cfg.vlm_prefix:
+        batch["patch_embeds"] = jnp.zeros((B, cfg.vlm_prefix, cfg.d_model),
+                                          jnp.float32)
+    return (lambda p: loss_fn(p, batch, cfg, policy, key)[0], params)
+
+
+def lint_cell(config: str, preset: str) -> Dict[str, Any]:
+    """Trace one ``config × preset`` cell and run every rule on it."""
+    import jax
+
+    from repro.analysis import rules
+    from repro.core import qpolicy
+
+    policy = _pallas_policy(preset)
+    loss, params = _loss_thunk(config, policy)
+    with qpolicy.record_resolutions() as recs:
+        jaxpr = jax.make_jaxpr(jax.grad(loss))(params)
+    paths = [p for pol, p in recs if pol == policy]
+    findings = rules.run_rules(jaxpr, policy=policy, resolutions=paths)
+    counts = rules.dispatch_counts(jaxpr)
+    return {
+        "config": config,
+        "preset": preset,
+        "findings": [f.to_dict() for f in findings],
+        "pallas_calls": counts,
+        "resolutions": len(paths),
+    }
+
+
+def main(argv: List[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="statically verify the integer-training invariants on "
+                    "a traced train step")
+    ap.add_argument("--config", action="append", default=None,
+                    metavar="NAME",
+                    help="registry config or paper subject (repeatable; "
+                         "'all' sweeps every config; default bert_base)")
+    ap.add_argument("--preset", action="append", default=None,
+                    metavar="NAME",
+                    help="quantization preset (repeatable; 'all' = "
+                         f"{'/'.join(DEFAULT_PRESETS)}; default int8)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit one JSON document instead of text")
+    args = ap.parse_args(argv)
+
+    configs = args.config or ["bert_base"]
+    if "all" in configs:
+        configs = list(all_configs())
+    presets = args.preset or ["int8"]
+    if "all" in presets:
+        presets = list(DEFAULT_PRESETS)
+
+    results = []
+    n_findings = 0
+    for config in configs:
+        for preset in presets:
+            cell = lint_cell(config, preset)
+            results.append(cell)
+            n_findings += len(cell["findings"])
+            if not args.json:
+                status = ("clean" if not cell["findings"]
+                          else f"{len(cell['findings'])} finding(s)")
+                print(f"{config} x {preset}: {status} "
+                      f"(pallas {cell['pallas_calls']['traced']} traced / "
+                      f"{cell['pallas_calls']['effective']} effective, "
+                      f"{cell['resolutions']} resolutions)")
+                for f in cell["findings"]:
+                    loc = f" [{f['where']}]" if f["where"] else ""
+                    print(f"  {f['code']} {f['rule']}: {f['message']}{loc}")
+    if args.json:
+        json.dump({"results": results, "findings": n_findings},
+                  sys.stdout, indent=2)
+        print()
+    elif n_findings:
+        print(f"FAIL: {n_findings} finding(s)")
+    else:
+        print("OK: all cells clean")
+    return 1 if n_findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

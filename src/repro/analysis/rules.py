@@ -1,0 +1,483 @@
+"""quantlint diagnostics registry — stable-coded rules over traced jaxprs.
+
+Code     Rule                Property proved when silent
+-------  ------------------  -------------------------------------------------
+QL001    integer-closure     on the pallas backend no mantissa arithmetic
+                             leaks into XLA: no ``rsqrt`` outside a kernel, no
+                             limb-split ``rem``/``div`` chains on quantized
+                             integers, no ``dot_general`` contracting integer
+                             mantissas in XLA (the sim fallback's signature)
+QL002    key-discipline      no two stochastic-rounding draws (``random_bits``)
+                             consume the same PRNG key without an intervening
+                             ``split``/``fold_in`` — scan trip counts weigh
+                             consumptions, so a key threaded unchanged through
+                             a rolled layer stack is caught too
+QL003    policy-hygiene      every ``QuantPolicy`` rule matched some resolved
+                             path (not dead), changed some resolution (not
+                             shadowed), and no call site resolved at the root
+                             path under a scoped policy (unscoped call site)
+QL004    dispatch-budget     statically derived per-direction ``pallas_call``
+                             counts (traced AND scan-effective) at or below
+                             ``benchmarks/dispatch_baseline.json``
+QL005    stability           no resolved scope lands in the paper's Fig. 4
+                             divergence regime (weight_bits=8, act_bits<12)
+QL006    accum-budget        no matmul/reduction site's worst-case mantissa
+                             magnitude exceeds its accumulator's exact range
+                             (interval model in ``budget.py``)
+
+Graph rules (QL001/QL002/QL006) need only a closed jaxpr; policy rules
+(QL003/QL005) need the resolutions recorded while tracing
+(``qpolicy.record_resolutions``); QL004 compares count dicts and is what
+``benchmarks/check_dispatch.py`` delegates to.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.analysis import budget, walker
+
+__all__ = ["Finding", "ALL_RULES", "check_integer_closure",
+           "check_key_discipline", "check_policy_hygiene",
+           "check_dispatch_budget", "check_stability", "check_accum_budget",
+           "dispatch_counts", "run_rules"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One diagnostic: a stable code, the violated rule, and the site."""
+
+    code: str
+    rule: str
+    message: str
+    where: str = ""
+
+    def to_dict(self) -> Dict[str, str]:
+        return dataclasses.asdict(self)
+
+    def __str__(self):
+        loc = f" [{self.where}]" if self.where else ""
+        return f"{self.code} {self.rule}: {self.message}{loc}"
+
+
+def _kind(dtype_or_aval) -> str:
+    """numpy dtype kind char, or "" for extended dtypes (PRNG keys)."""
+    dt = getattr(dtype_or_aval, "dtype", dtype_or_aval)
+    try:
+        return np.dtype(dt).kind
+    except TypeError:
+        return ""
+
+
+def _src(eqn) -> str:
+    try:
+        from jax._src import source_info_util
+        return source_info_util.summarize(eqn.source_info)
+    except Exception:
+        return eqn.primitive.name
+
+
+# =========================================================================
+# QL001 — integer closure
+# =========================================================================
+
+#: abstract tags for the closure analysis
+_IOTA = "iota"        # index arithmetic (iota/literal-derived) — benign
+_QINT = "qint"        # integer mantissa (rounded float / kernel output)
+_QFLOAT = "qfloat"    # float that IS an immediate convert of a mantissa
+
+_ELEMENTWISE = frozenset({
+    "add", "sub", "mul", "max", "min", "rem", "div", "neg", "abs", "sign",
+    "clamp", "shift_left", "shift_right_arithmetic", "shift_right_logical",
+    "and", "or", "xor", "not", "pow", "integer_pow", "select_n",
+})
+
+_SHAPE_OPS = frozenset({
+    "broadcast_in_dim", "reshape", "squeeze", "transpose", "rev", "slice",
+    "dynamic_slice", "dynamic_update_slice", "gather", "concatenate",
+    "expand_dims", "copy", "stop_gradient", "optimization_barrier", "pad",
+    "reduce_sum", "reduce_max", "reduce_min", "cumsum",
+})
+
+
+class _ClosureSemantics(walker.Semantics):
+    def __init__(self):
+        self.findings: List[Finding] = []
+
+    def literal(self, lit):
+        return _IOTA
+
+    def _flag(self, eqn, what, ctx):
+        self.findings.append(Finding(
+            code="QL001", rule="integer-closure",
+            message=what, where=_src(eqn)))
+
+    def eqn(self, eqn, in_vals, ctx):
+        prim = eqn.primitive.name
+        out_aval = eqn.outvars[0].aval if eqn.outvars else None
+        out_int = out_aval is not None and _kind(out_aval) in "iu"
+
+        if not ctx.inside_pallas:
+            if prim == "rsqrt":
+                self._flag(eqn, "rsqrt outside a pallas kernel (norm "
+                                "statistics recomputed in XLA)", ctx)
+            elif prim in ("rem", "div") and out_int \
+                    and any(v == _QINT for v in in_vals):
+                self._flag(eqn, f"integer {prim} on quantized mantissas in "
+                                "XLA (limb-split chain outside the fused "
+                                "quantize kernel)", ctx)
+            elif prim == "dot_general":
+                int_in = any(_kind(v.aval) in "iu"
+                             for v in eqn.invars if hasattr(v, "aval"))
+                if int_in or any(v == _QFLOAT for v in in_vals):
+                    self._flag(eqn, "XLA dot_general contracts integer "
+                                    "mantissas (sim-path fallback on the "
+                                    "pallas backend)", ctx)
+
+        # ---- tag transfer ----
+        if prim == "iota":
+            return [_IOTA]
+        if prim == "convert_element_type":
+            kind = _kind(eqn.params["new_dtype"])
+            v = in_vals[0]
+            src_int = (hasattr(eqn.invars[0], "aval")
+                       and _kind(eqn.invars[0].aval) in "iub")
+            if kind in "iu":
+                if v == _IOTA:
+                    return [_IOTA]
+                # float -> int is a rounding/quantize step; int -> int keeps
+                return [v if src_int else _QINT]
+            if kind == "f":
+                if v == _QINT:
+                    return [_QFLOAT]
+                return [_IOTA if v == _IOTA else None]
+            return [None]
+        if prim in _ELEMENTWISE or prim in _SHAPE_OPS:
+            n_out = len(eqn.outvars)
+            if any(v == _QINT for v in in_vals) and out_int:
+                return [_QINT] * n_out
+            # unknown dominates: clamp(unknown, lit, lit) is NOT index math
+            if in_vals and all(v == _IOTA for v in in_vals):
+                return [_IOTA] * n_out
+            return [None] * n_out
+        if walker.sub_jaxprs(eqn) and prim != "pallas_call":
+            return None                                  # generic descent
+        if prim == "pallas_call":
+            return None                                  # -> pallas_call()
+        return [None] * len(eqn.outvars)
+
+    def pallas_call(self, eqn, in_vals, ctx):
+        return [_QINT if _kind(v.aval) in "iu" else None
+                for v in eqn.outvars]
+
+
+def check_integer_closure(jaxpr) -> List[Finding]:
+    """QL001 on one (closed) jaxpr traced for the pallas backend."""
+    sem = _ClosureSemantics()
+    walker.interpret(jaxpr, sem)
+    return sem.findings
+
+
+# =========================================================================
+# QL002 — PRNG key discipline
+# =========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class _KeyTok:
+    uid: int
+    family: bool       # output of random_split: each extraction is fresh
+    mint_trips: int    # ctx.trips where the token was minted
+
+
+def _is_key_aval(aval) -> bool:
+    try:
+        import jax
+        if jax.dtypes.issubdtype(aval.dtype, jax.dtypes.prng_key):
+            return True
+    except Exception:
+        pass
+    dt = getattr(aval, "dtype", None)
+    shape = tuple(getattr(aval, "shape", ()))
+    try:
+        return (dt is not None and np.dtype(dt) == np.uint32
+                and len(shape) >= 1 and shape[-1] == 2)
+    except TypeError:
+        return False
+
+
+#: ops a key value survives unchanged
+_KEY_PASS = frozenset({
+    "random_wrap", "random_unwrap", "convert_element_type", "reshape",
+    "broadcast_in_dim", "transpose", "copy", "optimization_barrier",
+    "stop_gradient",
+})
+
+#: ops that extract one member from a split family (fresh stream each)
+_KEY_EXTRACT = frozenset({"slice", "dynamic_slice", "gather", "squeeze"})
+
+
+class _KeySemantics(walker.Semantics):
+    def __init__(self):
+        self._next = 0
+        # token uid -> list of (weight, where)
+        self.consumed: Dict[int, List[Tuple[int, str]]] = {}
+
+    def _mint(self, family: bool, trips: int) -> _KeyTok:
+        self._next += 1
+        return _KeyTok(self._next, family, trips)
+
+    def input(self, aval, index):
+        return self._mint(False, 1) if _is_key_aval(aval) else None
+
+    def const(self, aval):
+        return self._mint(False, 1) if _is_key_aval(aval) else None
+
+    def eqn(self, eqn, in_vals, ctx):
+        prim = eqn.primitive.name
+        tok = next((v for v in in_vals if isinstance(v, _KeyTok)), None)
+
+        if prim == "random_bits":
+            if tok is not None:
+                w = max(1, ctx.trips // max(tok.mint_trips, 1))
+                self.consumed.setdefault(tok.uid, []).append((w, _src(eqn)))
+            return [None] * len(eqn.outvars)
+        if prim in ("random_seed",):
+            return [self._mint(False, ctx.trips)]
+        if prim == "random_split":
+            return [self._mint(True, ctx.trips)]
+        if prim == "random_fold_in":
+            return [self._mint(False, ctx.trips)]
+        if prim in _KEY_PASS:
+            return [tok] + [None] * (len(eqn.outvars) - 1)
+        if prim in _KEY_EXTRACT:
+            if tok is None:
+                return [None] * len(eqn.outvars)
+            out = self._mint(False, ctx.trips) if tok.family else tok
+            return [out] + [None] * (len(eqn.outvars) - 1)
+        if walker.sub_jaxprs(eqn) and prim != "pallas_call":
+            return None                                  # generic descent
+        return [None] * len(eqn.outvars)
+
+
+def check_key_discipline(jaxpr) -> List[Finding]:
+    """QL002: two stochastic draws reachable from one key token."""
+    sem = _KeySemantics()
+    walker.interpret(jaxpr, sem)
+    findings = []
+    for uid, uses in sem.consumed.items():
+        total = sum(w for w, _ in uses)
+        if total < 2:
+            continue
+        sites = sorted({where for _, where in uses})
+        trips = any(w > 1 for w, _ in uses)
+        how = ("consumed on every trip of a rolled scan without a "
+               "per-iteration fold_in" if trips and len(sites) == 1 else
+               f"consumed by {total} stochastic draws")
+        findings.append(Finding(
+            code="QL002", rule="key-discipline",
+            message=f"PRNG key {how}; split/fold_in before reuse",
+            where="; ".join(sites[:4])))
+    return findings
+
+
+# =========================================================================
+# QL003 / QL005 — policy hygiene and stability (need recorded resolutions)
+# =========================================================================
+
+def check_policy_hygiene(policy, resolutions: Sequence[Tuple[str, ...]]
+                         ) -> List[Finding]:
+    """QL003 over the paths actually resolved during a trace.
+
+    ``resolutions`` is the list of alias-path tuples recorded by
+    ``qpolicy.record_resolutions`` — one entry per ``resolve`` call.
+    """
+    import dataclasses as _dc
+
+    findings: List[Finding] = []
+    path_tuples = list(dict.fromkeys(tuple(p) for p in resolutions))
+    all_paths = sorted({p for tup in path_tuples for p in tup})
+
+    if policy.rules:
+        unscoped = [tup for tup in path_tuples if all(p == "" for p in tup)]
+        if unscoped:
+            findings.append(Finding(
+                code="QL003", rule="policy-hygiene",
+                message=f"{len(unscoped)} call site(s) resolved at the root "
+                        "path under a scoped policy — the call site never "
+                        "descended a Scope, so no rule can address it",
+                where="<root>"))
+
+    for i, r in enumerate(policy.rules):
+        if not any(r.matches(p) for p in all_paths):
+            findings.append(Finding(
+                code="QL003", rule="policy-hygiene",
+                message=f"dead rule {r.pattern!r}: matches none of the "
+                        f"{len(all_paths)} path(s) this trace resolved",
+                where=r.pattern))
+            continue
+        without = _dc.replace(
+            policy, rules=tuple(x for j, x in enumerate(policy.rules)
+                                if j != i))
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            shadowed = all(policy.resolve(tup) == without.resolve(tup)
+                           for tup in path_tuples)
+        if shadowed:
+            findings.append(Finding(
+                code="QL003", rule="policy-hygiene",
+                message=f"shadowed rule {r.pattern!r}: removing it changes "
+                        "no resolved leaf (a more specific rule overrides "
+                        "every field it sets)",
+                where=r.pattern))
+    return findings
+
+
+def check_stability(policy, resolutions: Sequence[Tuple[str, ...]]
+                    ) -> List[Finding]:
+    """QL005: resolved scopes in the Fig. 4 divergence regime."""
+    from repro.core.qconfig import stability_violated
+
+    findings = []
+    seen = set()
+    for tup in dict.fromkeys(tuple(p) for p in resolutions):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            leaf = policy.resolve(tup)
+        if stability_violated(leaf) and leaf.warn_stability:
+            key = (tup[0], leaf.weight_bits, leaf.act_bits)
+            if key in seen:
+                continue
+            seen.add(key)
+            findings.append(Finding(
+                code="QL005", rule="stability",
+                message=f"resolved scope lands in the divergence regime "
+                        f"(weight_bits={leaf.weight_bits}, act_bits="
+                        f"{leaf.act_bits} < 12; paper Fig. 4)",
+                where=tup[0] or "<root>"))
+    if not resolutions and stability_violated(policy.base) \
+            and policy.base.warn_stability:
+        findings.append(Finding(
+            code="QL005", rule="stability",
+            message=f"base config is in the divergence regime (weight_bits="
+                    f"{policy.base.weight_bits}, act_bits="
+                    f"{policy.base.act_bits} < 12; paper Fig. 4)",
+            where="<base>"))
+    return findings
+
+
+# =========================================================================
+# QL004 — dispatch budget
+# =========================================================================
+
+def dispatch_counts(jaxpr) -> Dict[str, int]:
+    """Statically derived launch counts of one traced step: the program-text
+    (``traced``) and per-step (``effective``, scan trip-count multiplied)
+    ``pallas_call`` totals."""
+    return {"traced": walker.count_pallas_calls(jaxpr),
+            "effective": walker.count_pallas_calls(jaxpr, effective=True)}
+
+
+def _entry_counts(entry) -> Dict[str, int]:
+    if isinstance(entry, Mapping):
+        return {k: int(v) for k, v in entry.items()}
+    return {"traced": int(entry), "effective": int(entry)}
+
+
+def check_dispatch_budget(current: Mapping[str, Mapping[str, Any]],
+                          baseline: Mapping[str, Mapping[str, Any]],
+                          ) -> Tuple[List[Finding], List[Tuple[str, int, int]]]:
+    """QL004: diff derived counts against the pinned baseline.
+
+    Entries are either plain ints (traced == effective, the layer-level
+    sections) or ``{"traced": n, "effective": m}`` dicts (the model-level
+    policy section, where rolled scans make the two differ).  Returns
+    ``(findings, improvements)`` — any count above baseline, a baseline
+    entry with no current counterpart (MISSING), or a current entry the
+    baseline does not pin (UNPINNED) is a finding; counts below baseline
+    are improvements to re-pin.
+    """
+    findings: List[Finding] = []
+    improvements: List[Tuple[str, int, int]] = []
+    for section, entries in baseline.items():
+        for name, base_entry in entries.items():
+            key = f"{section}.{name}"
+            cur_entry = current.get(section, {}).get(name)
+            if cur_entry is None:
+                findings.append(Finding(
+                    code="QL004", rule="dispatch-budget",
+                    message="baseline entry has no derived counterpart "
+                            "(MISSING)", where=key))
+                continue
+            base_c, cur_c = _entry_counts(base_entry), _entry_counts(cur_entry)
+            for kind, base_n in base_c.items():
+                cur_n = cur_c.get(kind)
+                if cur_n is None:
+                    continue
+                if cur_n > base_n:
+                    findings.append(Finding(
+                        code="QL004", rule="dispatch-budget",
+                        message=f"{kind} pallas_call count {cur_n} exceeds "
+                                f"baseline {base_n}",
+                        where=key))
+                elif cur_n < base_n:
+                    improvements.append((f"{key}.{kind}", base_n, cur_n))
+    for section, entries in current.items():
+        for name, cur_entry in entries.items():
+            if baseline.get(section, {}).get(name) is None:
+                cur_c = _entry_counts(cur_entry)
+                findings.append(Finding(
+                    code="QL004", rule="dispatch-budget",
+                    message=f"derived counts {cur_c} not pinned by the "
+                            "baseline (UNPINNED — refresh with --update)",
+                    where=f"{section}.{name}"))
+    return findings, improvements
+
+
+# =========================================================================
+# QL006 — accumulator budget
+# =========================================================================
+
+def check_accum_budget(jaxpr) -> List[Finding]:
+    """QL006: overflow sites from the interval model in ``budget.py``."""
+    return [Finding(
+        code="QL006", rule="accum-budget",
+        message=f"{s.kind} needs {s.bits_needed} bits (worst case "
+                f"{s.bound}) but {s.accum} holds {s.capacity} exactly"
+                + (f" — {s.detail}" if s.detail else ""),
+        where=s.where) for s in budget.check_jaxpr(jaxpr)]
+
+
+# =========================================================================
+# Registry / driver
+# =========================================================================
+
+ALL_RULES = {
+    "QL001": "integer-closure",
+    "QL002": "key-discipline",
+    "QL003": "policy-hygiene",
+    "QL004": "dispatch-budget",
+    "QL005": "stability",
+    "QL006": "accum-budget",
+}
+
+
+def run_rules(jaxpr, *, policy=None,
+              resolutions: Optional[Sequence[Tuple[str, ...]]] = None,
+              ) -> List[Finding]:
+    """All graph rules on one traced jaxpr, plus the policy rules when the
+    trace's policy and recorded resolutions are supplied.  (QL004 runs
+    against a baseline via ``check_dispatch_budget`` — see
+    ``benchmarks/check_dispatch.py``.)"""
+    findings = []
+    findings += check_integer_closure(jaxpr)
+    findings += check_key_discipline(jaxpr)
+    findings += check_accum_budget(jaxpr)
+    if policy is not None:
+        findings += check_policy_hygiene(policy, resolutions or ())
+        findings += check_stability(policy, resolutions or ())
+    # the same source site reappears once per remat/scan section of the
+    # grad trace — one finding per distinct diagnostic is enough
+    return list(dict.fromkeys(findings))

@@ -1,0 +1,289 @@
+"""Closed-jaxpr IR walk — the traversal layer under every quantlint rule.
+
+Two views of the same graph:
+
+* ``iter_eqns`` / ``count_eqns`` / ``count_pallas_calls`` — a syntactic walk
+  over every equation, recursing through the higher-order primitives
+  (``pjit`` bodies, ``scan``/``while``/``cond`` bodies, ``custom_vjp``
+  calls, ``remat``, and — boundary-flagged — ``pallas_call`` kernels).
+  ``scan`` carries a static trip count (``params["length"]``), so the walk
+  can report **effective** per-step launches for rolled layer stacks:
+  ``effective=True`` multiplies body counts by the trip count and takes the
+  max (not the sum) across ``cond`` branches, matching what one training
+  step actually dispatches.  ``utils.count_eqns``/``count_pallas_calls``
+  are thin wrappers over this module.
+
+* ``interpret`` — a forward abstract interpreter: rule modules supply a
+  ``Semantics`` (a transfer function over an abstract value domain) and the
+  walker handles environment threading across *every* higher-order
+  boundary (operands map positionally onto sub-jaxpr invars; ``cond``
+  joins branch results; ``scan``/``while`` run their bodies once — a
+  single-pass approximation that keeps consumption-counting rules like the
+  PRNG discipline check from double-recording loop bodies, with the trip
+  count exposed via ``ctx.trips`` instead).
+
+Sub-jaxprs are discovered generically in ``eqn.params`` — scalar, list /
+tuple, and **dict** values are all scanned (the hand-rolled recursion this
+replaces missed dict-valued params).  The module deliberately imports
+nothing from the rest of ``repro``: it is the bottom of the analysis stack.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Iterator, List, Optional, Sequence, Tuple
+
+__all__ = ["Site", "iter_eqns", "count_eqns", "count_pallas_calls",
+           "unwrap", "sub_jaxprs", "Semantics", "Ctx", "interpret"]
+
+
+def unwrap(jaxpr):
+    """ClosedJaxpr -> Jaxpr (anything already open passes through)."""
+    inner = getattr(jaxpr, "jaxpr", None)
+    return inner if inner is not None and hasattr(inner, "eqns") else jaxpr
+
+
+def _param_jaxpr_items(eqn) -> Iterator[Tuple[str, Any]]:
+    """Yield ``(param_name, sub_jaxpr)`` for every jaxpr-valued entry in
+    ``eqn.params`` — scalars, lists/tuples, and dict values alike."""
+    for name, val in eqn.params.items():
+        if isinstance(val, dict):
+            vals = list(val.values())
+        elif isinstance(val, (list, tuple)):
+            vals = list(val)
+        else:
+            vals = [val]
+        for v in vals:
+            sub = unwrap(v)
+            if hasattr(sub, "eqns"):
+                yield name, sub
+
+
+def sub_jaxprs(eqn) -> List[Any]:
+    """All sub-jaxprs (opened) stored anywhere in ``eqn.params``."""
+    return [sub for _, sub in _param_jaxpr_items(eqn)]
+
+
+@dataclasses.dataclass(frozen=True)
+class Site:
+    """One equation plus its traversal context."""
+
+    eqn: Any
+    #: primitive name (``eqn.primitive.name``), for convenience
+    prim: str
+    #: True when the eqn lives inside a ``pallas_call`` kernel body
+    inside_pallas: bool
+    #: product of the enclosing ``scan`` trip counts — the number of times
+    #: this eqn executes per step relative to the top level (``while``
+    #: bodies count once: their trip count is not static)
+    trips: int
+    #: names of the enclosing higher-order primitives, outermost first
+    path: Tuple[str, ...]
+
+
+def iter_eqns(jaxpr, *, recurse_pallas: bool = True) -> Iterator[Site]:
+    """Depth-first walk over every equation of a (closed) jaxpr."""
+    yield from _iter(unwrap(jaxpr), recurse_pallas, False, 1, ())
+
+
+def _iter(jaxpr, recurse_pallas, inside_pallas, trips, path):
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        yield Site(eqn=eqn, prim=prim, inside_pallas=inside_pallas,
+                   trips=trips, path=path)
+        if prim == "pallas_call" and not recurse_pallas:
+            continue
+        sub_inside = inside_pallas or prim == "pallas_call"
+        sub_trips = trips * int(eqn.params.get("length", 1)) \
+            if prim == "scan" else trips
+        for sub in sub_jaxprs(eqn):
+            yield from _iter(sub, recurse_pallas, sub_inside, sub_trips,
+                             path + (prim,))
+
+
+def count_eqns(jaxpr, name: str, *, recurse_pallas: bool = True,
+               effective: bool = False) -> int:
+    """Count ``name`` equations in a (closed) jaxpr.
+
+    ``recurse_pallas=False`` skips ``pallas_call`` kernel bodies — used to
+    assert an op (e.g. the norm layers' rsqrt) happens only *inside* fused
+    kernels, never as XLA recompute.
+
+    ``effective=False`` (default) counts *traced* equations — the size of
+    the program text, what the dispatch baseline's ``traced`` numbers pin.
+    ``effective=True`` counts *per-step executions*: scan bodies multiply
+    by their static trip count and ``cond`` contributes the max over its
+    branches (only one runs).  A 12-layer rolled stack traces one scan body
+    but reports 12× its launches.
+    """
+    return _count(unwrap(jaxpr), lambda e: e.primitive.name == name,
+                  recurse_pallas=recurse_pallas, effective=effective)
+
+
+def count_pallas_calls(jaxpr, *, effective: bool = False) -> int:
+    """Count ``pallas_call`` equations (kernel launches when effective)."""
+    return _count(unwrap(jaxpr), lambda e: e.primitive.name == "pallas_call",
+                  recurse_pallas=True, effective=effective)
+
+
+def _count(jaxpr, pred: Callable, *, recurse_pallas: bool,
+           effective: bool) -> int:
+    n = 0
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        if pred(eqn):
+            n += 1
+        if prim == "pallas_call" and not recurse_pallas:
+            continue
+        subs = sub_jaxprs(eqn)
+        if not subs:
+            continue
+        if effective and prim == "cond":
+            n += max((_count(s, pred, recurse_pallas=recurse_pallas,
+                             effective=effective) for s in subs), default=0)
+            continue
+        mult = int(eqn.params.get("length", 1)) \
+            if (effective and prim == "scan") else 1
+        for s in subs:
+            n += mult * _count(s, pred, recurse_pallas=recurse_pallas,
+                               effective=effective)
+    return n
+
+
+# =========================================================================
+# Forward abstract interpretation
+# =========================================================================
+
+@dataclasses.dataclass
+class Ctx:
+    """Traversal context handed to every ``Semantics`` callback."""
+
+    trips: int = 1
+    inside_pallas: bool = False
+    path: Tuple[str, ...] = ()
+
+    def enter(self, prim: str, *, trips_mult: int = 1,
+              pallas: bool = False) -> "Ctx":
+        return Ctx(trips=self.trips * trips_mult,
+                   inside_pallas=self.inside_pallas or pallas,
+                   path=self.path + (prim,))
+
+
+class Semantics:
+    """Abstract-value transfer functions; override what the rule needs.
+
+    The abstract domain is whatever the subclass chooses; ``None`` is the
+    universal "don't know / don't care" element and is what every default
+    produces.  The walker guarantees ``eqn`` sees one abstract value per
+    ``eqn.invars`` and must get back one per ``eqn.outvars`` (or ``None``
+    to delegate to the generic higher-order descent).
+    """
+
+    def input(self, aval, index: int):
+        """Abstract value of a top-level jaxpr input."""
+        return None
+
+    def const(self, aval):
+        """Abstract value of a constvar."""
+        return None
+
+    def literal(self, lit):
+        """Abstract value of a literal operand (``lit.val`` is concrete)."""
+        return None
+
+    def join(self, vals: Sequence[Any]):
+        """Merge point (cond branch outputs, scan carry feedback)."""
+        vs = [v for v in vals if v is not None]
+        return vs[0] if vs and all(v == vs[0] for v in vs) else None
+
+    def eqn(self, eqn, in_vals: List[Any], ctx: Ctx) -> Optional[List[Any]]:
+        """Transfer one equation; return ``None`` to use the generic rule
+        (descend into sub-jaxprs for higher-order prims, else
+        ``default_out``)."""
+        return None
+
+    def default_out(self, eqn, in_vals: List[Any], ctx: Ctx) -> List[Any]:
+        return [None] * len(eqn.outvars)
+
+    def pallas_call(self, eqn, in_vals: List[Any], ctx: Ctx) -> List[Any]:
+        """Kernel boundary: default does not descend (kernel invars are
+        Refs, not arrays — rules that need kernel internals override)."""
+        return self.default_out(eqn, in_vals, ctx)
+
+
+def interpret(jaxpr, sem: Semantics, in_vals: Optional[Sequence] = None):
+    """Run ``sem`` forward over a (closed) jaxpr; returns output values."""
+    j = unwrap(jaxpr)
+    if in_vals is None:
+        in_vals = [sem.input(v.aval, i) for i, v in enumerate(j.invars)]
+    return _interp(j, list(in_vals), sem, Ctx())
+
+
+def _interp(jaxpr, in_vals, sem: Semantics, ctx: Ctx):
+    env = {}
+
+    def read(atom):
+        if hasattr(atom, "val"):                  # Literal
+            return sem.literal(atom)
+        return env.get(atom)
+
+    if len(in_vals) != len(jaxpr.invars):
+        # unknown calling convention — run with unconstrained inputs so the
+        # body is still visited (rules stay sound, just less precise)
+        in_vals = [None] * len(jaxpr.invars)
+    for var, val in zip(jaxpr.invars, in_vals):
+        env[var] = val
+    for var in jaxpr.constvars:
+        env[var] = sem.const(var.aval)
+
+    for eqn in jaxpr.eqns:
+        vals = [read(a) for a in eqn.invars]
+        out = sem.eqn(eqn, vals, ctx)
+        if out is None:
+            out = _generic_eqn(eqn, vals, sem, ctx)
+        for var, val in zip(eqn.outvars, out):
+            env[var] = val
+    return [read(a) for a in jaxpr.outvars]
+
+
+def _generic_eqn(eqn, in_vals, sem: Semantics, ctx: Ctx):
+    prim = eqn.primitive.name
+    if prim == "pallas_call":
+        return sem.pallas_call(eqn, in_vals, ctx)
+
+    if prim == "cond":
+        branches = [unwrap(b) for b in eqn.params.get("branches", ())]
+        if branches:
+            outs = [_interp(b, in_vals[1:], sem, ctx.enter(prim))
+                    for b in branches]
+            return [sem.join([o[i] for o in outs])
+                    for i in range(len(eqn.outvars))]
+
+    if prim == "scan":
+        body = unwrap(eqn.params["jaxpr"])
+        trips = int(eqn.params.get("length", 1))
+        return _interp(body, in_vals, sem,
+                       ctx.enter(prim, trips_mult=max(trips, 1)))
+
+    if prim == "while":
+        nc = int(eqn.params.get("cond_nconsts", 0))
+        nb = int(eqn.params.get("body_nconsts", 0))
+        cond_j = unwrap(eqn.params["cond_jaxpr"])
+        body_j = unwrap(eqn.params["body_jaxpr"])
+        carry = in_vals[nc + nb:]
+        _interp(cond_j, in_vals[:nc] + carry, sem, ctx.enter(prim))
+        return _interp(body_j, in_vals[nc:nc + nb] + carry, sem,
+                       ctx.enter(prim))
+
+    subs = sub_jaxprs(eqn)
+    if subs:
+        # pjit / remat / custom_{jvp,vjp}_call / closed_call and anything
+        # else with a single positional body: operands map onto the last
+        # len(invars) positions (leading params-derived consts get None via
+        # the length guard in _interp)
+        body = subs[0]
+        out = _interp(body, in_vals[-len(body.invars):]
+                      if len(body.invars) <= len(in_vals) else in_vals,
+                      sem, ctx.enter(prim))
+        if len(out) >= len(eqn.outvars):
+            return out[:len(eqn.outvars)]
+    return sem.default_out(eqn, in_vals, ctx)

@@ -65,8 +65,17 @@ def compressed_psum_mean(grads: Any, residuals: Optional[Any], *,
     inside a ``shard_map`` that names ``axis``.
     """
     flat, tdef = jax.tree.flatten(grads)
-    res_flat = jax.tree.leaves(residuals) if residuals is not None \
-        else [None] * len(flat)
+    if residuals is None:
+        res_flat = [None] * len(flat)
+    else:
+        res_flat, res_tdef = jax.tree.flatten(residuals)
+        if res_tdef != tdef:
+            # a silent zip() over mismatched trees would pair residuals with
+            # the wrong leaves and corrupt the error feedback
+            raise ValueError(
+                "residual tree does not match the gradient tree "
+                f"(grads: {tdef}, residuals: {res_tdef}); build residuals "
+                "with init_residuals(params)")
     out, new_res = [], []
     for g, r in zip(flat, res_flat):
         if g.size < min_size:

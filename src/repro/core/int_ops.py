@@ -550,6 +550,18 @@ def int_conv1d_depthwise(x: Array, w: Array, key, cfg: QuantConfig) -> Array:
     return _int_dwconv(x, w, key, cfg, K)
 
 
+def _conv_digits(m) -> tuple:
+    """Balanced base-2⁸ digit planes of an integer mantissa tensor:
+    ``m = hi * 256 + lo`` with ``|lo| <= 128``, ``|hi| <= 128`` for 16-bit
+    storage (identically zero for 8-bit).  Same split as the norm kernels'
+    ``_exact_moments``, in XLA — the and-mask idiom avoids the ``rem``/
+    ``div`` chain the integer-closure lint (QL001) rejects."""
+    m32 = m.astype(jnp.int32)
+    lo = ((m32 + 128) & 255) - 128
+    hi = (m32 - lo) >> 8
+    return hi, lo
+
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
 def _int_dwconv(x, w, key, cfg: QuantConfig, K: int):
     y, _ = _int_dwconv_fwd(x, w, key, cfg, K)
@@ -564,10 +576,18 @@ def _int_dwconv_fwd(x, w, key, cfg: QuantConfig, K: int):
         key, kf = jax.random.split(key)
     qx = _quantize(x, cfg.act_bits, cfg, stochastic=kf is not None, key=kf)
     qw = _quantize(w, cfg.weight_bits, cfg)
-    xm = qx.m.astype(jnp.float32)
-    wm = qw.m.astype(jnp.float32)
+    # Exact integer accumulation: split w into base-2⁸ digits so every
+    # int32 partial is bounded by 2^(b_act-1) · 2^7 · K — f32 would round
+    # past 2^24 already at b_act + b_w + log2 K > 25 (QL006).  The digit
+    # planes are combined scaled in f32, one rounding at the output, same
+    # contract as the limb-matmul kernel epilogue.
+    xm = qx.m.astype(jnp.int32)
+    wh, wl = _conv_digits(qw.m)
     pads = jnp.pad(xm, ((0, 0), (K - 1, 0), (0, 0)))
-    acc = sum(pads[:, k:k + x.shape[1], :] * wm[k] for k in range(K))
+    sh = [pads[:, k:k + x.shape[1], :] for k in range(K)]
+    acc_h = sum(s * wh[k] for k, s in enumerate(sh))
+    acc_l = sum(s * wl[k] for k, s in enumerate(sh))
+    acc = acc_h.astype(jnp.float32) * 256.0 + acc_l.astype(jnp.float32)
     scale = jnp.exp2((qx.exp + qw.exp).astype(jnp.float32))
     return acc * scale, (qx, qw, key)
 
@@ -575,18 +595,32 @@ def _int_dwconv_fwd(x, w, key, cfg: QuantConfig, K: int):
 def _int_dwconv_bwd(cfg: QuantConfig, K: int, res, g):
     qx, qw, key = res
     qg = _quant_grad(g, cfg, key)
-    gm = qg.m.astype(jnp.float32)
-    xm = qx.m.astype(jnp.float32)
-    wm = qw.m.astype(jnp.float32)
+    gm = qg.m.astype(jnp.int32)
     L = gm.shape[1]
+    # dx[l] = sum_k g[l + K-1-k ... ] — correlate; w split as in forward
+    wh, wl = _conv_digits(qw.m)
     gpad = jnp.pad(gm, ((0, 0), (0, K - 1), (0, 0)))
-    # dx[l] = sum_k g[l + K-1-k ... ] — correlate
-    dxm = sum(gpad[:, (K - 1 - k):(K - 1 - k) + L, :] * wm[k] for k in range(K))
+    gs = [gpad[:, (K - 1 - k):(K - 1 - k) + L, :] for k in range(K)]
+    dx_h = sum(s * wh[k] for k, s in enumerate(gs))
+    dx_l = sum(s * wl[k] for k, s in enumerate(gs))
+    dxm = dx_h.astype(jnp.float32) * 256.0 + dx_l.astype(jnp.float32)
     dx = dxm * jnp.exp2((qg.exp + qw.exp).astype(jnp.float32))
-    xpad = jnp.pad(xm, ((0, 0), (K - 1, 0), (0, 0)))
-    dwm = jnp.stack([
-        jnp.sum(xpad[:, k:k + L, :] * gm, axis=(0, 1)) for k in range(K)
-    ])
+    # dw reduces mantissa products over B·L — both operands digit-split so
+    # each int32 partial is bounded by 2^14 · B·L (exact to B·L = 2^17),
+    # where the old f32 sum rounded past 2^24 at b_act + b_grad + log2(B·L)
+    # > 25 (the lint's QL006 site for the 8/16-bit presets).
+    xh, xl = _conv_digits(qx.m)
+    xh = jnp.pad(xh, ((0, 0), (K - 1, 0), (0, 0)))
+    xl = jnp.pad(xl, ((0, 0), (K - 1, 0), (0, 0)))
+    gh, gl = _conv_digits(gm)
+
+    def _plane(a, b):
+        return jnp.stack([jnp.sum(a[:, k:k + L, :] * b, axis=(0, 1))
+                          for k in range(K)]).astype(jnp.float32)
+
+    dwm = (_plane(xh, gh) * 65536.0
+           + (_plane(xh, gl) + _plane(xl, gh)) * 256.0
+           + _plane(xl, gl))
     dw = dwm * jnp.exp2((qx.exp + qg.exp).astype(jnp.float32))
     return dx, dw, _float0(key) if key is not None else None
 

@@ -40,26 +40,17 @@ def checkpoint(f):
 
 def count_eqns(jaxpr, name: str, *, recurse_pallas: bool = True) -> int:
     """Count ``name`` eqns in a (closed) jaxpr, recursing into sub-jaxprs
-    (pjit bodies, custom_vjp calls, ...).
+    (pjit bodies, custom_vjp calls, dict-valued params like cond branches).
+
+    Thin wrapper over ``repro.analysis.walker.count_eqns`` (which also
+    offers scan-effective counting); kept here for backward compatibility.
 
     ``recurse_pallas=False`` skips ``pallas_call`` bodies — used to assert
     that an op (e.g. the norm layers' rsqrt) happens only *inside* fused
     kernels, never as an XLA recompute.
     """
-    if hasattr(jaxpr, "jaxpr"):
-        jaxpr = jaxpr.jaxpr
-    n = 0
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == name:
-            n += 1
-        if eqn.primitive.name == "pallas_call" and not recurse_pallas:
-            continue
-        for val in eqn.params.values():
-            for v in (val if isinstance(val, (list, tuple)) else [val]):
-                sub = getattr(v, "jaxpr", v)
-                if hasattr(sub, "eqns"):
-                    n += count_eqns(sub, name, recurse_pallas=recurse_pallas)
-    return n
+    from repro.analysis import walker
+    return walker.count_eqns(jaxpr, name, recurse_pallas=recurse_pallas)
 
 
 def count_pallas_calls(jaxpr) -> int:
@@ -67,9 +58,11 @@ def count_pallas_calls(jaxpr) -> int:
 
     Used by the MoE and norm dispatch-count acceptance tests and by
     ``benchmarks/backend_compare.py`` to measure the batched expert-axis
-    kernels against the per-expert unrolled loop they replaced.
+    kernels against the per-expert unrolled loop they replaced.  Thin
+    wrapper over ``repro.analysis.walker.count_pallas_calls``.
     """
-    return count_eqns(jaxpr, "pallas_call")
+    from repro.analysis import walker
+    return walker.count_pallas_calls(jaxpr)
 
 
 class analysis_unroll:

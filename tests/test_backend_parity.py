@@ -15,7 +15,7 @@ import pytest
 
 from repro.core import dfx, int_ops
 from repro.core.qconfig import PRESETS, QuantConfig
-from repro.utils import count_pallas_calls
+from repro.analysis import count_pallas_calls
 
 KEY = jax.random.PRNGKey(0)
 

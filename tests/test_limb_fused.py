@@ -21,10 +21,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis import count_eqns, count_pallas_calls, rules
 from repro.core import dfx, int_ops
 from repro.core.qconfig import PRESETS, QuantConfig
 from repro.kernels import ops, ref
-from repro.utils import count_eqns, count_pallas_calls
 
 KEY = jax.random.PRNGKey(0)
 
@@ -113,6 +113,9 @@ def test_layer_dispatch_counts_and_no_split_chain():
     for j in (jf, jb):
         assert count_eqns(j, "rem", recurse_pallas=False) == 0
         assert count_eqns(j, "div", recurse_pallas=False) == 0
+        # the analyzer's integer-closure rule subsumes the rem/div counts:
+        # no limb-split chains, no XLA mantissa dots, no rsqrt leaks
+        assert not rules.check_integer_closure(j)
 
 
 # -------------------------------------------------------------------------

@@ -19,7 +19,7 @@ from repro.core.qconfig import QuantConfig, StabilityWarning
 from repro.core.qpolicy import (QuantPolicy, Scope, ScopeRule, as_policy,
                                 ensure_scope, layer_groups, rule)
 from repro.models import paper_models as pm
-from repro.utils import count_pallas_calls
+from repro.analysis import rules
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -228,19 +228,20 @@ def test_uniform_policy_traces_identical_jaxpr(backend):
 def test_mixed_policy_no_extra_dispatches():
     """int8 body + 16-bit embeddings/head traces EXACTLY the uniform int8
     pallas_call count on a full train step (the embed/head scopes are not
-    scan-stacked, so nothing splits)."""
+    scan-stacked, so nothing splits) — both the traced count and the
+    analyzer's scan-effective per-step launch count."""
     cfg, params, toks = _bert()
     base = dataclasses.replace(_q8(), backend="pallas")
     batch = {"tokens": toks, "labels": jnp.zeros((2,), jnp.int32)}
 
-    def count(policy):
+    def counts(policy):
         def loss(p):
             return pm.bert_cls_loss(p, batch, cfg, policy, None)[0]
-        return count_pallas_calls(jax.make_jaxpr(jax.grad(loss))(params))
+        return rules.dispatch_counts(jax.make_jaxpr(jax.grad(loss))(params))
 
-    uniform = count(QuantPolicy(base=base))
-    mixed = count(QuantPolicy(base=base,
-                              rules=qpolicy.preset_rules("int8_embed16")))
+    uniform = counts(QuantPolicy(base=base))
+    mixed = counts(QuantPolicy(base=base,
+                               rules=qpolicy.preset_rules("int8_embed16")))
     assert mixed == uniform
 
 
