@@ -26,7 +26,12 @@ and reports
 * a policy section (``policy``): per-scope resolved bit-widths of the
   ``int8_embed16`` mixed-precision QuantPolicy plus per-step traced
   dispatch counts and wall-clock for uniform-int8 vs mixed on the proxy
-  fine-tune step — the mixed policy's dispatch delta is pinned at 0.
+  fine-tune step — the mixed policy's dispatch delta is pinned at 0,
+* an attention section (``attention``): the fused integer flash-attention
+  op per preset — sim-vs-pallas fwd/bwd divergence (bit-exact by
+  construction: both backends quantize P and dS at identical points),
+  traced dispatch counts (4 fwd / 7 fwd+bwd / 4 decode) and per-backend
+  wall-clock on a training shape and a decode shape.
 
 Emits a single JSON document (stdout, or ``--out FILE``):
 
@@ -314,6 +319,71 @@ def policy_report(preset: str = "int8_embed16", repeats: int = 3) -> dict:
                 - rows["uniform_int8"]["pallas_calls_per_step"]}
 
 
+def attention_report(repeats: int = 3) -> dict:
+    """Fused integer flash attention: sim-vs-pallas divergence, traced
+    dispatch counts and timings per preset.
+
+    Both backends share every quantization point (q/k/v in, P at the static
+    ``-(p_bits-1)`` exponent against the running max, dS at the norm-derived
+    exponent), so fwd AND bwd divergence is exactly 0 — pinned here, and in
+    tests/test_int_attention.py per preset.  Dispatch counts pin the fused
+    property: 4 launches fwd (3 quantizes + kernel), 7 fwd+bwd (+ grad
+    quantize, dq kernel, dkv kernel), 4 decode — independent of sequence
+    length and never a per-chunk loop.
+    """
+    key = jax.random.PRNGKey(0)
+    B, Sq, KV, G, hd = 2, 64, 2, 2, 32
+    q = jax.random.normal(key, (B, Sq, KV, G, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, Sq, KV, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, Sq, KV, hd))
+    q1 = jax.random.normal(jax.random.fold_in(key, 3), (B, 1, KV, G, hd))
+
+    rows = {}
+    for preset in PRESETS:
+        sim = dataclasses.replace(QuantConfig.preset(preset),
+                                  stochastic_grad=False, backend="sim")
+        if not sim.enabled:
+            continue
+        pal = dataclasses.replace(sim, backend="pallas")
+
+        def att(q, k, v, cfg):
+            return int_ops.int_attention(q, k, v, jnp.asarray(0), None,
+                                         cfg, cfg, True, None)
+
+        def att_l(q, k, v, cfg):
+            return jnp.sum(att(q, k, v, cfg) ** 2)
+
+        fwd = {c.backend: jax.jit(lambda q, k, v, c=c: att(q, k, v, c))
+               for c in (sim, pal)}
+        bwd = {c.backend: jax.jit(jax.grad(
+            lambda q, k, v, c=c: att_l(q, k, v, c), argnums=(0, 1, 2)))
+            for c in (sim, pal)}
+        dec = jax.jit(lambda q, k, v, c=pal: int_ops.int_attention(
+            q, k, v, jnp.asarray(Sq - 1), None, c, c, True, None))
+
+        ys, yp = fwd["sim"](q, k, v), fwd["pallas"](q, k, v)
+        gs, gp = bwd["sim"](q, k, v), bwd["pallas"](q, k, v)
+        rows[preset] = {
+            "fwd_max_abs_diff": float(jnp.abs(ys - yp).max()),
+            "bwd_max_abs_diff": max(float(jnp.abs(a - b).max())
+                                    for a, b in zip(gs, gp)),
+            "fwd_pallas_calls": count_pallas_calls(jax.make_jaxpr(
+                lambda q, k, v: att(q, k, v, pal))(q, k, v)),
+            "fwd_bwd_pallas_calls": count_pallas_calls(jax.make_jaxpr(
+                jax.grad(lambda q, k, v: att_l(q, k, v, pal),
+                         argnums=(0, 1, 2)))(q, k, v)),
+            "decode_pallas_calls": count_pallas_calls(jax.make_jaxpr(
+                lambda q, k, v: dec(q, k, v))(q1, k, v)),
+            "sim_fwd_us": _time_us(lambda: fwd["sim"](q, k, v), repeats),
+            "pallas_fwd_us": _time_us(lambda: fwd["pallas"](q, k, v), repeats),
+            "sim_bwd_us": _time_us(lambda: bwd["sim"](q, k, v), repeats),
+            "pallas_bwd_us": _time_us(lambda: bwd["pallas"](q, k, v), repeats),
+            "pallas_decode_us": _time_us(lambda: dec(q1, k, v), repeats),
+        }
+    return {"shape": {"B": B, "Sq": Sq, "KV": KV, "G": G, "hd": hd},
+            "presets": rows}
+
+
 def run(repeats: int = 3) -> dict:
     return {
         "task": "backend_compare",
@@ -324,6 +394,7 @@ def run(repeats: int = 3) -> dict:
         "matmul_dispatch": matmul_dispatch_report(repeats=repeats),
         "norm_bwd": norm_bwd_report(repeats=repeats),
         "policy": policy_report(repeats=repeats),
+        "attention": attention_report(repeats=repeats),
     }
 
 

@@ -4,12 +4,13 @@ Counts the ``pallas_call`` equations traced for every integer-layer entry
 point on the pallas backend — the quantity the single-dispatch limb fusion
 minimized (ISSUE 4) — and compares them against the checked-in baseline
 ``benchmarks/dispatch_baseline.json``.  Counting and comparison are the
-analyzer's (``repro.analysis``): the layer sections pin plain traced
-counts, while the model-level ``policy`` section pins BOTH the ``traced``
-count (program-text size) and the scan-``effective`` count (per-step kernel
+analyzer's (``repro.analysis``): the layer sections (linears, norms, fused
+attention fwd/bwd/decode) pin plain traced counts, while the model-level
+``policy`` and ``serve`` sections pin BOTH the ``traced`` count
+(program-text size) and the scan-``effective`` count (per-step kernel
 launches, scan bodies multiplied by their trip count) — so neither a
-reintroduced per-limb dispatch loop nor an accidental layer-stack split can
-land silently.  Any count ABOVE baseline fails the gate; counts below are
+reintroduced per-limb dispatch loop, an accidental layer-stack split, nor
+an O(prompt_len) prompt-admission loop can land silently.  Any count ABOVE baseline fails the gate; counts below are
 reported as improvements (refresh with ``--update`` to lock them in).
 
     PYTHONPATH=src python -m benchmarks.check_dispatch            # gate
@@ -73,6 +74,20 @@ def current_counts() -> dict:
         rn = lambda x: int_ops.int_rmsnorm(x, gm, None, cfg)
         rn_l = lambda x: jnp.sum(rn(x) ** 2)
 
+        # fused integer flash attention: fwd is 3 quantizes + 1 kernel,
+        # fwd+bwd adds the grad quantize and the dq / dkv kernels, decode
+        # (Sq=1 over a cache) must match the fwd count — one fused launch
+        # per direction, never a per-chunk or per-token dispatch loop
+        qa = jax.random.normal(key, (2, 16, 2, 2, 32))
+        ka = jax.random.normal(jax.random.fold_in(key, 3), (2, 16, 2, 32))
+        va = jax.random.normal(jax.random.fold_in(key, 4), (2, 16, 2, 32))
+        q1 = jax.random.normal(jax.random.fold_in(key, 5), (2, 1, 2, 2, 32))
+        att = lambda q, k, v: int_ops.int_attention(
+            q, k, v, jnp.asarray(0), None, cfg, cfg, True, None)
+        att_l = lambda q, k, v: jnp.sum(att(q, k, v) ** 2)
+        dec = lambda q, k, v: int_ops.int_attention(
+            q, k, v, jnp.asarray(7), None, cfg, cfg, True, None)
+
         counts[preset] = {
             "linear_fwd": count(lin, x, w),
             "linear_fwd_bwd": count(jax.grad(lin_l, argnums=(0, 1)), x, w),
@@ -83,8 +98,13 @@ def current_counts() -> dict:
             "layernorm_fwd_bwd": count(jax.grad(ln_l), d),
             "rmsnorm_fwd": count(rn, d),
             "rmsnorm_fwd_bwd": count(jax.grad(rn_l), d),
+            "attention_fwd": count(att, qa, ka, va),
+            "attention_fwd_bwd": count(
+                jax.grad(att_l, argnums=(0, 1, 2)), qa, ka, va),
+            "attention_decode": count(dec, q1, ka, va),
         }
     counts["policy"] = policy_counts()
+    counts["serve"] = serve_counts()
     return counts
 
 
@@ -127,6 +147,32 @@ def policy_counts() -> dict:
         "bert_step_int8_firstlast16": step_counts(
             QuantPolicy(base=base, rules=preset_rules("int8_firstlast16"))),
     }
+
+
+def serve_counts() -> dict:
+    """Per-prompt prefill dispatch on the serve path.
+
+    Pins the chunked-prefill guarantee: admitting a whole prompt is ONE
+    ``lm_prefill_cache`` trace whose kernel-launch counts are independent of
+    the prompt length's token count — a reintroduced per-token admission
+    loop (O(prompt_len) decode dispatches, the pre-ISSUE-7 engine) would
+    multiply the traced count by the prompt length and trip this gate.
+    """
+    from repro.configs import registry
+    from repro.models import lm
+
+    key = jax.random.PRNGKey(0)
+    cfg = registry.get_config("smollm-135m").reduced()
+    params = lm.lm_init(key, cfg)
+    cache = lm.init_cache(cfg, 2, 32, dtype=jnp.float32)
+    tokens = jax.random.randint(key, (2, 8), 0, cfg.vocab)
+    qcfg = _cfg("int8")
+
+    def prefill(p, t, c):
+        return lm.lm_prefill_cache(p, t, c, cfg, qcfg)
+
+    return {"lm_prefill_len8": rules.dispatch_counts(
+        jax.make_jaxpr(prefill)(params, tokens, cache))}
 
 
 def compare(current: dict, baseline: dict) -> tuple[list, list]:

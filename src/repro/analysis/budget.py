@@ -421,6 +421,23 @@ def check_kernel_site(eqn) -> List[OverflowSite]:
         K = int(lhs.shape[-2 + lc])
         add(_MATMUL_DIGIT * _MATMUL_DIGIT * K,
             f"limb-pair int32 accumulator: 64² x K={K}")
+    elif "_int_attn" in name:
+        # fused attention kernels: every in-kernel integer dot (QK^T digit
+        # pairs, P·V planes, dS·K / dS^T·Q / P^T·dO in the backward)
+        # accumulates balanced digit products in int32 over the block's
+        # contraction extent.  The P/dS planes are ≤ 2^7 in magnitude
+        # (single-plane mantissas ≤ 8 bits; multi-limb digits ≤ 64), the
+        # limb side is ≤ 64 — bound each dot by 128·64·K.
+        for site in walker.iter_eqns(eqn.params["jaxpr"]):
+            if site.prim != "dot_general":
+                continue
+            sa = site.eqn.invars[0].aval
+            if _kind(sa.dtype) not in "iu":
+                continue
+            lc = site.eqn.params["dimension_numbers"][0][0][0]
+            K = int(sa.shape[lc])
+            add(_NORM_DIGIT * _MATMUL_DIGIT * K,
+                f"attention digit-pair int32 accumulator: 128·64 x K={K}")
     elif "_ln_fwd_kernel" in name or "_rms" in name or "_ln_bwd_kernel" in name:
         xm = eqn.invars[0].aval
         bits = _storage_bits(xm.dtype)

@@ -6,7 +6,11 @@ QL001    integer-closure     on the pallas backend no mantissa arithmetic
                              leaks into XLA: no ``rsqrt`` outside a kernel, no
                              limb-split ``rem``/``div`` chains on quantized
                              integers, no ``dot_general`` contracting integer
-                             mantissas in XLA (the sim fallback's signature)
+                             mantissas in XLA (the sim fallback's signature),
+                             and no ``exp`` on attention scores such a
+                             dot_general produced (softmax outside the fused
+                             attention kernel; the in-kernel online softmax
+                             is inside ``pallas_call`` and exempt)
 QL002    key-discipline      no two stochastic-rounding draws (``random_bits``)
                              consume the same PRNG key without an intervening
                              ``split``/``fold_in`` — scan trip counts weigh
@@ -88,6 +92,7 @@ def _src(eqn) -> str:
 _IOTA = "iota"        # index arithmetic (iota/literal-derived) — benign
 _QINT = "qint"        # integer mantissa (rounded float / kernel output)
 _QFLOAT = "qfloat"    # float that IS an immediate convert of a mantissa
+_SCORE = "score"      # attention scores an XLA integer dot_general produced
 
 _ELEMENTWISE = frozenset({
     "add", "sub", "mul", "max", "min", "rem", "div", "neg", "abs", "sign",
@@ -119,6 +124,7 @@ class _ClosureSemantics(walker.Semantics):
         prim = eqn.primitive.name
         out_aval = eqn.outvars[0].aval if eqn.outvars else None
         out_int = out_aval is not None and _kind(out_aval) in "iu"
+        score_out = False
 
         if not ctx.inside_pallas:
             if prim == "rsqrt":
@@ -136,8 +142,15 @@ class _ClosureSemantics(walker.Semantics):
                     self._flag(eqn, "XLA dot_general contracts integer "
                                     "mantissas (sim-path fallback on the "
                                     "pallas backend)", ctx)
+                    score_out = True
+            elif prim == "exp" and any(v == _SCORE for v in in_vals):
+                self._flag(eqn, "exp on attention scores an XLA integer "
+                                "dot_general produced (softmax outside the "
+                                "fused attention kernel)", ctx)
 
         # ---- tag transfer ----
+        if prim == "dot_general":
+            return [_SCORE if score_out else None] * len(eqn.outvars)
         if prim == "iota":
             return [_IOTA]
         if prim == "convert_element_type":
@@ -157,6 +170,10 @@ class _ClosureSemantics(walker.Semantics):
             return [None]
         if prim in _ELEMENTWISE or prim in _SHAPE_OPS:
             n_out = len(eqn.outvars)
+            # score taint dominates: masking/scaling/max-subtracting the
+            # scores still leaves "scores" for the exp check above
+            if any(v == _SCORE for v in in_vals):
+                return [_SCORE] * n_out
             if any(v == _QINT for v in in_vals) and out_int:
                 return [_QINT] * n_out
             # unknown dominates: clamp(unknown, lit, lit) is NOT index math

@@ -13,6 +13,14 @@ Residuals saved for the backward pass are the *quantized* mantissas
 (int8/int16), which is a 4x/2x activation-memory saving over FP32 — visible
 in the dry-run memory analysis.
 
+``int_attention`` extends the same contract to the attention block: the two
+quadratic contractions (QKᵀ and PV) and all four backward products run on
+quantized mantissas — fused flash-attention Pallas kernels on the pallas
+backend (kernels/int_attention.py, one forward and two backward
+``pallas_call``s), an online-softmax XLA mirror on sim — while the softmax
+itself (exp, running max, the 1/l normalizer) stays FP32 *inside* the
+fused kernel, exactly like the norm layers' rsqrt (DESIGN.md §6).
+
 Precision-critical ops stay FP32 per the paper: softmax, non-linear
 activations, the rsqrt inside the normalization layers, and the optimizer
 update.  When ``cfg.enabled`` is False every layer degrades to its exact FP32
@@ -512,6 +520,216 @@ def _int_rms_bwd(cfg: QuantConfig, eps, res, g):
 
 
 int_rmsnorm.defvjp(_int_rms_fwd, _int_rms_bwd)
+
+
+# =========================================================================
+# Attention — fused integer flash attention (DESIGN.md §6)
+# =========================================================================
+# Value semantics shared by both backends (and the f64 oracles in
+# kernels/ref.py):
+#
+# * q, k quantize at ``cfg_qk.act_bits``; v (and the P mantissa) at
+#   ``cfg_pv.act_bits`` — two QuantPolicy leaves, resolved per call site
+#   ("blocks.*.attn.qk" / "...attn.pv"), so score and value precision tune
+#   independently.
+# * scores s = sc·(q·kᵀ) from the integer product; softmax in f32 with the
+#   flash running max, masked columns exactly zero.  P quantizes at the
+#   STATIC exponent -(p_bits-1) (p <= 1 by construction — no max pass); the
+#   normalizer l accumulates the unquantized p (a kept op, like rsqrt).
+# * backward (FA2): p rebuilt from the saved per-row lse; delta = rowsum of
+#   the RAW upstream grad times o (an O(N·hd) XLA f32 reduce — kept op);
+#   dS = p·(dp - delta) quantizes at a norm-derived exponent (see
+#   ``_ds_exp`` — O(N·hd) row norms, no max pass over the S×S matrix), and
+#   dq/dk/dv are integer products of the quantized planes.
+#
+# The sim forward mirrors the kernel's 128-wide chunked online softmax so
+# the per-chunk P quantization (against the running, not global, max) agrees
+# between backends; within one 128 block running max == global max and the
+# f64 oracle comparison is tight.
+
+def _attn_off(q_offset, B: int) -> Array:
+    """(B,) int32 query offsets from a scalar or per-row ``q_offset``."""
+    off = jnp.atleast_1d(jnp.asarray(q_offset)).astype(jnp.int32)
+    return jnp.broadcast_to(off, (B,))
+
+
+def _max_row_norm(x: Array) -> Array:
+    """max over rows of ||x_row||_2 along the trailing (head) dim — f32
+    scalar, O(N·hd)."""
+    return jnp.sqrt(jnp.max(jnp.sum(
+        jnp.square(x.astype(jnp.float32)), axis=-1)))
+
+
+def _ds_exp(g_norm: Array, v_norm: Array, ds_bits: int) -> Array:
+    """Norm-derived dS scale exponent (traced int32 scalar).
+
+    dS = p·(dp - delta) with |dp_ij| <= ||dO_i||·||V_j|| (Cauchy–Schwarz),
+    |delta_i| = |dO_i · o_i| <= ||dO_i||·max_j||V_j|| (o is a convex
+    combination of V rows) and p <= 1, so |dS| <= 2·max||dO||·max||V||.
+    Two O(N·hd) row-norm maxes — no pass over the S×S score matrix, and
+    ~4–8 bits tighter than the static mantissa worst case 2^(gb+vb)·hd
+    (which at 8-bit grads rounds every score gradient to zero).
+    """
+    bound = 2.0 * g_norm * v_norm
+    e = jnp.ceil(jnp.log2(jnp.maximum(bound, 1e-30))) - (ds_bits - 1)
+    return e.astype(jnp.int32)
+
+
+def _sim_attention_fwd(qd: Array, kd: Array, vd: Array, off: Array,
+                       p_bits: int, causal: bool, window):
+    """XLA online-softmax forward on dequantized values, 128-wide chunks."""
+    B, Sq, KV, G, hd = qd.shape
+    Sk = kd.shape[1]
+    sc = 1.0 / float(hd) ** 0.5
+    chunk = min(128, Sk)
+    n = -(-Sk // chunk)
+    pad = n * chunk - Sk
+    kp = jnp.pad(kd, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(vd, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = kp.reshape(B, n, chunk, KV, hd).transpose(1, 0, 2, 3, 4)
+    vc = vp.reshape(B, n, chunk, KV, hd).transpose(1, 0, 2, 3, 4)
+    qpos = off[:, None] + jnp.arange(Sq)                      # (B, Sq)
+    lim = float(2 ** (p_bits - 1) - 1)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kb, vb, j = xs
+        kpos = j * chunk + jnp.arange(chunk)
+        ok = jnp.broadcast_to(kpos < Sk, (B, Sq, chunk))
+        if causal:
+            ok = jnp.logical_and(ok, kpos[None, None, :] <= qpos[:, :, None])
+        if window is not None:
+            ok = jnp.logical_and(
+                ok, kpos[None, None, :] > qpos[:, :, None] - window)
+        okb = ok[:, None, None]                               # (B,1,1,Sq,ck)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qd, kb) * sc
+        s = jnp.where(okb, s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.where(okb, jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        pm = jnp.clip(jnp.round(p * 2.0 ** (p_bits - 1)), -lim, lim)
+        acc = acc * alpha + (jnp.einsum("bhgqk,bkhd->bhgqd", pm, vb)
+                             * 2.0 ** -(p_bits - 1))
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, KV, G, Sq, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, Sq, 1), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, Sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (kc, vc, jnp.arange(n)))
+    o = (acc / jnp.maximum(l, 1e-20)).transpose(0, 3, 1, 2, 4)
+    lse = (m + jnp.log(jnp.maximum(l, 1e-37)))[..., 0]        # (B,KV,G,Sq)
+    return o, lse
+
+
+def _sim_attention_bwd(qd: Array, kd: Array, vd: Array, gd: Array,
+                       lse: Array, delta: Array, ds_exp: Array, off: Array,
+                       p_bits: int, ds_bits: int, causal: bool, window):
+    """XLA backward on dequantized values — same quantization points as the
+    kernels (P and dS clipped at their static exponents)."""
+    B, Sq, KV, G, hd = qd.shape
+    Sk = kd.shape[1]
+    sc = 1.0 / float(hd) ** 0.5
+    qpos = off[:, None] + jnp.arange(Sq)
+    kpos = jnp.arange(Sk)
+    ok = jnp.ones((B, Sq, Sk), bool)
+    if causal:
+        ok = jnp.logical_and(ok, kpos[None, None, :] <= qpos[:, :, None])
+    if window is not None:
+        ok = jnp.logical_and(ok, kpos[None, None, :] > qpos[:, :, None] - window)
+    okb = ok[:, None, None]
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qd, kd) * sc
+    s = jnp.where(okb, s, -1e30)
+    p = jnp.where(okb, jnp.exp(s - lse[..., None]), 0.0)
+    plim = float(2 ** (p_bits - 1) - 1)
+    pm = jnp.clip(jnp.round(p * 2.0 ** (p_bits - 1)), -plim, plim)
+    dv = (jnp.einsum("bhgqk,bqhgd->bkhd", pm, gd) * 2.0 ** -(p_bits - 1))
+    dp = jnp.einsum("bqhgd,bkhd->bhgqk", gd, vd)
+    dl = delta.transpose(0, 2, 3, 1)[..., None]
+    ds = p * (dp - dl)
+    dss = jnp.exp2(ds_exp.astype(jnp.float32))
+    dlim = float(2 ** (ds_bits - 1) - 1)
+    dsm = jnp.clip(jnp.round(ds * jnp.exp2(-ds_exp.astype(jnp.float32))),
+                   -dlim, dlim)
+    dq = jnp.einsum("bhgqk,bkhd->bqhgd", dsm, kd) * dss * sc
+    dk = jnp.einsum("bhgqk,bqhgd->bkhd", dsm, qd) * dss * sc
+    return dq, dk, dv
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
+def int_attention(q: Array, k: Array, v: Array, q_offset, key,
+                  cfg_qk: QuantConfig, cfg_pv: QuantConfig,
+                  causal: bool, window) -> Array:
+    """Scaled-dot-product attention with integer fwd and bwd products.
+
+    q: (B, Sq, KV, G, hd); k, v: (B, Sk, KV, hd) — GQA layout (G query
+    heads per kv head).  ``q_offset`` is a scalar or (B,) int array of
+    query positions (cache index at decode / chunked prefill; 0 in
+    training); it is masked via ``kpos <= q_offset + i`` so one entry point
+    serves training (Sq = Sk), decode (Sq = 1) and chunked prefill.
+    Callers gate on ``cfg_qk.enabled`` — the FP32 path stays in
+    models/blocks.py.  Returns (B, Sq, KV, G, hd) f32.
+    """
+    o, _ = _int_attention_fwd(q, k, v, q_offset, key, cfg_qk, cfg_pv,
+                              causal, window)
+    return o
+
+
+def _int_attention_fwd(q, k, v, q_offset, key, cfg_qk: QuantConfig,
+                       cfg_pv: QuantConfig, causal, window):
+    off = _attn_off(q_offset, q.shape[0])
+    kf = None
+    if cfg_qk.stochastic_fwd and key is not None:
+        key, kf = jax.random.split(key)
+    kq = kk = kv = None
+    if kf is not None:
+        kq, kk, kv = jax.random.split(kf, 3)
+    planes = cfg_qk.backend == "pallas"
+    qq = _quantize(q, cfg_qk.act_bits, cfg_qk, stochastic=kf is not None,
+                   key=kq, limb_planes=planes)
+    qk = _quantize(k, cfg_qk.act_bits, cfg_qk, stochastic=kf is not None,
+                   key=kk, limb_planes=planes)
+    qv = _quantize(v, cfg_pv.act_bits, cfg_pv, stochastic=kf is not None,
+                   key=kv, limb_planes=planes)
+    p_bits = cfg_pv.act_bits
+    if planes:
+        o, lse = kops.attention_fwd(qq.m, qq.exp, qk.m, qk.exp, qv.m, qv.exp,
+                                    off, p_bits, causal=causal, window=window)
+    else:
+        o, lse = _sim_attention_fwd(dfx.dequantize(qq), dfx.dequantize(qk),
+                                    dfx.dequantize(qv), off, p_bits,
+                                    causal, window)
+    v_norm = _max_row_norm(v)          # residual for the bwd dS exponent
+    return o, (qq, qk, qv, o, lse, v_norm, q_offset, off, key)
+
+
+def _int_attention_bwd(cfg_qk: QuantConfig, cfg_pv: QuantConfig, causal,
+                       window, res, g):
+    qq, qk, qv, o, lse, v_norm, q_offset, off, key = res
+    planes = cfg_qk.backend == "pallas"
+    qg = _quant_grad(g, cfg_pv, key, limb_planes=planes)
+    # delta = rowsum(dO ∘ O) over the RAW upstream grad — an O(N·hd) f32
+    # reduce, a kept op like the softmax it linearizes
+    delta = jnp.sum(g * o, axis=-1)                           # (B,Sq,KV,G)
+    p_bits = cfg_pv.act_bits
+    ds_bits = cfg_qk.grad_bits
+    ds_exp = _ds_exp(_max_row_norm(g), v_norm, ds_bits)
+    if planes:
+        dq, dk, dv = kops.attention_bwd(
+            qq.m, qq.exp, qk.m, qk.exp, qv.m, qv.exp, qg.m, qg.exp,
+            lse, delta, ds_exp, off, p_bits, ds_bits,
+            causal=causal, window=window)
+    else:
+        dq, dk, dv = _sim_attention_bwd(
+            dfx.dequantize(qq), dfx.dequantize(qk), dfx.dequantize(qv),
+            dfx.dequantize(qg), lse, delta, ds_exp, off,
+            p_bits, ds_bits, causal, window)
+    return (dq, dk, dv, _float0(q_offset),
+            _float0(key) if key is not None else None)
+
+
+int_attention.defvjp(_int_attention_fwd, _int_attention_bwd)
 
 
 # =========================================================================

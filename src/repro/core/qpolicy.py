@@ -9,7 +9,9 @@ precision than the transformer body.  ``QuantPolicy`` makes that expressible
 without touching the kernels:
 
 * every integer call site in the model stack has a hierarchical **path**
-  (``"blocks.3.attn.wq"``, ``"embed"``, ``"final_norm"``),
+  (``"blocks.3.attn.wq"``, ``"embed"``, ``"final_norm"``) — including the
+  fused-attention leaves ``"blocks.3.attn.qk"`` (score-matmul / score-grad
+  bits) and ``"blocks.3.attn.pv"`` (value / P·V / incoming-grad bits),
 * a policy is a frozen, JSON-round-trippable list of ``ScopeRule``s — glob
   patterns over paths mapping to *partial* overrides of the ``QuantConfig``
   knobs (``weight_bits`` / ``act_bits`` / ``grad_bits``, stochastic flags,

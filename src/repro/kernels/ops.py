@@ -49,6 +49,16 @@ cross-block combine is the only XLA epilogue.  All four share the same
 row-padding pattern (zero rows are exact; padded gradient mantissas are
 zero, so padded rows contribute nothing to the parameter-gradient partials).
 They consume *logical* mantissas (int16 at b=16), not limb planes.
+
+Attention gets three fused entry points over ``kernels/int_attention.py`` —
+``attention_fwd`` (o + per-row lse) and ``attention_bwd`` (dq, dk, dv via
+the two FA2-style kernels).  These wrappers own the "rows" layout
+transform: model-layout limb planes (L, B, Sq, KV, G, hd) / (L, B, Sk, KV,
+hd) are transposed + zero-padded + reshaped to the kernels' (L, B·KV,
+G·Sq_p, hd_p) / (L, B·KV, Sk_p, hd_p) form and the outputs trimmed back.
+Zero-padding is exact everywhere except the backward's saved ``lse`` rows,
+which pad with **+1e30** so recomputed ``p = exp(s - lse)`` vanishes on
+padded rows (a zero-padded lse would make it blow up instead).
 """
 from __future__ import annotations
 
@@ -63,6 +73,8 @@ from repro.kernels.bfp_matmul import (bfp_matmul, bfp_matmul_batched,
                                       bfp_matmul_tn)
 from repro.kernels.dfx_quant import (LIMB_BITS as _LIMB_BITS, dfx_quantize,
                                      dfx_quantize_grouped, n_limbs)
+from repro.kernels.int_attention import (int_attn_bwd_dkv, int_attn_bwd_dq,
+                                         int_attn_fwd)
 from repro.kernels.int_norm import (int_layernorm_bwd, int_layernorm_fwd,
                                     int_rmsnorm_bwd, int_rmsnorm_fwd)
 
@@ -473,3 +485,119 @@ def rmsnorm_bwd_pallas(xm: jax.Array, x_exp: jax.Array, gm: jax.Array,
     dx, dgp = int_rmsnorm_bwd(xm, gm, x_exp, g_exp, gamma, rstd, br=br,
                               interpret=interpret)
     return dx[:R], jnp.sum(dgp, axis=0)
+
+
+# =========================================================================
+# Integer flash attention (kernels/int_attention.py)
+# =========================================================================
+
+def _attn_dims(Sq: int, Sk: int, hd: int):
+    """Block / padded sizes of the rows layout.
+
+    ``bq`` shrinks for short query runs (decode: Sq=1 -> bq=8) but always
+    divides ``sq_p``, so a q block never straddles two GQA groups.
+    """
+    bq = min(_LANE, _round_up_multiple(Sq, _SUBLANE))
+    sq_p = _round_up_multiple(Sq, bq)
+    bk = _LANE
+    sk_p = _round_up_multiple(Sk, bk)
+    hd_p = _round_up_multiple(hd, _LANE)
+    return bq, sq_p, bk, sk_p, hd_p
+
+
+def _q_rows(qm: jax.Array, sq_p: int, hd_p: int) -> jax.Array:
+    """(L, B, Sq, KV, G, hd) planes -> rows layout (L, B·KV, G·Sq_p, hd_p)."""
+    L, B, Sq, KV, G, hd = qm.shape
+    qr = _pad_last2(qm.transpose(0, 1, 3, 4, 2, 5), sq_p, hd_p)
+    return qr.reshape(L, B * KV, G * sq_p, hd_p)
+
+
+def _kv_rows(km: jax.Array, sk_p: int, hd_p: int) -> jax.Array:
+    """(L, B, Sk, KV, hd) planes -> rows layout (L, B·KV, Sk_p, hd_p)."""
+    L, B, Sk, KV, hd = km.shape
+    kr = _pad_last2(km.transpose(0, 1, 3, 2, 4), sk_p, hd_p)
+    return kr.reshape(L, B * KV, sk_p, hd_p)
+
+
+def _rows_q_out(o: jax.Array, B: int, KV: int, G: int, sq_p: int,
+                Sq: int, hd: int) -> jax.Array:
+    """Rows-layout (BH, R, hd_p) output -> model layout (B, Sq, KV, G, hd)."""
+    return o.reshape(B, KV, G, sq_p, -1)[:, :, :, :Sq, :hd].transpose(
+        0, 3, 1, 2, 4)
+
+
+def attention_fwd(qm: jax.Array, q_exp: jax.Array,
+                  km: jax.Array, k_exp: jax.Array,
+                  vm: jax.Array, v_exp: jax.Array,
+                  q_off: jax.Array, p_bits: int, *,
+                  causal: bool, window: int | None = None,
+                  interpret: bool | None = None):
+    """Fused integer attention forward — ONE ``pallas_call``.
+
+    qm: (Lq, B, Sq, KV, G, hd) int8 limb planes (the quantize kernel's
+    stacked output reshaped to the model layout); km/vm: (L, B, Sk, KV, hd);
+    ``q_off`` (B,) int32 query offsets (0 for training, the cache index for
+    decode / chunked prefill).  Returns ``(o, lse)``: o (B, Sq, KV, G, hd)
+    f32, lse (B, KV, G, Sq) f32 — the backward residual.
+    """
+    if interpret is None:
+        interpret = not on_tpu()
+    Lq, B, Sq, KV, G, hd = qm.shape
+    Sk = km.shape[2]
+    bq, sq_p, bk, sk_p, hd_p = _attn_dims(Sq, Sk, hd)
+    exps = jnp.stack([jnp.reshape(q_exp, ()), jnp.reshape(k_exp, ()),
+                      jnp.reshape(v_exp, ())]).astype(jnp.int32)
+    o, lse = int_attn_fwd(
+        _q_rows(qm, sq_p, hd_p), _kv_rows(km, sk_p, hd_p),
+        _kv_rows(vm, sk_p, hd_p), q_off, exps,
+        p_bits=p_bits, sq_p=sq_p, kv_heads=KV, kv_len=Sk, causal=causal,
+        window=window, sc=1.0 / float(hd) ** 0.5, bq=bq, bk=bk,
+        interpret=interpret)
+    return (_rows_q_out(o, B, KV, G, sq_p, Sq, hd),
+            lse.reshape(B, KV, G, sq_p)[..., :Sq])
+
+
+def attention_bwd(qm: jax.Array, q_exp: jax.Array,
+                  km: jax.Array, k_exp: jax.Array,
+                  vm: jax.Array, v_exp: jax.Array,
+                  gm: jax.Array, g_exp: jax.Array,
+                  lse: jax.Array, delta: jax.Array, ds_exp: jax.Array,
+                  q_off: jax.Array, p_bits: int, ds_bits: int, *,
+                  causal: bool, window: int | None = None,
+                  interpret: bool | None = None):
+    """Fused integer attention backward — TWO ``pallas_call``s (dq; dk+dv).
+
+    ``gm`` is the quantized upstream-grad limb stack in q layout; ``lse``
+    (B, KV, G, Sq) and ``delta`` (B, Sq, KV, G) the forward-saved rows;
+    ``ds_exp`` the bound-derived dS scale exponent (traced int32).  Returns
+    ``(dq, dk, dv)`` in model layout.  Padded lse rows are filled with
+    +1e30 so the recomputed ``p`` vanishes there exactly.
+    """
+    if interpret is None:
+        interpret = not on_tpu()
+    Lq, B, Sq, KV, G, hd = qm.shape
+    Sk = km.shape[2]
+    bq, sq_p, bk, sk_p, hd_p = _attn_dims(Sq, Sk, hd)
+    qr = _q_rows(qm, sq_p, hd_p)
+    kr = _kv_rows(km, sk_p, hd_p)
+    vr = _kv_rows(vm, sk_p, hd_p)
+    gr = _q_rows(gm, sq_p, hd_p)
+    lse_r = jnp.pad(lse, [(0, 0)] * 3 + [(0, sq_p - Sq)],
+                    constant_values=1e30).reshape(B * KV, G * sq_p, 1)
+    d_r = jnp.pad(delta.transpose(0, 2, 3, 1),
+                  [(0, 0)] * 3 + [(0, sq_p - Sq)]
+                  ).reshape(B * KV, G * sq_p, 1)
+    exps = jnp.stack([jnp.reshape(q_exp, ()), jnp.reshape(k_exp, ()),
+                      jnp.reshape(v_exp, ()), jnp.reshape(g_exp, ()),
+                      jnp.reshape(ds_exp, ())]).astype(jnp.int32)
+    sc = 1.0 / float(hd) ** 0.5
+    common = dict(sq_p=sq_p, kv_heads=KV, kv_len=Sk, causal=causal,
+                  window=window, sc=sc, bq=bq, bk=bk, interpret=interpret)
+    dq = int_attn_bwd_dq(qr, kr, vr, gr, lse_r, d_r, q_off, exps,
+                         ds_bits=ds_bits, **common)
+    dk, dv = int_attn_bwd_dkv(qr, kr, vr, gr, lse_r, d_r, q_off, exps,
+                              p_bits=p_bits, ds_bits=ds_bits, **common)
+    dq = _rows_q_out(dq, B, KV, G, sq_p, Sq, hd)
+    dk = dk.reshape(B, KV, sk_p, hd_p)[:, :, :Sk, :hd].transpose(0, 2, 1, 3)
+    dv = dv.reshape(B, KV, sk_p, hd_p)[:, :, :Sk, :hd].transpose(0, 2, 1, 3)
+    return dq, dk, dv

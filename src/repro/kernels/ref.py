@@ -237,3 +237,96 @@ def int_rmsnorm_bwd_ref(xm: jax.Array, x_exp: jax.Array, gm: jax.Array,
     dx = _f64(rstd) * (gg - xn * mean_ggxn)
     return (jnp.asarray(dx, jnp.float32),
             jnp.asarray((gq * xn).sum(0), jnp.float32))
+
+
+# =========================================================================
+# Integer flash-attention oracles (DESIGN.md §6)
+# =========================================================================
+
+def _attn_mask_ref(B: int, Sq: int, Sk: int, q_offset, causal: bool,
+                   window) -> np.ndarray:
+    """(B, Sq, Sk) bool validity — the kernel's mask semantics exactly."""
+    off = np.broadcast_to(
+        np.atleast_1d(np.asarray(q_offset, np.int64)), (B,))
+    qpos = off[:, None] + np.arange(Sq)                       # (B, Sq)
+    kpos = np.arange(Sk)
+    ok = np.ones((B, Sq, Sk), bool)
+    if causal:
+        ok &= kpos[None, None, :] <= qpos[:, :, None]
+    if window is not None:
+        ok &= kpos[None, None, :] > qpos[:, :, None] - window
+    return ok
+
+
+def int_attention_fwd_ref(qm: jax.Array, q_exp, km: jax.Array, k_exp,
+                          vm: jax.Array, v_exp, p_bits: int, q_offset,
+                          *, causal: bool, window=None):
+    """Integer flash-attention forward oracle in exact f64.
+
+    ``qm`` (B, Sq, KV, G, hd) and ``km``/``vm`` (B, Sk, KV, hd) are integer
+    mantissas (logical, not limb planes); the softmax uses the **global**
+    row max, which the kernel's running max reaches exactly for Sk within
+    one 128 block — multi-block sweeps compare with a looser tolerance
+    because the kernel quantizes P against the running (not final) max.
+    Returns ``(o, lse)``: o (B, Sq, KV, G, hd) f32, lse (B, KV, G, Sq).
+    """
+    q, k, v = _f64(qm), _f64(km), _f64(vm)
+    B, Sq, KV, G, hd = q.shape
+    Sk = k.shape[1]
+    sc = 1.0 / np.sqrt(hd)
+    qs = 2.0 ** float(np.asarray(q_exp))
+    ks = 2.0 ** float(np.asarray(k_exp))
+    vs = 2.0 ** float(np.asarray(v_exp))
+    s = np.einsum("bqhgd,bkhd->bhgqk", q, k) * (qs * ks * sc)
+    okb = _attn_mask_ref(B, Sq, Sk, q_offset, causal, window)[:, None, None]
+    s = np.where(okb, s, -1e30)
+    m = s.max(-1, keepdims=True)
+    p = np.where(okb, np.exp(s - m), 0.0)
+    l = p.sum(-1, keepdims=True)
+    lim = float(2 ** (p_bits - 1) - 1)
+    pm = np.clip(np.round(p * 2.0 ** (p_bits - 1)), -lim, lim)
+    o = np.einsum("bhgqk,bkhd->bhgqd", pm, v) * (vs * 2.0 ** -(p_bits - 1))
+    o = o / np.maximum(l, 1e-20)
+    lse = m[..., 0] + np.log(np.maximum(l[..., 0], 1e-37))
+    return (jnp.asarray(o.transpose(0, 3, 1, 2, 4), jnp.float32),
+            jnp.asarray(lse, jnp.float32))
+
+
+def int_attention_bwd_ref(qm: jax.Array, q_exp, km: jax.Array, k_exp,
+                          vm: jax.Array, v_exp, gm: jax.Array, g_exp,
+                          lse: jax.Array, delta: jax.Array, ds_exp,
+                          p_bits: int, ds_bits: int, q_offset,
+                          *, causal: bool, window=None):
+    """Integer flash-attention backward oracle: ``(dq, dk, dv)`` in f64.
+
+    ``gm`` is the quantized dO mantissa (B, Sq, KV, G, hd); ``lse``
+    (B, KV, G, Sq) and ``delta`` (B, Sq, KV, G) are the forward-saved rows
+    (delta = rowsum of the RAW upstream grad times O); ``ds_exp`` is the
+    bound-derived static dS scale exponent.  P and dS quantize exactly as
+    the kernels do — same clips, same static exponents.
+    """
+    q, k, v, g = _f64(qm), _f64(km), _f64(vm), _f64(gm)
+    B, Sq, KV, G, hd = q.shape
+    Sk = k.shape[1]
+    sc = 1.0 / np.sqrt(hd)
+    qs = 2.0 ** float(np.asarray(q_exp))
+    ks = 2.0 ** float(np.asarray(k_exp))
+    vs = 2.0 ** float(np.asarray(v_exp))
+    gs = 2.0 ** float(np.asarray(g_exp))
+    dss = 2.0 ** float(np.asarray(ds_exp))
+    s = np.einsum("bqhgd,bkhd->bhgqk", q, k) * (qs * ks * sc)
+    okb = _attn_mask_ref(B, Sq, Sk, q_offset, causal, window)[:, None, None]
+    s = np.where(okb, s, -1e30)
+    p = np.where(okb, np.exp(s - _f64(lse)[..., None]), 0.0)
+    plim = float(2 ** (p_bits - 1) - 1)
+    pm = np.clip(np.round(p * 2.0 ** (p_bits - 1)), -plim, plim)
+    dv = np.einsum("bhgqk,bqhgd->bkhd", pm, g) * (gs * 2.0 ** -(p_bits - 1))
+    dp = np.einsum("bqhgd,bkhd->bhgqk", g, v) * (gs * vs)
+    dl = _f64(delta).transpose(0, 2, 3, 1)[..., None]
+    ds = p * (dp - dl)
+    dlim = float(2 ** (ds_bits - 1) - 1)
+    dsm = np.clip(np.round(ds / dss), -dlim, dlim)
+    dq = np.einsum("bhgqk,bkhd->bqhgd", dsm, k) * (ks * dss * sc)
+    dk = np.einsum("bhgqk,bqhgd->bkhd", dsm, q) * (qs * dss * sc)
+    return (jnp.asarray(dq, jnp.float32), jnp.asarray(dk, jnp.float32),
+            jnp.asarray(dv, jnp.float32))

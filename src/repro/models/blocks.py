@@ -3,8 +3,13 @@
 Every projection goes through ``int_ops`` (the paper's integer fwd+bwd
 layers); softmax / SiLU / GeLU / RoPE stay FP32 per the paper's recipe.
 
-Attention is flash-style (lax.scan over KV chunks, online softmax) so no
-S×S score tensor is ever materialized — required for the 32k/500k shapes.
+Attention is flash-style (online softmax over KV chunks) so no S×S score
+tensor is ever materialized — required for the 32k/500k shapes.  When the
+policy enables quantization at the ``attn.qk`` leaf, all shapes (training,
+decode, chunked prefill) dispatch to the single ``int_ops.int_attention``
+op — integer QK^T and PV with in-kernel FP32 online softmax; the XLA
+``flash_attention`` / ``_decode_attention`` paths below serve only the
+disabled/fp32 reference.
 
 Quantization argument: every ``apply`` function takes ``qcfg`` as a bare
 ``QuantConfig`` (uniform, the paper's setting), a ``QuantPolicy`` (path-
@@ -115,8 +120,13 @@ def flash_attention(
     B, Sq, Hkv, G, hd = q.shape
     Sk = k.shape[1]
     chunk = min(chunk, Sk)
-    assert Sk % chunk == 0, (Sk, chunk)
-    n_chunks = Sk // chunk
+    n_chunks = -(-Sk // chunk)
+    pad = n_chunks * chunk - Sk
+    if pad:
+        # ragged final KV chunk: zero-pad and mask kpos >= Sk below — the
+        # padded columns never enter the softmax
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
     scale = 1.0 / jnp.sqrt(jnp.float32(hd))
     q = q.astype(jnp.float32) * scale
     # q_offset may be a scalar (shared decode index) or a (B,)-vector of
@@ -129,7 +139,7 @@ def flash_attention(
         vc = jax.lax.dynamic_slice_in_dim(v, c * chunk, chunk, axis=1)
         s = jnp.einsum("bqhgd,bkhd->bhgqk", q, kc.astype(jnp.float32))
         kpos = c * chunk + jnp.arange(chunk)
-        ok = jnp.ones(qpos.shape + (chunk,), bool)       # (1|B, Sq, chunk)
+        ok = jnp.broadcast_to(kpos < Sk, qpos.shape + (chunk,))
         if causal:
             ok &= kpos[None, None, :] <= qpos[..., None]
         if window is not None:
@@ -257,14 +267,27 @@ def attention_apply(
     else:
         q_offset = 0
 
-    if S == 1 and kv_cache is not None:
+    # Unified integer attention: when the policy enables quantization at
+    # this site, every shape — training (Sq == Sk), decode (Sq == 1) and
+    # chunked prefill — goes through the single ``int_ops.int_attention``
+    # entry point (sim or fused Pallas flash kernels per backend).  The two
+    # leaves are ``attn.qk`` (q/k bits + score-grad bits) and ``attn.pv``
+    # (v/P bits + incoming-grad bits).  The FP32 XLA paths below remain
+    # only as the disabled/fp32 reference.
+    leaf_qk = sc.leaf("qk")
+    leaf_pv = sc.leaf("pv")
+    win = cfg.sliding_window if causal else None
+    if leaf_qk.enabled:
+        o = int_ops.int_attention(q, k, v, jnp.asarray(q_offset),
+                                  subkey(key, 4), leaf_qk, leaf_pv,
+                                  causal, win)
+    elif S == 1 and kv_cache is not None:
         # decode: single-pass attention over the cache (memory-bound optimal;
         # no online-softmax scan needed for one query token)
-        o = _decode_attention(q, k, v, cache_index,
-                              cfg.sliding_window if causal else None)
+        o = _decode_attention(q, k, v, cache_index, win)
     else:
         o = flash_attention(q, k, v, causal=causal, q_offset=q_offset,
-                            window=cfg.sliding_window if causal else None)
+                            window=win)
     o = o.reshape(B, S, H * hd)
     out = int_ops.int_linear(o, p["wo"], None, subkey(key, 3), sc.leaf("wo"))
     return out, new_cache

@@ -28,9 +28,11 @@ Params = Dict[str, Any]
 # lm_head — block indices carry the negative-index alias (enc.-1 = last
 # encoder layer) and non-uniform per-index policies split the layer scans
 # into runs of identically-resolved layers, exactly as in models/lm.py.
+# Attention modules expose the fused integer-attention leaves attn.{qk,pv}
+# (and xattn.{qk,pv} for cross-attention) next to the projection weights.
 
-_ATTN = ["attn." + n for n in ("wq", "wk", "wv", "wo")]
-_XATTN = ["xattn." + n for n in ("wq", "wk", "wv", "wo")]
+_ATTN = ["attn." + n for n in ("wq", "wk", "wv", "wo", "qk", "pv")]
+_XATTN = ["xattn." + n for n in ("wq", "wk", "wv", "wo", "qk", "pv")]
 
 
 def _enc_leaves(cfg: ArchConfig) -> list:

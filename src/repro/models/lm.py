@@ -37,7 +37,9 @@ Params = Dict[str, Any]
 # =========================================================================
 # Module paths (resolved against a QuantPolicy at trace time):
 #   embed, mm_proj, final_norm, lm_head
-#   blocks.{i}.{ln1, attn.{wq,wk,wv,wo}, ln2, mlp.{...}, moe.{...}}
+#   blocks.{i}.{ln1, attn.{wq,wk,wv,wo,qk,pv}, ln2, mlp.{...}, moe.{...}}
+#     (attn.qk / attn.pv are the fused integer-attention leaves: score
+#     matmul bits and P·V / value bits respectively)
 #   blocks.{i}.mamba.{wz,wx,wBC,wdt,conv_x,conv_BC,norm_g,out_proj}
 #   shared_attn.{ln1, attn.*, ln2, mlp.*}          (hybrid family)
 # Block indices also resolve under their negative alias (blocks.-1 = last
@@ -50,7 +52,8 @@ Params = Dict[str, Any]
 def _block_leaves(cfg: ArchConfig) -> list:
     """Every integer-layer leaf path inside one dense transformer block —
     the probe set layer_groups uses to prove two layers resolve equal."""
-    leaves = ["ln1", "ln2"] + [f"attn.{n}" for n in ("wq", "wk", "wv", "wo")]
+    leaves = ["ln1", "ln2"] + [
+        f"attn.{n}" for n in ("wq", "wk", "wv", "wo", "qk", "pv")]
     if cfg.moe_experts:
         leaves += ["moe.router", "moe.wg_e", "moe.wu_e", "moe.wd_e"]
         if cfg.moe_shared_dff:
@@ -385,6 +388,31 @@ def lm_decode_step(params: Params, token: Array, cache: Params,
         logits = _logits(params, x, cfg, sc, key)
         return logits, _constrain_cache(new_cache)
 
+    return lm_prefill_cache(params, token, cache, cfg, sc)
+
+
+def lm_prefill_cache(params: Params, tokens: Array, cache: Params,
+                     cfg: ArchConfig, qcfg: QuantLike) -> Tuple[Array, Params]:
+    """Chunked prefill through the decode cache in ONE dispatch.
+
+    tokens: (B, S) int32 — a prompt chunk (S == 1 is plain decode; this is
+    the decode step's dense tail, generalized).  All S tokens are written
+    into the KV cache at positions ``cache['index'] .. index+S`` and attend
+    causally with per-row ``q_offset = index``, so the serve engine admits a
+    whole prompt without issuing O(prompt_len) single-token dispatches.
+    Returns (last-position logits (B, 1, V), new cache).  Attention-cache
+    families only — SSM/hybrid state recurrence still steps token by token.
+    """
+    if cfg.family in ("ssm", "hybrid"):
+        raise ValueError(
+            "lm_prefill_cache supports attention-cache families only; "
+            f"got family={cfg.family!r} (use lm_decode_step per token)")
+    key = None                                   # no stochastic rounding at serve
+    index = cache["index"]
+    sc = ensure_scope(qcfg)
+    x = _embed(params, tokens, cfg, sc, key)
+    L = cfg.n_layers
+
     def make_body(bsc):
         def body(carry, inp):
             x, aux = carry
@@ -398,8 +426,9 @@ def lm_decode_step(params: Params, token: Array, cache: Params,
     (x, _), (nk, nv) = blocks.scan_stack(
         make_body, (x, jnp.float32(0)), groups,
         (params["blocks"], cache["k"], cache["v"], jnp.arange(L)))
-    logits = _logits(params, x, cfg, sc, key)
-    return logits, _constrain_cache({"k": nk, "v": nv, "index": index + 1})
+    logits = _logits(params, x[:, -1:], cfg, sc, key)
+    new_index = index + tokens.shape[1]
+    return logits, _constrain_cache({"k": nk, "v": nv, "index": new_index})
 
 
 def lm_prefill(params: Params, tokens: Array, cfg: ArchConfig,

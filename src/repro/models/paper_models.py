@@ -30,7 +30,8 @@ Params = Dict[str, Any]
 # into runs of identically-resolved layers (see models/lm.py).
 
 _ENC_BLOCK_LEAVES = (["ln1", "ln2"]
-                     + ["attn." + n for n in ("wq", "wk", "wv", "wo")]
+                     + ["attn." + n
+                        for n in ("wq", "wk", "wv", "wo", "qk", "pv")]
                      + ["mlp.w1", "mlp.w2"])
 
 

@@ -26,7 +26,13 @@ class ServeConfig:
     batch_slots: int = 8
     temperature: float = 0.0          # 0 => greedy
     eos_id: int = -1                  # -1 => never stop early
-    cache_dtype: Any = jnp.float32
+    cache_dtype: Any = jnp.float32    # dtype or string ("bfloat16", ...)
+
+    def __post_init__(self):
+        if isinstance(self.cache_dtype, str):
+            # config files pass dtypes as strings; normalize once here so
+            # init_cache and every jit signature see a real dtype object
+            self.cache_dtype = jnp.dtype(self.cache_dtype)
 
 
 class Engine:
@@ -43,6 +49,14 @@ class Engine:
         self.scfg = scfg
         self._decode = jax.jit(
             lambda p, t, c: lm.lm_decode_step(p, t, c, cfg, qcfg))
+        # chunked prefill: one dispatch per prompt instead of one per token.
+        # SSM/hybrid state recurrence has no cache-prefill form — those
+        # families keep the universal token-step path.
+        if cfg.family in ("ssm", "hybrid"):
+            self._prefill = None
+        else:
+            self._prefill = jax.jit(
+                lambda p, t, c: lm.lm_prefill_cache(p, t, c, cfg, qcfg))
 
     # -- single-shot batched generation ------------------------------------
     def generate(self, prompts: np.ndarray, max_new_tokens: int,
@@ -52,14 +66,19 @@ class Engine:
         B, S = prompts.shape
         cache = lm.init_cache(self.cfg, B, self.scfg.max_seq,
                               dtype=self.scfg.cache_dtype)
-        # prefill by teacher-forcing the prompt through decode steps for
-        # state-carrying archs; attention archs could batch-prefill, but the
-        # step path is universal and what the dry-run decode cells compile.
-        tok = None
-        logits = None
-        for t in range(S):
-            tok = prompts[:, t:t + 1]
-            logits, cache = self._decode(self.params, jnp.asarray(tok), cache)
+        # attention archs prefill the whole prompt in ONE dispatch through
+        # the decode cache; state-carrying archs (SSM/hybrid) teacher-force
+        # the prompt through decode steps (the recurrence has no cache-
+        # prefill form).
+        if self._prefill is not None:
+            logits, cache = self._prefill(self.params, jnp.asarray(prompts),
+                                          cache)
+        else:
+            logits = None
+            for t in range(S):
+                tok = prompts[:, t:t + 1]
+                logits, cache = self._decode(self.params, jnp.asarray(tok),
+                                             cache)
         out = []
         for i in range(max_new_tokens):
             nxt = self._sample(logits, None if key is None
@@ -109,9 +128,10 @@ class ContinuousBatcher:
     """Fixed-slot continuous batching: finished sequences free their slot,
     queued requests join mid-flight.
 
-    Admission protocol: prefilling a new slot steps the *shared* decode
-    function, which advances and rewrites every slot's cache row and index —
-    so the admitting loop snapshots the cache/logits first, resets only the
+    Admission protocol: prefilling a new slot runs the *shared* batched
+    prefill (one dispatch for the whole prompt; the per-token decode loop
+    for SSM/hybrid), which advances and rewrites every slot's cache row and
+    index — so admission snapshots the cache/logits first, resets only the
     admitted slot to fresh-cache state (per-slot ``index`` = 0, so the new
     request's tokens land at positions 0..P-1 exactly as in a solo run), and
     after prefill restores every *other* slot's row and index bit-exactly
@@ -159,13 +179,22 @@ class ContinuousBatcher:
             snap_cache, snap_logits = self.cache, self._logits
             # reset the admitted slot to fresh-cache state.
             self.cache = _merge_slot(self.cache, self._fresh_cache, slot_id)
-            logits = None
-            for t in range(len(prompt)):
-                tok = np.array(self.last_tok)     # writable copy
-                tok[slot_id, 0] = prompt[t]
-                self.last_tok = jnp.asarray(tok)
-                logits, self.cache = self.engine._decode(
-                    self.engine.params, self.last_tok, self.cache)
+            if self.engine._prefill is not None:
+                # one chunked-prefill dispatch: the admitted slot's prompt in
+                # its row, zeros elsewhere — the other rows advance through
+                # garbage and are restored bit-exactly from the snapshot.
+                toks = np.zeros((len(self.slots), len(prompt)), np.int32)
+                toks[slot_id] = prompt
+                logits, self.cache = self.engine._prefill(
+                    self.engine.params, jnp.asarray(toks), self.cache)
+            else:
+                logits = None
+                for t in range(len(prompt)):
+                    tok = np.array(self.last_tok)     # writable copy
+                    tok[slot_id, 0] = prompt[t]
+                    self.last_tok = jnp.asarray(tok)
+                    logits, self.cache = self.engine._decode(
+                        self.engine.params, self.last_tok, self.cache)
             # restore every other slot bit-exactly from the snapshot.
             self.cache = _merge_slot(snap_cache, self.cache, slot_id)
             if snap_logits is not None:

@@ -4,8 +4,10 @@ The checked-in ``benchmarks/dispatch_baseline.json`` pins the statically
 derived ``pallas_call`` counts of every integer-layer entry point on the
 pallas backend: 3 dispatches forward / 6 forward+backward for the linear
 layers at EVERY bit-width since the single-dispatch limb fusion, 3/5 for
-the fused norms, and — model-level — BOTH the traced and the
-scan-effective per-step counts of a bert train step under each policy.
+the fused norms, 4/7 for the fused integer flash attention (decode == fwd),
+and — model-level — BOTH the traced and the scan-effective per-step counts
+of a bert train step under each policy plus the serve engine's
+single-dispatch prompt admission.
 Counting and comparison delegate to the analyzer
 (``repro.analysis.rules.check_dispatch_budget``), the same code path as
 ``python -m benchmarks.check_dispatch``.
@@ -35,14 +37,19 @@ def test_baseline_pins_single_dispatch_property():
     layers' dispatch counts are bit-width-independent (one matmul launch per
     direction), so every preset pins the same numbers."""
     baseline = _baseline()
-    assert set(baseline) == {"int8", "int12", "int16", "policy"}
+    assert set(baseline) == {"int8", "int12", "int16", "policy", "serve"}
     for preset, entries in baseline.items():
-        if preset == "policy":
+        if preset in ("policy", "serve"):
             continue
         assert entries["linear_fwd"] == 3, preset
         assert entries["linear_fwd_bwd"] == 6, preset
         assert entries["batched_linear_fwd"] == 3, preset
         assert entries["batched_linear_fwd_bwd"] == 6, preset
+        # fused attention: 3 quantizes + 1 kernel fwd, +3 bwd, and decode
+        # (Sq=1) is the SAME program — never a per-chunk/per-token loop
+        assert entries["attention_fwd"] == 4, preset
+        assert entries["attention_fwd_bwd"] == 7, preset
+        assert entries["attention_decode"] == entries["attention_fwd"], preset
 
 
 def test_baseline_pins_mixed_policy_dispatch_parity():

@@ -128,6 +128,48 @@ def test_slot_reuse_resets_cache():
     assert len(res[rid_a]) == 3
 
 
+def test_cache_dtype_accepts_string_bf16():
+    """ServeConfig.cache_dtype takes a plain string ("bfloat16") and the
+    bf16 KV cache decodes the same greedy tokens as the float32 cache."""
+    cfg = registry.get_config("smollm-135m").reduced()
+    params = lm.lm_init(KEY, cfg)
+    scfg = ServeConfig(max_seq=64, batch_slots=2, cache_dtype="bfloat16")
+    assert scfg.cache_dtype == jnp.bfloat16
+    e32 = Engine(params, cfg, QuantConfig.fp32(),
+                 ServeConfig(max_seq=64, batch_slots=2))
+    e16 = Engine(params, cfg, QuantConfig.fp32(), scfg)
+    prompts = np.asarray(jax.random.randint(KEY, (2, 8), 0, cfg.vocab))
+    np.testing.assert_array_equal(e16.generate(prompts, 6),
+                                  e32.generate(prompts, 6))
+
+
+def test_admission_is_single_prefill_dispatch():
+    """Admitting a prompt is ONE chunked-prefill call, not O(prompt_len)
+    decode dispatches (the pre-unification engine looped per token)."""
+    engine, cfg, _ = _engine(slots=2)
+    calls = {"prefill": 0, "decode": 0}
+    real_prefill, real_decode = engine._prefill, engine._decode
+
+    def count_prefill(*a):
+        calls["prefill"] += 1
+        return real_prefill(*a)
+
+    def count_decode(*a):
+        calls["decode"] += 1
+        return real_decode(*a)
+
+    engine._prefill, engine._decode = count_prefill, count_decode
+    try:
+        b = ContinuousBatcher(engine)
+        rng = np.random.default_rng(3)
+        b.submit(rng.integers(0, cfg.vocab, 7), 1)
+        b.step()   # admission + first decode step
+    finally:
+        engine._prefill, engine._decode = real_prefill, real_decode
+    assert calls["prefill"] == 1
+    assert calls["decode"] <= 1   # at most the post-admission decode step
+
+
 def test_continuous_batcher_eos_stops_early():
     engine, cfg, _ = _engine(slots=1)
     # find the greedy first token, then declare it EOS
