@@ -27,6 +27,11 @@ and reports
   ``int8_embed16`` mixed-precision QuantPolicy plus per-step traced
   dispatch counts and wall-clock for uniform-int8 vs mixed on the proxy
   fine-tune step — the mixed policy's dispatch delta is pinned at 0,
+* a state-plane section (``state_plane``): the collective wire-bytes model
+  (f32 vs QTensor int8/int16) for the two param-sized collectives of a real
+  reduced config — FSDP param all-gather and grad psum — plus resident
+  optimizer-moment bytes (f32 Adam m/v vs QTensor moments), all from
+  ``eval_shape`` so no device work is involved,
 * an attention section (``attention``): the fused integer flash-attention
   op per preset — sim-vs-pallas fwd/bwd divergence (bit-exact by
   construction: both backends quantize P and dS at identical points),
@@ -319,6 +324,46 @@ def policy_report(preset: str = "int8_embed16", repeats: int = 3) -> dict:
                 - rows["uniform_int8"]["pallas_calls_per_step"]}
 
 
+def state_plane_report(arch: str = "smollm-135m", n_shards: int = 8) -> dict:
+    """Wire + resident bytes of the quantized state plane, f32 vs QTensor.
+
+    Param counts come from ``eval_shape`` on the reduced config (no arrays
+    are materialised).  The per-collective rows reuse the traffic model in
+    ``benchmarks/roofline.py``; the ``optimizer_moments`` rows count the
+    resident m/v bytes per ``core/qtensor.wire_bytes`` (one int32 exponent
+    per moment tensor — FP32 masters are kept separately and unchanged, so
+    they are excluded from both sides of the comparison).
+    """
+    from benchmarks.roofline import collective_wire_bytes
+    from repro.configs import registry
+    from repro.core import qtensor
+    from repro.models import lm
+
+    cfg = registry.get_config(arch).reduced()
+    shapes = jax.eval_shape(lambda: lm.lm_init(jax.random.PRNGKey(0), cfg))
+    leaves = jax.tree_util.tree_leaves(shapes)
+    n_params = int(sum(np.prod(l.shape) for l in leaves))
+
+    out = {"arch": arch, "reduced": True, "n_params": n_params,
+           "n_tensors": len(leaves), "n_shards": n_shards, "bitwidths": {}}
+    for bits in (8, 16):
+        wire = collective_wire_bytes(n_params, bits, n_shards=n_shards)
+        f32_moments = 2 * 4 * n_params                     # Adam m + v
+        q_moments = 2 * sum(qtensor.wire_bytes(int(np.prod(l.shape)), bits)
+                            for l in leaves)
+        out["bitwidths"][f"b{bits}"] = {
+            "param_all_gather": wire["param_all_gather"],
+            "grad_psum": wire["grad_psum"],
+            "combined_wire_reduction": wire["combined_reduction"],
+            "optimizer_moments": {
+                "f32_bytes": f32_moments,
+                "qtensor_bytes": q_moments,
+                "reduction": f32_moments / q_moments,
+            },
+        }
+    return out
+
+
 def attention_report(repeats: int = 3) -> dict:
     """Fused integer flash attention: sim-vs-pallas divergence, traced
     dispatch counts and timings per preset.
@@ -394,6 +439,7 @@ def run(repeats: int = 3) -> dict:
         "matmul_dispatch": matmul_dispatch_report(repeats=repeats),
         "norm_bwd": norm_bwd_report(repeats=repeats),
         "policy": policy_report(repeats=repeats),
+        "state_plane": state_plane_report(),
         "attention": attention_report(repeats=repeats),
     }
 

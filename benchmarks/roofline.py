@@ -92,6 +92,60 @@ def matmul_hbm_bytes(M: int, K: int, N: int, lx: int = 1, lw: int = 1,
 _LIMBS = {8: 1, 10: 2, 12: 2, 14: 2, 16: 3}
 
 
+def collective_wire_bytes(n_params: int, bits: int = 8, n_shards: int = 8,
+                          n_groups: int = 1) -> Dict:
+    """Bytes-on-the-wire per training step for the two param-sized
+    collectives, f32 vs the QTensor wire format (DESIGN.md §7).
+
+    * param all-gather (FSDP): every shard's contribution crosses the wire
+      once per step — f32 moves ``4·N``; the QTensor form moves ``L`` int8
+      limb planes plus one int32 step exponent per (shard × scale group).
+    * gradient all-reduce: f32 psum moves ``4·N``; the compressed DFX psum
+      moves the b-bit mantissa planes plus one ``pmax``-shared exponent per
+      scale group (core/grad_compress.py).
+
+    Mirrors ``core/qtensor.wire_bytes`` (``L·n + 4·groups``) without
+    importing jax — the same layout-contract convention as ``_LIMBS``.
+    """
+    L = _LIMBS[bits]
+    f32_gather = 4 * n_params
+    q_gather = L * n_params + 4 * n_shards * n_groups
+    f32_psum = 4 * n_params
+    q_psum = L * n_params + 4 * n_groups
+    return {
+        "n_params": n_params, "bits": bits, "limbs": L,
+        "n_shards": n_shards,
+        "param_all_gather": {"f32_bytes": f32_gather,
+                             "qtensor_bytes": q_gather,
+                             "reduction": f32_gather / q_gather},
+        "grad_psum": {"f32_bytes": f32_psum, "qtensor_bytes": q_psum,
+                      "reduction": f32_psum / q_psum},
+        "combined_reduction": (f32_gather + f32_psum) / (q_gather + q_psum),
+    }
+
+
+def wire_bytes_table(n_params=(135_000_000, 500_000_000),
+                     bits=(8, 16), n_shards: int = 8) -> List[Dict]:
+    """Per-collective wire bytes for representative param counts."""
+    return [collective_wire_bytes(n, b, n_shards=n_shards)
+            for n in n_params for b in bits]
+
+
+def wire_markdown(rows: List[Dict]) -> str:
+    lines = [
+        "| params | bits | all-gather f32 B | all-gather QTensor B | "
+        "psum f32 B | psum QTensor B | combined reduction |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        ag, ps = r["param_all_gather"], r["grad_psum"]
+        lines.append(
+            f"| {r['n_params']:,} | {r['bits']} | {ag['f32_bytes']:,} "
+            f"| {ag['qtensor_bytes']:,} | {ps['f32_bytes']:,} "
+            f"| {ps['qtensor_bytes']:,} | {r['combined_reduction']:.2f}× |")
+    return "\n".join(lines)
+
+
 def matmul_traffic_table(shapes=((512, 768, 768), (256, 1024, 4096)),
                          bits=(8, 12, 16)) -> List[Dict]:
     """Before/after HBM-bytes for representative shapes per bit-width."""
@@ -210,9 +264,15 @@ def main() -> None:
     ap.add_argument("--md", default="experiments/roofline.md")
     ap.add_argument("--matmul-traffic", action="store_true",
                     help="print the limb-matmul HBM traffic model and exit")
+    ap.add_argument("--wire-bytes", action="store_true",
+                    help="print the f32-vs-QTensor collective wire-bytes "
+                         "model and exit")
     args = ap.parse_args()
     if args.matmul_traffic:
         print(traffic_markdown(matmul_traffic_table()))
+        return
+    if args.wire_bytes:
+        print(wire_markdown(wire_bytes_table()))
         return
     rows = load_all(args.dir)
     md = to_markdown(rows)

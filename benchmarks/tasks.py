@@ -1,6 +1,6 @@
 """Synthetic proxy tasks + fine-tuning harness for the paper's tables.
 
-GLUE/SQuAD/CIFAR do not ship in this container (DESIGN.md §7); the paper's
+GLUE/SQuAD/CIFAR do not ship in this container (DESIGN.md §8); the paper's
 *claims* are about score deltas across bit-widths, so each benchmark
 fine-tunes a small transformer on a structured synthetic task and reports the
 same metric sweep. Tasks are built so the FP32 model reaches high accuracy

@@ -8,7 +8,8 @@ Nothing executes: the model is *traced* (``jax.make_jaxpr`` of the loss
 gradient, backend pinned to ``pallas``) and the analyzer proves the
 integer-training invariants on the program text — integer closure (QL001),
 PRNG key discipline (QL002), policy hygiene (QL003), stability regime
-(QL005) and accumulator budgets (QL006).  The dispatch budget (QL004)
+(QL005), accumulator budgets (QL006) and wire format (QL007 — no f32
+all-gather of a tensor whose QTensor form exists).  The dispatch budget (QL004)
 compares *against a pinned baseline* and therefore lives with the gate —
 ``benchmarks/check_dispatch.py`` — which delegates its counting and
 comparison to the same analyzer.

@@ -28,8 +28,14 @@ QL005    stability           no resolved scope lands in the paper's Fig. 4
 QL006    accum-budget        no matmul/reduction site's worst-case mantissa
                              magnitude exceeds its accumulator's exact range
                              (interval model in ``budget.py``)
+QL007    wire-format         no float32 ``all_gather`` moves a tensor the
+                             same graph quantizes to an integer mantissa —
+                             a QTensor form exists, so the collective should
+                             carry int8 limb planes + a per-shard exponent
+                             (sharding.quantized_all_gather), ~4x fewer
+                             bytes on the wire
 
-Graph rules (QL001/QL002/QL006) need only a closed jaxpr; policy rules
+Graph rules (QL001/QL002/QL006/QL007) need only a closed jaxpr; policy rules
 (QL003/QL005) need the resolutions recorded while tracing
 (``qpolicy.record_resolutions``); QL004 compares count dicts and is what
 ``benchmarks/check_dispatch.py`` delegates to.
@@ -47,7 +53,7 @@ from repro.analysis import budget, walker
 __all__ = ["Finding", "ALL_RULES", "check_integer_closure",
            "check_key_discipline", "check_policy_hygiene",
            "check_dispatch_budget", "check_stability", "check_accum_budget",
-           "dispatch_counts", "run_rules"]
+           "check_wire_format", "dispatch_counts", "run_rules"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -468,6 +474,96 @@ def check_accum_budget(jaxpr) -> List[Finding]:
 
 
 # =========================================================================
+# QL007 — wire format
+# =========================================================================
+
+#: ops that preserve "this is (a scaled/shifted view of) the same tensor"
+#: for origin tracking — the elementwise/shape sets plus the rounding steps
+#: a quantizer applies before its int convert
+_ORIGIN_PASS = _ELEMENTWISE | _SHAPE_OPS | frozenset({
+    "round", "floor", "ceil", "exp2", "convert_element_type"})
+
+
+class _WireSemantics(walker.Semantics):
+    """Origin tracking for the wire-format rule.
+
+    Every float input/const mints an origin uid; elementwise/shape/rounding
+    ops propagate the union of their operands' origins (a scaled or rounded
+    view is still "the same tensor" — matmuls and other contractions mint
+    nothing and so break the chain).  Two use-sites are recorded per origin:
+    a float32 ``all_gather`` and a float→int ``convert_element_type`` (the
+    quantizer's mantissa-rounding step, QL001's convention).  An origin with
+    both moved full-width bytes over a wire although its b-bit QTensor form
+    demonstrably exists in the very same graph — in either order: quantize
+    after the gather, or an f32 gather of a tensor quantized elsewhere.
+    """
+
+    def __init__(self):
+        self._next = 0
+        self.gathered: Dict[int, str] = {}    # origin uid -> gather site
+        self.quantized: Dict[int, str] = {}   # origin uid -> quantize site
+
+    def _mint(self):
+        self._next += 1
+        return frozenset((self._next,))
+
+    def input(self, aval, index):
+        return self._mint() if _kind(aval) == "f" else None
+
+    def const(self, aval):
+        return self._mint() if _kind(aval) == "f" else None
+
+    def join(self, vals):
+        vs = [v for v in vals if v]
+        return frozenset().union(*vs) if vs else None
+
+    def eqn(self, eqn, in_vals, ctx):
+        prim = eqn.primitive.name
+        tags = self.join(in_vals)
+
+        if prim == "all_gather":
+            op = eqn.invars[0]
+            if hasattr(op, "aval") and _kind(op.aval) == "f" and in_vals[0]:
+                for uid in in_vals[0]:
+                    self.gathered.setdefault(uid, _src(eqn))
+            # the gathered copy carries the same content
+            return [in_vals[0]] + [None] * (len(eqn.outvars) - 1)
+
+        if prim == "convert_element_type":
+            src_f = (hasattr(eqn.invars[0], "aval")
+                     and _kind(eqn.invars[0].aval) == "f")
+            if _kind(eqn.params["new_dtype"]) in "iu" and src_f \
+                    and in_vals[0]:
+                for uid in in_vals[0]:
+                    self.quantized.setdefault(uid, _src(eqn))
+            return [in_vals[0]]
+
+        if prim in _ORIGIN_PASS:
+            return [tags] * len(eqn.outvars)
+        if walker.sub_jaxprs(eqn) and prim != "pallas_call":
+            return None                                  # generic descent
+        return [None] * len(eqn.outvars)
+
+
+def check_wire_format(jaxpr) -> List[Finding]:
+    """QL007: f32 ``all_gather`` of a tensor whose QTensor form exists."""
+    sem = _WireSemantics()
+    walker.interpret(jaxpr, sem)
+    findings = []
+    for uid, site in sorted(sem.gathered.items()):
+        if uid in sem.quantized:
+            findings.append(Finding(
+                code="QL007", rule="wire-format",
+                message="float32 all_gather of a tensor the same graph "
+                        "quantizes to an integer mantissa — gather the "
+                        "QTensor form (int8 limb planes + per-shard "
+                        "exponent, sharding.quantized_all_gather) and move "
+                        "~4x fewer bytes",
+                where=site))
+    return findings
+
+
+# =========================================================================
 # Registry / driver
 # =========================================================================
 
@@ -478,6 +574,7 @@ ALL_RULES = {
     "QL004": "dispatch-budget",
     "QL005": "stability",
     "QL006": "accum-budget",
+    "QL007": "wire-format",
 }
 
 
@@ -492,6 +589,7 @@ def run_rules(jaxpr, *, policy=None,
     findings += check_integer_closure(jaxpr)
     findings += check_key_discipline(jaxpr)
     findings += check_accum_budget(jaxpr)
+    findings += check_wire_format(jaxpr)
     if policy is not None:
         findings += check_policy_hygiene(policy, resolutions or ())
         findings += check_stability(policy, resolutions or ())

@@ -15,22 +15,27 @@ mapping to the collective level: the cross-pod data-parallel all-reduce
 
 4x fewer bytes over the pod interconnect; measured in EXPERIMENTS.md §Perf.
 
+The wire format is a :class:`repro.core.qtensor.QTensor` quantized against
+a ``pmax``-shared scale (the ``exp=`` override), so this module carries no
+private packing of its own — the same limb planes the FSDP gather and the
+optimizer moments use (DESIGN.md §7).  ``psum`` runs over the recombined
+int32 logical mantissa, which is exact.
+
 Implemented with ``shard_map`` over the ``pod`` axis with ``data``/``model``
 left to XLA auto partitioning inside the body.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import dfx
+from repro.core import qtensor
 
 
 def _compress_leaf(g: jax.Array, residual: Optional[jax.Array], bits: int,
-                   axis: str) -> Tuple[jax.Array, jax.Array]:
+                   axis: str, npods: jax.Array) -> Tuple[jax.Array, jax.Array]:
     """Quantized psum of one gradient leaf along ``axis`` with error feedback.
 
     Returns (all-reduced gradient estimate, new residual).
@@ -38,19 +43,12 @@ def _compress_leaf(g: jax.Array, residual: Optional[jax.Array], bits: int,
     g32 = g.astype(jnp.float32)
     if residual is not None:
         g32 = g32 + residual
-    # pre-sync the shared scale: max exponent across the axis (one scalar)
-    absmax = jnp.max(jnp.abs(g32))
-    absmax = jax.lax.pmax(absmax, axis)
-    _, e = jnp.frexp(absmax)
-    e = jnp.where(absmax > 0, e, 0)
-    exp = (e - (bits - 1)).astype(jnp.int32)
-    scale = jnp.exp2(-exp.astype(jnp.float32))
-    lim = float(2 ** (bits - 1) - 1)
-    m = jnp.clip(jnp.round(g32 * scale), -lim, lim)
-    new_residual = g32 - m * jnp.exp2(exp.astype(jnp.float32))
+    # pre-sync the shared scale: max step exponent across the axis (scalar)
+    exp = jax.lax.pmax(qtensor.step_exponent(g32, bits), axis)
+    t = qtensor.quantize(g32, bits, exp=exp)
+    new_residual = g32 - qtensor.dequantize(t)
     # int32 psum of mantissas (exact for <= 2^(31-b-log2(npods)) pods)
-    summed = jax.lax.psum(m.astype(jnp.int32), axis)
-    npods = jax.lax.psum(1, axis)
+    summed = jax.lax.psum(qtensor.int_mantissa(t), axis)
     out = summed.astype(jnp.float32) * jnp.exp2(exp.astype(jnp.float32)) / npods
     return out, new_residual
 
@@ -76,14 +74,15 @@ def compressed_psum_mean(grads: Any, residuals: Optional[Any], *,
                 "residual tree does not match the gradient tree "
                 f"(grads: {tdef}, residuals: {res_tdef}); build residuals "
                 "with init_residuals(params)")
+    # one axis-size psum shared by every leaf (was one per leaf)
+    npods = jax.lax.psum(1, axis)
     out, new_res = [], []
     for g, r in zip(flat, res_flat):
         if g.size < min_size:
-            npods = jax.lax.psum(1, axis)
             out.append(jax.lax.psum(g.astype(jnp.float32), axis) / npods)
             new_res.append(jnp.zeros_like(g, jnp.float32))
         else:
-            o, nr = _compress_leaf(g, r, bits, axis)
+            o, nr = _compress_leaf(g, r, bits, axis, npods)
             out.append(o)
             new_res.append(nr)
     return jax.tree.unflatten(tdef, out), jax.tree.unflatten(tdef, new_res)

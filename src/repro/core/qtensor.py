@@ -1,0 +1,277 @@
+"""QTensor — ONE DFX int8 container for every resident and wire byte.
+
+The compute plane has spoken this format since PR 4: stacked balanced
+base-2⁷ int8 **limb planes** plus a shared scale exponent, the exact layout
+``dfx_quantize{,_grouped}(limb_planes=True)`` emits and the matmul kernels
+consume.  The *state* plane (FSDP param all-gathers, Adam moments,
+checkpoints, the compressed cross-pod psum) each used to carry FP32 — or,
+in ``grad_compress``, a private one-off mantissa+exponent packing nothing
+else could reuse.  ``QTensor`` promotes the kernel layout to a first-class
+pytree so all of them share one representation:
+
+* ``m``   — int8 limb planes, shape ``(L,) + shape`` with the logical
+  mantissa ``Σ_j m[j] · 2^(7j)`` (``L = n_limbs(bits)``; for ``bits <= 8``
+  the single plane holds the raw mantissa).  Non-final digits lie in
+  ``[-64, 63]``; the final plane keeps the raw carry — the same digit set
+  as the fused quantize kernel, so a QTensor's planes can feed the limb
+  matmul entry points directly.
+* ``exp`` — int32 *step* exponent (``value = mantissa · 2^exp``): scalar
+  ``()`` for a per-tensor scale, or keep-dims per-group (one exponent per
+  slice along ``group_axis`` — per-layer for scan-stacked params, per-shard
+  for the FSDP all-gather, per-expert for MoE stacks, mirroring
+  ``dfx_quantize_grouped``'s ``(E,)`` vector).
+* ``bits`` — static metadata (pytree aux), so jit/scan/shard_map treat two
+  QTensors of the same width as one treedef.
+
+Everything here is plain XLA arithmetic (it must run inside ``shard_map``
+bodies and optimizer updates, not just on the kernel grid).  The digit
+split mirrors the kernel's ``_split_planes`` — exact f32 arithmetic,
+``floor((m + 64) · 1/128)`` — deliberately avoiding integer ``div``/``rem``
+chains so quantlint's QL001 integer-closure walk stays silent over QTensor
+ops (DESIGN.md §7).
+
+Rounding contracts (shared with ``core/dfx.py``):
+
+* ``round`` — IEEE round-half-to-even, the default.
+* stochastic — ``floor(y + u)`` with ``u ~ U[0,1)``: **unbiased**, which is
+  what makes the quantized-EMA optimizer moments mean-preserving
+  (``ema_update``; property-tested in tests/test_qtensor.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dfx_quant import LIMB_BITS, n_limbs
+
+__all__ = ["QTensor", "quantize", "dequantize", "int_mantissa", "zeros",
+           "ema_update", "is_qtensor", "wire_bytes", "step_exponent"]
+
+_RADIX = float(1 << LIMB_BITS)          # 128.0 — balanced base-2⁷
+
+
+@dataclasses.dataclass(frozen=True)
+class QTensor:
+    """DFX int8 state container: ``value = (Σ_j m[j]·2^(7j)) · 2^exp``."""
+
+    m: jax.Array                 # int8 (L, *shape) stacked limb planes
+    exp: jax.Array               # int32 () or keep-dims per-group exponent
+    bits: int = 8                # static: mantissa bit-width (pytree aux)
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return self.m.shape[1:]
+
+    @property
+    def n_limbs(self) -> int:
+        return self.m.shape[0]
+
+    @property
+    def group_axis(self) -> Optional[int]:
+        """Axis the exponent varies along (None = per-tensor scale)."""
+        if jnp.ndim(self.exp) == 0:
+            return None
+        for ax, s in enumerate(self.exp.shape):
+            if s != 1:
+                return ax
+        return None
+
+    @property
+    def nbytes(self) -> int:
+        """Resident/wire bytes: int8 planes + int32 exponent(s)."""
+        return self.m.size + 4 * self.exp.size
+
+
+def _flatten(t: QTensor):
+    return (t.m, t.exp), (t.bits,)
+
+
+def _unflatten(aux, children):
+    return QTensor(m=children[0], exp=children[1], bits=aux[0])
+
+
+def _flatten_with_keys(t: QTensor):
+    ga = jax.tree_util.GetAttrKey
+    return ((ga("m"), t.m), (ga("exp"), t.exp)), (t.bits,)
+
+
+jax.tree_util.register_pytree_with_keys(
+    QTensor, _flatten_with_keys, _unflatten, flatten_func=_flatten)
+
+
+def is_qtensor(x) -> bool:
+    return isinstance(x, QTensor)
+
+
+# ---------------------------------------------------------------------------
+# quantize / dequantize
+# ---------------------------------------------------------------------------
+
+def step_exponent(x: jax.Array, bits: int,
+                  group_axis: Optional[int] = None) -> jax.Array:
+    """Step exponent ``e_max - (bits-1)`` per scale group (keep-dims).
+
+    The frexp convention of ``dfx._scale_exponent``: ``max|x| <= 2^e_max``;
+    zero groups get exponent ``-(bits-1)`` (all-zero mantissas, any scale is
+    exact — this choice keeps ``quantize(zeros)`` == ``zeros()``).
+    """
+    if group_axis is None:
+        absmax = jnp.max(jnp.abs(x))
+    else:
+        axes = tuple(a for a in range(x.ndim) if a != group_axis)
+        absmax = jnp.max(jnp.abs(x), axis=axes, keepdims=True)
+    _, e = jnp.frexp(absmax)
+    e = jnp.where(absmax > 0, e, 0)
+    return (e - (bits - 1)).astype(jnp.int32)
+
+
+def _split_planes(y: jax.Array, L: int) -> jax.Array:
+    """Stacked balanced base-2⁷ digit planes of an integer-valued f32 array.
+
+    Mirrors the quantize kernel's in-register split (kernels/dfx_quant):
+    exact f32 arithmetic (|y| <= 2^15 ≪ 2^23), final plane keeps the raw
+    carry.  No integer div/rem — QL001 walks this clean.
+    """
+    if L == 1:
+        return y.astype(jnp.int8)[None]
+    planes = []
+    for _ in range(L - 1):
+        carry = jnp.floor((y + _RADIX / 2) * (1.0 / _RADIX))
+        planes.append((y - carry * _RADIX).astype(jnp.int8))
+        y = carry
+    planes.append(y.astype(jnp.int8))
+    return jnp.stack(planes)
+
+
+def quantize(
+    x: jax.Array,
+    bits: int,
+    *,
+    group_axis: Optional[int] = None,
+    stochastic: bool = False,
+    key: Optional[jax.Array] = None,
+    exp: Optional[jax.Array] = None,
+) -> QTensor:
+    """DFX linear mapping of ``x`` into a QTensor.
+
+    ``group_axis`` selects the exponent granularity (None = per-tensor).
+    ``exp`` overrides the derived step exponent — the collectives use this
+    to quantize against a ``pmax``-shared scale so every shard's mantissas
+    are summable/concatenable (grad_compress, the FSDP gather).
+    """
+    if stochastic and key is None:
+        raise ValueError("stochastic rounding requires a PRNG key")
+    x = x.astype(jnp.float32)
+    if exp is None:
+        exp = step_exponent(x, bits, group_axis)
+    else:
+        exp = jnp.asarray(exp, jnp.int32)
+    y = x * jnp.exp2(-exp.astype(jnp.float32))
+    if stochastic:
+        y = jnp.floor(y + jax.random.uniform(key, y.shape, jnp.float32))
+    else:
+        y = jnp.round(y)
+    lim = float(2 ** (bits - 1) - 1)
+    y = jnp.clip(y, -lim, lim)
+    return QTensor(m=_split_planes(y, n_limbs(bits)), exp=exp, bits=bits)
+
+
+def _combine_planes(m: jax.Array, dtype) -> jax.Array:
+    """Logical mantissa ``Σ_j m[j]·2^(7j)`` (exact in f32 for b <= 16)."""
+    out = m[0].astype(dtype)
+    for j in range(1, m.shape[0]):
+        out = out + m[j].astype(dtype) * (2.0 ** (LIMB_BITS * j)
+                                          if jnp.issubdtype(dtype, jnp.floating)
+                                          else (1 << (LIMB_BITS * j)))
+    return out
+
+
+def int_mantissa(t: QTensor) -> jax.Array:
+    """Logical int32 mantissa — the exact-psum wire form of the collectives."""
+    return _combine_planes(t.m, jnp.int32)
+
+
+def dequantize(t: QTensor, dtype=jnp.float32) -> jax.Array:
+    """Inverse mapping: plane combination is exact (mantissa <= 2^15 in
+    f32); the scale applies as one ``jnp.exp2`` multiply, the repo-wide
+    convention (see kernels/bfp_matmul.py on exp2 rounding), so a
+    quantize→dequantize→quantize cycle is a bit-exact fixed point."""
+    mant = _combine_planes(t.m, jnp.float32)
+    return (mant * jnp.exp2(t.exp.astype(jnp.float32))).astype(dtype)
+
+
+def zeros(shape: Tuple[int, ...], bits: int,
+          group_axis: Optional[int] = None) -> QTensor:
+    """All-zero QTensor (mantissas 0, exponents at the zero-group value)."""
+    if group_axis is None:
+        exp = jnp.full((), -(bits - 1), jnp.int32)
+    else:
+        eshape = tuple(s if a == group_axis else 1
+                       for a, s in enumerate(shape))
+        exp = jnp.full(eshape, -(bits - 1), jnp.int32)
+    return QTensor(m=jnp.zeros((n_limbs(bits),) + tuple(shape), jnp.int8),
+                   exp=exp, bits=bits)
+
+
+def ema_update(t: QTensor, x: jax.Array, decay: float,
+               key: jax.Array) -> QTensor:
+    """Stochastic-rounding EMA: ``t ← Q_sr(decay·deq(t) + (1-decay)·x)``.
+
+    The optimizer-moment update rule (DESIGN.md §7): the EMA is computed in
+    FP32 (a paper-kept op, like the master-weight update) and re-quantized
+    with *stochastic* rounding, whose unbiasedness keeps the quantized
+    moment mean-preserving over steps — round-to-nearest here would let a
+    sub-step drift accumulate in one direction and stall small gradients,
+    the same failure EF fixes for the compressed psum.
+    """
+    new = decay * dequantize(t) + (1.0 - decay) * x.astype(jnp.float32)
+    q = quantize(new, t.bits, group_axis=t.group_axis,
+                 stochastic=True, key=key)
+    if q.exp.shape != t.exp.shape:
+        # degenerate keep-dims groups (all sizes 1) re-derive as a scalar
+        # exponent; restore the stored shape so the state layout is a jit-
+        # and scan-stable carry
+        q = QTensor(m=q.m, exp=q.exp.reshape(t.exp.shape), bits=t.bits)
+    return q
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _fake_quant(x: jax.Array, bits: int) -> jax.Array:
+    return dequantize(quantize(x, bits))
+
+
+def _fake_quant_fwd(x, bits):
+    return dequantize(quantize(x, bits)), None
+
+
+def _fake_quant_bwd(bits, _, ct):
+    return (ct,)
+
+
+_fake_quant.defvjp(_fake_quant_fwd, _fake_quant_bwd)
+
+
+def fake_quant_ste(x: jax.Array, bits: int) -> jax.Array:
+    """Quantize→dequantize with a straight-through (identity) gradient.
+
+    The single-host form of the quantized param gather: the forward pass
+    sees the b-bit DFX image of ``x`` while the cotangent flows to the FP32
+    master unchanged — autodiff never differentiates through round/clip (a
+    zero-gradient staircase) or, in the sharded form, through the gather's
+    ``shard_map``.
+    """
+    return _fake_quant(x, bits)
+
+
+# ---------------------------------------------------------------------------
+# Wire accounting (the roofline traffic model imports this layout contract)
+# ---------------------------------------------------------------------------
+
+def wire_bytes(n_elems: int, bits: int, n_groups: int = 1) -> int:
+    """Bytes a QTensor of ``n_elems`` puts on a wire (or leaves resident):
+    ``L`` int8 planes + one int32 exponent per scale group."""
+    return n_limbs(bits) * n_elems + 4 * n_groups

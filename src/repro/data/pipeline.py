@@ -4,7 +4,7 @@ Two sources behind one iterator interface:
 
 * ``SyntheticLM`` — deterministic pseudo-corpus generated from (seed, index);
   infinite, reproducible across restarts, used by the examples and smoke
-  tests (no datasets ship in this container — DESIGN.md §7).
+  tests (no datasets ship in this container — DESIGN.md §8).
 * ``MmapTokens`` — memory-mapped flat ``int32`` token file (the production
   path: one ``np.memmap`` per host over a sharded file set).
 

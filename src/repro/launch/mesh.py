@@ -22,8 +22,16 @@ def make_production_mesh(*, multi_pod: bool = False):
     return _mesh(shape, axes)
 
 
-def make_host_mesh(model_parallel: int = 1):
-    """Mesh over whatever devices exist (tests / examples on CPU)."""
+def make_host_mesh(model_parallel: int = 1, pods: int = 1):
+    """Mesh over whatever devices exist (tests / examples on CPU).
+
+    ``pods > 1`` prepends a ``pod`` axis so the compressed cross-pod train
+    step (int8 gradient all-reduce) runs on the multi-host sim
+    (``--xla_force_host_platform_device_count``).
+    """
     n = len(jax.devices())
-    assert n % model_parallel == 0
+    assert n % (model_parallel * pods) == 0
+    if pods > 1:
+        return _mesh((pods, n // (model_parallel * pods), model_parallel),
+                     ("pod", "data", "model"))
     return _mesh((n // model_parallel, model_parallel), ("data", "model"))

@@ -22,6 +22,7 @@ import numpy as np
 
 from repro import sharding
 from repro.configs import registry
+from repro.core import grad_compress
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.launch.mesh import make_host_mesh
 from repro.models import encdec, lm
@@ -45,6 +46,18 @@ def main() -> None:
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--pods", type=int, default=1,
+                    help="pod axis size (multi-host sim; >1 enables the "
+                         "compressed cross-pod step)")
+    ap.add_argument("--gather-bits", type=int, default=0,
+                    help="0 = f32 FSDP param gather; 8 = int8 QTensor "
+                         "all-gather (DESIGN.md §7)")
+    ap.add_argument("--state-bits", type=int, default=0,
+                    help="0 = FP32 Adam moments; 8 = QTensor moments with "
+                         "stochastic-rounding EMA")
+    ap.add_argument("--grad-compress-bits", type=int, default=0,
+                    help="0 = off; 8 = int8 DFX cross-pod gradient "
+                         "all-reduce with error feedback (needs --pods > 1)")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)
@@ -55,7 +68,10 @@ def main() -> None:
     if args.reduced:
         cfg = cfg.reduced()
     qcfg = registry.get_quant(args.quant)
-    mesh = make_host_mesh(args.model_parallel)
+    compressed = args.grad_compress_bits > 0
+    if compressed and args.pods < 2:
+        ap.error("--grad-compress-bits needs --pods > 1 (a pod mesh axis)")
+    mesh = make_host_mesh(args.model_parallel, pods=args.pods)
     sharding.set_mesh(mesh)
 
     if cfg.enc_dec:
@@ -66,17 +82,29 @@ def main() -> None:
         loss_fn = lm.lm_loss
 
     key = jax.random.PRNGKey(0)
+    opt_cfg = opt_lib.OptimizerConfig(lr=args.lr, total_steps=args.steps,
+                                      state_bits=args.state_bits)
     params, opt_state, pspecs = trainer.init_train_state(
-        init_fn, key, mesh, fsdp=registry.use_fsdp(args.arch))
+        init_fn, key, mesh, fsdp=registry.use_fsdp(args.arch),
+        opt_cfg=opt_cfg)
     n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
-    log.info("arch=%s params=%.2fM quant=%s mesh=%s",
-             cfg.name, n_params / 1e6, args.quant, dict(mesh.shape))
+    log.info("arch=%s params=%.2fM quant=%s mesh=%s gather_bits=%d "
+             "state_bits=%d", cfg.name, n_params / 1e6, args.quant,
+             dict(mesh.shape), args.gather_bits, args.state_bits)
 
-    opt_cfg = opt_lib.OptimizerConfig(lr=args.lr, total_steps=args.steps)
-    tcfg = trainer.TrainConfig(microbatches=args.microbatches)
-    step_fn = trainer.jit_train_step(
-        trainer.make_train_step(loss_fn, cfg, qcfg, opt_cfg, tcfg),
-        mesh, pspecs)
+    tcfg = trainer.TrainConfig(microbatches=args.microbatches,
+                               grad_compress_bits=args.grad_compress_bits,
+                               gather_bits=args.gather_bits)
+    if compressed:
+        step_fn = trainer.make_compressed_train_step(
+            loss_fn, cfg, qcfg, opt_cfg, mesh, tcfg)
+        residuals = grad_compress.init_residuals(params)
+    else:
+        step_fn = trainer.jit_train_step(
+            trainer.make_train_step(loss_fn, cfg, qcfg, opt_cfg, tcfg,
+                                    mesh=mesh, param_specs=pspecs),
+            mesh, pspecs, opt_state_like=opt_state)
+        residuals = None
 
     data = SyntheticLM(DataConfig(batch_size=args.batch, seq_len=args.seq,
                                   vocab=cfg.vocab))
@@ -86,13 +114,16 @@ def main() -> None:
         latest = checkpoint.latest_step(args.ckpt_dir)
         if latest is not None:
             like = {"params": params, "opt": opt_state, "data": data.state()}
-            shard_like = {"params": pspecs,
-                          "opt": opt_lib.OptState(step=None, m=pspecs, v=pspecs),
-                          "data": None}
-            state = checkpoint.restore(args.ckpt_dir, latest, like,
-                                       shardings=None)
-            params, opt_state = state["params"], state["opt"]
-            data.restore(state["data"])
+            if compressed:
+                # error-feedback residuals ride in the checkpoint: dropping
+                # them on restart would bias the first post-restore steps
+                like["residuals"] = residuals
+            restored = checkpoint.restore(args.ckpt_dir, latest, like,
+                                          shardings=None)
+            params, opt_state = restored["params"], restored["opt"]
+            if compressed:
+                residuals = restored["residuals"]
+            data.restore(restored["data"])
             start = latest
             log.info("restored step %d", latest)
 
@@ -108,24 +139,29 @@ def main() -> None:
             return {"patch_embeds": pe, **raw}
         return raw
 
-    state = (params, opt_state)
+    state = (params, opt_state, residuals)
 
     def one_step(state, step):
-        params, opt_state = state
+        params, opt_state, residuals = state
         batch = make_batch(next(data))
         k = jax.random.fold_in(key, step)
-        params, opt_state, metrics = step_fn(params, opt_state, batch, k)
+        if compressed:
+            params, opt_state, residuals, metrics = step_fn(
+                params, opt_state, residuals, batch, k)
+        else:
+            params, opt_state, metrics = step_fn(params, opt_state, batch, k)
         if step % args.log_every == 0:
             m = {k_: float(v) for k_, v in metrics.items()}
             log.info("step %d loss=%.4f gnorm=%.3f", step, m.get("loss", -1),
                      m.get("grad_norm", -1))
-        return params, opt_state
+        return params, opt_state, residuals
 
     def save_state(state, step):
         if args.ckpt_dir:
-            checkpoint.save(args.ckpt_dir, step,
-                            {"params": state[0], "opt": state[1],
-                             "data": data.state()})
+            blob = {"params": state[0], "opt": state[1], "data": data.state()}
+            if compressed:
+                blob["residuals"] = state[2]
+            checkpoint.save(args.ckpt_dir, step, blob)
             log.info("checkpointed step %d", step)
 
     t0 = time.time()

@@ -15,12 +15,16 @@ extra collective or compute bytes rather than as compile failures.
 """
 from __future__ import annotations
 
+import contextlib
 import re
 from typing import Any, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import qtensor
 
 # ---------------------------------------------------------------------------
 # Active-mesh context: models call ``constrain`` freely; it is a no-op until
@@ -62,6 +66,29 @@ def shard_map_compat(f, mesh: Mesh, in_specs, out_specs, manual_axes=None):
     return _sm(f, **kwargs)
 
 
+#: axes currently under manual (shard_map) control.  While any are active,
+#: ``constrain`` is a no-op: a non-manual sharding annotation inside a
+#: manual subgroup aborts XLA outright (``Check failed:
+#: sharding.IsManualSubgroup()``), and even manual-subgroup-safe constraints
+#: break on the *transpose* (grad) path in this jax line — so inside a
+#: shard_map body the layout hints are dropped and XLA auto-shards the
+#: non-manual axes.
+_MANUAL_AXES: frozenset = frozenset()
+
+
+@contextlib.contextmanager
+def manual_axes_active(axes):
+    """Mark ``axes`` manual while tracing a shard_map body, so the model's
+    free ``constrain`` calls stay safe inside compressed/pod-mapped steps."""
+    global _MANUAL_AXES
+    prev = _MANUAL_AXES
+    _MANUAL_AXES = prev | frozenset(axes)
+    try:
+        yield
+    finally:
+        _MANUAL_AXES = prev
+
+
 def set_mesh(mesh: Optional[Mesh]) -> None:
     global _ACTIVE_MESH
     _ACTIVE_MESH = mesh
@@ -86,7 +113,7 @@ def constrain(x: jax.Array, *spec) -> jax.Array:
     back to None.
     """
     mesh = _ACTIVE_MESH
-    if mesh is None:
+    if mesh is None or _MANUAL_AXES:
         return x
     clean = []
     for dim, s in zip(x.shape, spec):
@@ -231,3 +258,108 @@ def param_pspecs(params: Any, mesh: Mesh, *, fsdp: bool) -> Any:
         return NamedSharding(mesh, spec)
 
     return jax.tree_util.tree_map_with_path(one, params)
+
+
+# ---------------------------------------------------------------------------
+# QTensor state plane (DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+def qtensor_pspecs(like: Any, param_specs: Any, mesh: Mesh) -> Any:
+    """Shardings for a state tree that may hold QTensor nodes.
+
+    ``like`` mirrors the param tree with some leaves replaced by QTensors
+    (e.g. quantized optimizer moments); ``param_specs`` is the matching
+    pytree of NamedShardings.  A QTensor node inherits its parameter's spec
+    shifted past the leading limb-plane axis (``m``: ``P(None, *spec)`` —
+    the planes shard exactly like the logical tensor, so FSDP keeps slicing
+    the moment bytes); the per-group exponent vector is tiny and replicated.
+    Non-QTensor leaves keep their param spec, so this is safe to call on an
+    FP32 state tree too.
+    """
+
+    def one(q, ns):
+        if not qtensor.is_qtensor(q):
+            return ns
+        spec = ns.spec if isinstance(ns, NamedSharding) else ns
+        return qtensor.QTensor(
+            m=NamedSharding(mesh, P(None, *tuple(spec))),
+            exp=NamedSharding(mesh, P()),
+            bits=q.bits)
+
+    return jax.tree.map(one, like, param_specs, is_leaf=qtensor.is_qtensor)
+
+
+def _fsdp_dim(spec) -> Optional[int]:
+    """Index of the dim sharded over the ``data`` axis, or None."""
+    for i, s in enumerate(tuple(spec)):
+        names = (s,) if isinstance(s, str) else tuple(s or ())
+        if "data" in names:
+            return i
+    return None
+
+
+def _gathered_leaf(mesh: Mesh, spec, d: int, bits: int):
+    """shard_map'd int8 all-gather of one FSDP leaf along dim ``d``.
+
+    Wire format per shard: ``L`` int8 limb planes + one int32 scalar step
+    exponent (a *per-shard* scale — no cross-shard pmax round-trip needed,
+    each shard dequantizes against its own exponent after the gather).
+
+    Fully manual over every mesh axis (TP/pod placements stay explicit in
+    the specs): the output keeps the leaf's ``model`` sharding and drops
+    only the ``data`` entry that the gather materializes.
+    """
+    entries = tuple(spec)
+    out_spec = P(*[None if i == d else s for i, s in enumerate(entries)])
+
+    def body(x):
+        t = qtensor.quantize(x, bits)                     # local shard, scalar exp
+        m = jax.lax.all_gather(t.m, "data")               # (S, L, *local)
+        e = jax.lax.all_gather(t.exp, "data")             # (S,)
+        shards = jax.vmap(
+            lambda mm, ee: qtensor.dequantize(qtensor.QTensor(mm, ee, bits))
+        )(m, e)                                           # (S, *local)
+        out = jnp.moveaxis(shards, 0, d)
+        shape = list(x.shape)
+        shape[d] = shape[d] * mesh.shape["data"]
+        return out.reshape(shape)
+
+    return shard_map_compat(body, mesh, in_specs=(P(*entries),),
+                            out_specs=out_spec,
+                            manual_axes=set(mesh.axis_names))
+
+
+def quantized_all_gather(params: Any, mesh: Mesh, *, bits: int,
+                         pspecs: Any = None) -> Any:
+    """FSDP param materialization that moves int8 instead of FP32.
+
+    Each ``data``-sharded leaf is quantized ONCE per step on its home shard
+    and all-gathered as limb planes + per-shard exponents — ``4/L`` fewer
+    bytes over the FSDP link (4x at int8).  Leaves without a ``data`` dim
+    never travel, so they pass through untouched (bit-exact FP32).
+
+    The whole map is wrapped in a straight-through ``custom_vjp``: the
+    cotangent of the gathered (quantized) params flows to the FP32 masters
+    unchanged, so autodiff never enters the shard_map and XLA still
+    reduce-scatters the gradient per the param out-shardings.
+    """
+    if pspecs is None:
+        pspecs = param_pspecs(params, mesh, fsdp=True)
+    if "data" not in mesh.axis_names:
+        return jax.tree.map(lambda p: qtensor.fake_quant_ste(p, bits), params)
+
+    def impl(ps):
+        def one(p, ns):
+            spec = ns.spec if isinstance(ns, NamedSharding) else ns
+            d = _fsdp_dim(spec)
+            if d is None:
+                return p
+            return _gathered_leaf(mesh, spec, d, bits)(p)
+        return jax.tree.map(one, ps, pspecs)
+
+    @jax.custom_vjp
+    def qgather(ps):
+        return impl(ps)
+
+    qgather.defvjp(lambda ps: (impl(ps), None), lambda _, ct: (ct,))
+    return qgather(params)

@@ -13,7 +13,15 @@ Design goals (1000+ node posture, DESIGN.md §5):
 * **keep-k retention** with never-deleting the most recent complete step.
 
 Storage format: one ``.npy`` per leaf (memory-mappable for huge arrays) +
-a JSON manifest of the pytree structure.
+a JSON manifest of the pytree structure.  QTensor state (quantized FSDP
+moments, DESIGN.md §7) serializes natively: the container is a registered
+pytree with named fields, so its int8 limb planes and int32 exponents land
+as ordinary leaves (``opt.m.<param>.m`` / ``.exp``) — an int8-moment
+checkpoint is ~4x smaller than its FP32 twin with zero format changes, and
+elastic re-sharding on restore works unchanged.  The manifest records each
+leaf's dtype/shape so a restore into a mismatched state layout (e.g. an
+FP32-moment checkpoint into a ``state_bits=8`` optimizer) fails loudly
+instead of silently value-casting floats into mantissa planes.
 """
 from __future__ import annotations
 
@@ -59,7 +67,8 @@ def save(ckpt_dir: str, step: int, state: Dict[str, Any],
         arr = np.asarray(jax.device_get(leaf))
         fname = f"leaf_{i:05d}.npy"
         np.save(os.path.join(tmp, fname), arr)
-        manifest["leaves"][name] = fname
+        manifest["leaves"][name] = {"file": fname, "dtype": str(arr.dtype),
+                                    "shape": list(arr.shape)}
     treedef = jax.tree.structure(state)
     manifest["treedef"] = str(treedef)
     with open(os.path.join(tmp, _MANIFEST), "w") as f:
@@ -106,12 +115,22 @@ def restore(ckpt_dir: str, step: int, like: Dict[str, Any],
                   if shardings is not None else [None] * len(named))
     out = []
     for (name, ref), shd in zip(named, shard_flat):
-        fname = manifest["leaves"].get(name)
-        if fname is None:
+        entry = manifest["leaves"].get(name)
+        if entry is None:
             raise KeyError(f"checkpoint missing leaf {name!r}")
+        # pre-QTensor manifests stored the bare filename
+        fname = entry["file"] if isinstance(entry, dict) else entry
         arr = np.load(os.path.join(path, fname), mmap_mode="r")
         if hasattr(ref, "shape") and tuple(arr.shape) != tuple(ref.shape):
             raise ValueError(f"{name}: saved {arr.shape} != expected {ref.shape}")
+        if (hasattr(ref, "dtype") and arr.dtype != ref.dtype
+                and not np.can_cast(arr.dtype, ref.dtype, casting="same_kind")):
+            raise ValueError(
+                f"{name}: saved dtype {arr.dtype} cannot restore into "
+                f"{np.dtype(ref.dtype)} — the checkpoint's state layout does "
+                "not match (e.g. FP32 moments into a quantized state_bits "
+                "optimizer); restore with the matching OptimizerConfig or "
+                "re-init the optimizer state")
         if shd is not None:
             out.append(jax.device_put(np.asarray(arr), shd))
         else:

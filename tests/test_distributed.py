@@ -151,6 +151,124 @@ def test_compressed_psum_matches_plain_mean():
     assert "COMPRESS_OK" in out
 
 
+def test_quantized_all_gather_matches_per_shard_fake_quant():
+    """The int8 QTensor param all-gather (sharding.quantized_all_gather) is
+    bit-identical to quantizing each FSDP shard at its own scalar exponent
+    and concatenating the dequantized images — the wire moved limb planes +
+    per-shard exponents, never f32.  Bits come from $REPRO_GATHER_BITS (the
+    state-plane CI leg pins 8)."""
+    out = _run("""
+        import os
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro import sharding
+        from repro.core import qtensor
+
+        bits = int(os.environ.get("REPRO_GATHER_BITS") or 8)
+        mesh = sharding.make_mesh_compat((4, 2), ("data", "model"))
+        key = jax.random.PRNGKey(0)
+        params = {
+            "w": jax.random.normal(key, (8, 16)),          # data x model
+            "v": jax.random.normal(jax.random.fold_in(key, 1), (6, 4)),
+            "g": jax.random.normal(jax.random.fold_in(key, 2), (12,)),
+        }
+        pspecs = {
+            "w": NamedSharding(mesh, P("data", "model")),
+            "v": NamedSharding(mesh, P(None, "data")),
+            "g": NamedSharding(mesh, P()),                 # replicated
+        }
+        params = {k: jax.device_put(v, pspecs[k]) for k, v in params.items()}
+        got = jax.jit(lambda p: sharding.quantized_all_gather(
+            p, mesh, bits=bits, pspecs=pspecs))(params)
+
+        def fq(x):
+            return qtensor.dequantize(qtensor.quantize(x, bits))
+
+        def ref_leaf(x, axis, n_shards):
+            shards = jnp.split(x, n_shards, axis=axis)
+            return jnp.concatenate([fq(s) for s in shards], axis=axis)
+
+        # w is sharded on BOTH axes: each device's (data x model) block
+        # quantizes at its own scalar exponent before the data gather
+        ref_w = jnp.concatenate(
+            [jnp.concatenate([fq(c) for c in jnp.split(r, 2, axis=1)],
+                             axis=1)
+             for r in jnp.split(jax.device_get(params["w"]), 4, axis=0)],
+            axis=0)
+        ref = {"w": ref_w,
+               "v": ref_leaf(jax.device_get(params["v"]), 1, 4),
+               "g": jax.device_get(params["g"])}           # untouched
+        for k in params:
+            np.testing.assert_array_equal(np.asarray(got[k]),
+                                          np.asarray(ref[k]), err_msg=k)
+
+        # gradients flow straight through the gather (custom_vjp identity)
+        gr = jax.grad(lambda p: sum(
+            jnp.sum(x) for x in jax.tree.leaves(
+                sharding.quantized_all_gather(p, mesh, bits=bits,
+                                              pspecs=pspecs))))(params)
+        for k, g in gr.items():
+            assert g.shape == params[k].shape
+            np.testing.assert_array_equal(np.asarray(g),
+                                          np.ones_like(np.asarray(g)))
+        print('QGATHER_PARITY_OK')
+    """)
+    assert "QGATHER_PARITY_OK" in out
+
+
+def test_quantized_state_plane_tracks_fp32_baseline():
+    """The ISSUE 8 acceptance run: 200 multi-host-sim steps with the int8
+    param all-gather (gather_bits=8, genuinely FSDP-sharded params) AND int8
+    SR-EMA Adam moments track the FP32-state baseline's loss within 1%."""
+    out = _run("""
+        import os
+        import jax, jax.numpy as jnp, numpy as np
+        from repro import sharding
+        from repro.configs import registry
+        from repro.core.qconfig import QuantConfig
+        from repro.data.pipeline import DataConfig, SyntheticLM
+        from repro.models import lm
+        from repro.train import optimizer as opt_lib, trainer
+
+        cfg = registry.get_config('smollm-135m').reduced()
+        qcfg = QuantConfig.fp32()
+        key = jax.random.PRNGKey(0)
+        mesh = sharding.make_mesh_compat((4, 2), ("data", "model"))
+        sharding.set_mesh(mesh)
+        gb = int(os.environ.get("REPRO_GATHER_BITS") or 8)
+
+        def run(gather_bits, state_bits, steps=200):
+            opt_cfg = opt_lib.OptimizerConfig(lr=2e-3, weight_decay=0.0,
+                                              state_bits=state_bits)
+            params, opt_state, pspecs = trainer.init_train_state(
+                lambda k: lm.lm_init(k, cfg), key, mesh, fsdp=True,
+                opt_cfg=opt_cfg)
+            tcfg = trainer.TrainConfig(gather_bits=gather_bits)
+            step = trainer.jit_train_step(
+                trainer.make_train_step(lm.lm_loss, cfg, qcfg, opt_cfg,
+                                        tcfg, mesh=mesh, param_specs=pspecs),
+                mesh, pspecs, opt_state_like=opt_state)
+            data = SyntheticLM(DataConfig(batch_size=8, seq_len=32,
+                                          vocab=cfg.vocab, seed=3))
+            losses = []
+            for i in range(steps):
+                batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+                params, opt_state, m = step(params, opt_state, batch,
+                                            jax.random.fold_in(key, i))
+                losses.append(float(m["loss"]))
+            return losses
+
+        base = run(0, 0)
+        quant = run(gb, 8)
+        tail_b = float(np.mean(base[-20:]))
+        tail_q = float(np.mean(quant[-20:]))
+        assert quant[-1] < quant[0] - 0.5, (quant[0], quant[-1])
+        assert abs(tail_q - tail_b) / tail_b < 0.01, (tail_b, tail_q)
+        print('TRACKING_OK', tail_b, tail_q)
+    """)
+    assert "TRACKING_OK" in out
+
+
 def test_multipod_mesh_shapes():
     out = _run("""
         from repro.launch.mesh import make_production_mesh

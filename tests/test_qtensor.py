@@ -1,0 +1,214 @@
+"""QTensor — the DFX int8 state container (core/qtensor.py).
+
+Three property groups:
+* pytree semantics — jit/scan treat a QTensor as a transparent container
+  (static ``bits`` aux, stable treedef as a carry, named key paths);
+* the quantize/dequantize round trip — one-step accuracy, exact
+  idempotence, exact mantissa recovery, group exponents;
+* the stochastic-rounding EMA — unbiasedness makes the quantized moment
+  mean-preserving (deterministic many-key check always; a hypothesis
+  property sweep when hypothesis is installed, mirroring
+  test_dfx_properties.py).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import qtensor
+from repro.kernels.dfx_quant import n_limbs
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ----------------------------- pytree ------------------------------------
+
+def test_qtensor_is_transparent_pytree():
+    t = qtensor.quantize(jax.random.normal(KEY, (4, 8)), 8)
+    leaves, tdef = jax.tree_util.tree_flatten(t)
+    assert len(leaves) == 2                      # m, exp — bits is static aux
+    t2 = jax.tree_util.tree_unflatten(tdef, leaves)
+    assert isinstance(t2, qtensor.QTensor) and t2.bits == 8
+    # same width => same treedef; different width => different treedef
+    same = jax.tree.structure(qtensor.quantize(jnp.ones((4, 8)), 8))
+    assert jax.tree.structure(t) == same
+    assert jax.tree.structure(qtensor.quantize(jnp.ones((4, 8)), 16)) != same
+
+
+def test_qtensor_key_paths_name_m_and_exp():
+    t = qtensor.quantize(jnp.ones((4,)), 8)
+    paths = [jax.tree_util.keystr(p)
+             for p, _ in jax.tree_util.tree_flatten_with_path(t)[0]]
+    assert paths == [".m", ".exp"]
+
+
+def test_qtensor_through_jit_and_scan():
+    x = jax.random.normal(KEY, (16,))
+    t0 = qtensor.quantize(x, 8)
+
+    @jax.jit
+    def deq(t):
+        return qtensor.dequantize(t)
+
+    np.testing.assert_array_equal(np.asarray(deq(t0)),
+                                  np.asarray(qtensor.dequantize(t0)))
+
+    # a QTensor is a jit/scan-stable carry: ema_update keeps the layout
+    def body(t, i):
+        t = qtensor.ema_update(t, x * (1.0 + 0.1 * i), 0.9,
+                               jax.random.fold_in(KEY, i))
+        return t, qtensor.dequantize(t).sum()
+
+    tN, sums = jax.lax.scan(body, t0, jnp.arange(5))
+    assert isinstance(tN, qtensor.QTensor)
+    assert tN.m.shape == t0.m.shape and tN.exp.shape == t0.exp.shape
+    assert sums.shape == (5,)
+
+
+def test_tree_map_with_is_leaf_sees_qtensors_as_leaves():
+    tree = {"a": qtensor.quantize(jnp.ones((3,)), 8), "b": jnp.zeros((2,))}
+    seen = []
+    jax.tree.map(lambda x: seen.append(type(x).__name__) or x, tree,
+                 is_leaf=qtensor.is_qtensor)
+    assert sorted(seen) == ["ArrayImpl", "QTensor"]
+
+
+# ------------------------ quantize / dequantize ---------------------------
+
+@pytest.mark.parametrize("bits", [8, 16])
+def test_round_trip_within_one_step_and_idempotent(bits):
+    x = jax.random.normal(KEY, (64, 32)) * 3.0
+    t = qtensor.quantize(x, bits)
+    assert t.m.dtype == jnp.int8 and t.m.shape == (n_limbs(bits), 64, 32)
+    y = qtensor.dequantize(t)
+    step = 2.0 ** float(t.exp)
+    assert float(jnp.abs(y - x).max()) <= 0.5 * step + 1e-12
+    # a dequantized image re-quantizes bit-exactly (the fixed point)
+    t2 = qtensor.quantize(y, bits)
+    np.testing.assert_array_equal(np.asarray(t2.m), np.asarray(t.m))
+    assert int(t2.exp) == int(t.exp)
+    np.testing.assert_array_equal(np.asarray(qtensor.dequantize(t2)),
+                                  np.asarray(y))
+
+
+@pytest.mark.parametrize("bits", [8, 16])
+def test_int_mantissa_recovers_exact_value(bits):
+    """Plane combination is lossless: the logical int32 mantissa times the
+    (repo-convention ``jnp.exp2``) scale IS the dequantized image, bit for
+    bit — the property the compressed psum relies on to sum mantissas."""
+    x = jax.random.normal(jax.random.fold_in(KEY, 1), (128,))
+    t = qtensor.quantize(x, bits)
+    m = qtensor.int_mantissa(t)
+    lim = 2 ** (bits - 1) - 1
+    assert int(jnp.abs(m).max()) <= lim
+    np.testing.assert_array_equal(
+        np.asarray(m.astype(jnp.float32)
+                   * jnp.exp2(t.exp.astype(jnp.float32))),
+        np.asarray(qtensor.dequantize(t)))
+
+
+def test_group_axis_exponents_scale_per_slice():
+    # two layers with wildly different magnitudes: a per-tensor scale would
+    # crush the small layer to zero; per-group keeps both
+    x = jnp.stack([jnp.full((16,), 1e-4), jnp.full((16,), 1e2)])
+    t = qtensor.quantize(x, 8, group_axis=0)
+    assert t.exp.shape == (2, 1) and t.group_axis == 0
+    y = qtensor.dequantize(t)
+    np.testing.assert_allclose(np.asarray(y[0]), 1e-4, rtol=2 ** -6)
+    np.testing.assert_allclose(np.asarray(y[1]), 1e2, rtol=2 ** -6)
+
+
+def test_zeros_round_trips_and_matches_quantize_of_zeros():
+    z = qtensor.zeros((4, 8), 8, group_axis=0)
+    assert float(jnp.abs(qtensor.dequantize(z)).max()) == 0.0
+    q = qtensor.quantize(jnp.zeros((4, 8)), 8, group_axis=0)
+    np.testing.assert_array_equal(np.asarray(q.m), np.asarray(z.m))
+    np.testing.assert_array_equal(np.asarray(q.exp), np.asarray(z.exp))
+
+
+def test_wire_bytes_accounting():
+    t8 = qtensor.quantize(jnp.ones((64, 32)), 8)
+    t16 = qtensor.quantize(jnp.ones((64, 32)), 16)
+    assert t8.nbytes == qtensor.wire_bytes(64 * 32, 8) == 64 * 32 + 4
+    assert t16.nbytes == qtensor.wire_bytes(64 * 32, 16) == 3 * 64 * 32 + 4
+    # the headline ratio: f32 params vs their int8 QTensor form
+    assert (4 * 64 * 32) / t8.nbytes >= 3.5
+
+
+def test_fake_quant_ste_identity_gradient():
+    x = jax.random.normal(KEY, (32,)) * 2.0
+    y, vjp = jax.vjp(lambda x: qtensor.fake_quant_ste(x, 8), x)
+    np.testing.assert_array_equal(
+        np.asarray(y), np.asarray(qtensor.dequantize(qtensor.quantize(x, 8))))
+    ct = jax.random.normal(jax.random.fold_in(KEY, 2), (32,))
+    np.testing.assert_array_equal(np.asarray(vjp(ct)[0]), np.asarray(ct))
+
+
+# --------------------- stochastic-rounding EMA ----------------------------
+
+def test_sr_ema_is_mean_preserving():
+    """E[Q_sr(y)] = y: averaged over keys, the quantized EMA sits on the
+    FP32 EMA — the property that keeps quantized Adam moments unbiased."""
+    x = jax.random.normal(KEY, (256,))
+    t = qtensor.quantize(jax.random.normal(jax.random.fold_in(KEY, 1),
+                                           (256,)), 8)
+    exact = 0.9 * qtensor.dequantize(t) + 0.1 * x
+
+    @jax.jit
+    def one(k):
+        return qtensor.dequantize(qtensor.ema_update(t, x, 0.9, k))
+
+    n = 512
+    mean = sum(np.asarray(one(jax.random.fold_in(KEY, 100 + i)))
+               for i in range(n)) / n
+    step = 2.0 ** float(t.exp)
+    # SR noise is bounded by one step; the mean estimate concentrates as
+    # step/sqrt(n) — 6 sigma leaves the test deterministic-stable
+    bias = np.abs(mean - np.asarray(exact)).max()
+    assert bias <= 6.0 * step / np.sqrt(n), (bias, step)
+
+
+def test_sr_ema_moves_sub_step_updates_in_expectation():
+    """Round-to-nearest would freeze an EMA whose per-step delta is below
+    half a quantization step; stochastic rounding advances it on average."""
+    t = qtensor.quantize(jnp.zeros((64,)) + 1.0, 8)
+    step = 2.0 ** float(t.exp)
+    x = jnp.full((64,), 1.0 + 0.2 * step)        # delta ≈ 0.02·step after decay
+    out = t
+    for i in range(200):
+        out = qtensor.ema_update(out, x, 0.9, jax.random.fold_in(KEY, i))
+    drift = float(jnp.mean(qtensor.dequantize(out) - 1.0))
+    assert drift > 0.05 * step, (drift, step)    # RTN would give exactly 0
+
+
+# ---------------------- hypothesis property sweep -------------------------
+# Guarded like test_qpolicy_properties.py: the deterministic checks above
+# always run; the randomized sweep only when hypothesis is installed.
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(decay=st.floats(0.5, 0.999), scale=st.floats(1e-3, 1e3),
+           seed=st.integers(0, 2 ** 16))
+    def test_sr_ema_mean_preservation_property(decay, scale, seed):
+        k = jax.random.PRNGKey(seed)
+        x = jax.random.normal(k, (128,)) * scale
+        t = qtensor.quantize(jax.random.normal(jax.random.fold_in(k, 1),
+                                               (128,)) * scale, 8)
+        exact = decay * qtensor.dequantize(t) + (1 - decay) * x
+
+        @jax.jit
+        def one(kk):
+            return qtensor.dequantize(qtensor.ema_update(t, x, decay, kk))
+
+        n = 128
+        mean = sum(np.asarray(one(jax.random.fold_in(k, 10 + i)))
+                   for i in range(n)) / n
+        step = 2.0 ** float(t.exp)
+        assert np.abs(mean - np.asarray(exact)).max() \
+            <= 8.0 * step / np.sqrt(n)

@@ -17,7 +17,7 @@ import pytest
 
 from repro.analysis import budget, count_eqns, count_pallas_calls, rules, \
     walker
-from repro.core import dfx, int_ops, qpolicy
+from repro.core import dfx, int_ops, qpolicy, qtensor
 from repro.core.qconfig import QuantConfig
 from repro.core.qpolicy import QuantPolicy, ScopeRule
 
@@ -131,6 +131,23 @@ def test_ql001_flags_sim_mantissa_dot():
     f = rules.check_integer_closure(jx)
     assert "QL001" in _codes(f)
     assert any("dot_general" in x.message for x in f)
+
+
+def test_ql001_walks_qtensor_ops_clean():
+    """The state plane's container ops — quantize (grouped, stochastic),
+    dequantize, the SR-EMA moment update, the straight-through fake quant —
+    build mantissas with the exact-f32 balanced split (floor-based), never
+    integer div/rem chains or an XLA integer dot: QL001 must stay silent
+    over the whole QTensor surface (DESIGN.md §7)."""
+    def state_ops(x, key):
+        t = qtensor.quantize(x, 16, group_axis=0)
+        t = qtensor.ema_update(t, x * 0.5, 0.9, key)
+        return qtensor.dequantize(t) + qtensor.fake_quant_ste(x, 8)
+    jx = jax.make_jaxpr(state_ops)(jnp.ones((4, 8)), KEY)
+    assert not rules.check_integer_closure(jx)
+    # the full graph-rule battery is silent too (one SR draw per key; no
+    # reductions near an accumulator budget; no f32 collective)
+    assert not rules.run_rules(jx)
 
 
 # =========================================================================
@@ -286,6 +303,59 @@ def test_ql006_conv_bwd_digit_split_is_clean():
         lambda w: jnp.sum(int_ops.int_conv1d_depthwise(x, w, None, cfg) ** 2)
     ))(w)
     assert not rules.check_accum_budget(jx)
+
+
+# =========================================================================
+# QL007 — wire format
+# =========================================================================
+
+def test_ql007_flags_quantize_after_f32_gather():
+    """The wasteful order: gather full-width bytes, then quantize the
+    gathered copy — the b-bit form exists, so the wire should have carried
+    it (sharding.quantized_all_gather's whole point)."""
+    def broken(x):
+        g = jax.lax.all_gather(x, "data")                  # f32 on the wire
+        m = jnp.clip(jnp.round(g * 127.0), -127, 127).astype(jnp.int8)
+        return m.astype(jnp.float32) / 127.0
+    jx = jax.make_jaxpr(broken, axis_env=[("data", 4)])(jnp.ones((8,)))
+    f = rules.check_wire_format(jx)
+    assert _codes(f) == ["QL007"]
+    assert any("all_gather" in x.message for x in f)
+
+
+def test_ql007_flags_f32_gather_of_elsewhere_quantized_tensor():
+    """Order-independent: an f32 gather of a tensor the graph quantizes in
+    another branch is the same waste."""
+    def broken(x):
+        m = jnp.clip(jnp.round(x * 127.0), -127, 127).astype(jnp.int8)
+        g = jax.lax.all_gather(x, "data")
+        return g.sum() + m.astype(jnp.float32).sum()
+    jx = jax.make_jaxpr(broken, axis_env=[("data", 4)])(jnp.ones((8,)))
+    assert _codes(rules.check_wire_format(jx)) == ["QL007"]
+
+
+def test_ql007_quantized_gather_is_clean():
+    """The shipped shape: the collective moves int8 limb planes and the
+    per-shard exponent; no full-width tensor crosses the wire."""
+    def clean(x):
+        t = qtensor.quantize(x, 8)
+        m = jax.lax.all_gather(t.m, "data")                # int8 planes
+        e = jax.lax.all_gather(t.exp, "data")              # int32 exponents
+        shards = jax.vmap(
+            lambda mm, ee: qtensor.dequantize(
+                qtensor.QTensor(m=mm, exp=ee, bits=8)))(m, e)
+        return shards.reshape(-1)
+    jx = jax.make_jaxpr(clean, axis_env=[("data", 4)])(jnp.ones((8,)))
+    assert not rules.check_wire_format(jx)
+
+
+def test_ql007_plain_f32_gather_without_qtensor_form_is_clean():
+    """An f32 gather alone is legitimate (nothing proves a quantized form
+    exists) — QL007 only fires on the contradiction."""
+    def clean(x):
+        return jax.lax.all_gather(x, "data").sum() * 2.0
+    jx = jax.make_jaxpr(clean, axis_env=[("data", 4)])(jnp.ones((8,)))
+    assert not rules.check_wire_format(jx)
 
 
 # =========================================================================
