@@ -429,27 +429,131 @@ def attention_report(repeats: int = 3) -> dict:
             "presets": rows}
 
 
-def run(repeats: int = 3) -> dict:
+def robustness_report(steps: int = 20) -> dict:
+    """Fault-injection recovery + sentinel skip, measured end to end.
+
+    Two experiments on a deterministic toy objective through ``int_linear``
+    (pure function of (state, step), so restore-and-replay must reproduce the
+    clean trajectory *exactly*):
+
+    * ``chaos_vs_clean`` — a 20-step loop with an injected preemption, a
+      state bit-flip and a dropped psum participant, recovered by
+      ``run_with_recovery`` + crc-verified checkpoints; reports the
+      structured event feed and the final-state delta vs the uninjected run
+      (acceptance: exactly 0.0).
+    * ``sentinel_skip`` — the sentinel step with an injected NaN gradient;
+      reports the skipped flag and whether params/opt-state pass through the
+      skipped step bit-identical (acceptance: yes).
+    """
+    import tempfile
+
+    from repro.train import (chaos as chaos_lib, checkpoint, fault,
+                             optimizer as opt_lib, sentinel as sentinel_lib)
+
+    key = jax.random.PRNGKey(0)
+    cfg_q = dataclasses.replace(QuantConfig.int8(), stochastic_grad=False)
+    w0 = jax.random.normal(key, (16, 16)) * 0.1
+    x = jax.random.normal(jax.random.fold_in(key, 1), (8, 16))
+
+    def loss(w):
+        return jnp.mean(int_ops.int_linear(x, w, None, None, cfg_q) ** 2)
+
+    sgd = jax.jit(lambda w: w - 0.1 * jax.grad(loss)(w))
+
+    def run_loop(ccfg, ckpt_dir):
+        events = []
+        monkey = chaos_lib.ChaosMonkey(ccfg)
+
+        def step_fn(state, step):
+            return {"w": sgd(state["w"])}
+
+        def restore_fn():
+            got = checkpoint.restore_latest(ckpt_dir, {"w": w0},
+                                            on_event=events.append)
+            if got is None:
+                return {"w": w0}, 0
+            return got
+
+        final = fault.run_with_recovery(
+            monkey.wrap(step_fn), {"w": w0}, start_step=0, num_steps=steps,
+            save_fn=lambda st, k: checkpoint.save(ckpt_dir, k, st),
+            restore_fn=restore_fn, save_every=5, on_event=events.append)
+        return final, events
+
+    with tempfile.TemporaryDirectory() as d:
+        clean, _ = run_loop(chaos_lib.ChaosConfig(), d)
+    with tempfile.TemporaryDirectory() as d:
+        chaotic, events = run_loop(chaos_lib.ChaosConfig(
+            seed=7, preempt_at=(7,), bitflip_at=(12,), drop_psum_at=(16,),
+            ckpt_dir=d), d)
+    delta = float(jnp.abs(clean["w"] - chaotic["w"]).max())
+
+    # sentinel: one injected-NaN step must skip with bit-identical state
+    def toy_loss(params, batch, cfg, qcfg, key):
+        y = int_ops.int_linear(batch["x"], params["w"], None, None, cfg_q)
+        return jnp.mean(y ** 2), {"ce": jnp.mean(jnp.abs(y))}
+
+    params = {"w": w0}
+    opt_state = opt_lib.init(params)
+    batch = {"x": x}
+    step = jax.jit(sentinel_lib.make_sentinel_step(
+        toy_loss, None, cfg_q, opt_lib.OptimizerConfig(lr=1e-2)))
+    _, _, m_clean = step(params, opt_state, batch, key, jnp.float32(0.0))
+    p2, o2, m_inj = step(params, opt_state, batch, key, jnp.float32(1.0))
+    ident = lambda a, b: all(                             # noqa: E731
+        bool(jnp.all(u == v))
+        for u, v in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
     return {
+        "chaos_vs_clean": {
+            "steps": steps,
+            "injected": ["preempt@7", "bitflip@12", "drop_psum@16"],
+            "events": events,
+            "final_state_max_abs_delta": delta,
+            "recovered_exactly": delta == 0.0,
+        },
+        "sentinel_skip": {
+            "clean_skipped": float(m_clean["skipped"]),
+            "injected_skipped": float(m_inj["skipped"]),
+            "params_bit_identical_through_skip": ident(p2, params),
+            "opt_state_bit_identical_through_skip": ident(o2, opt_state),
+            "grad_nonfinite_count": float(m_inj["health"]["grads"]["nonfinite"]),
+        },
+    }
+
+
+def run(repeats: int = 3, only: str = None) -> dict:
+    sections = {
+        "presets": lambda: [compare_preset(p, repeats) for p in PRESETS],
+        "moe_dispatch": moe_dispatch_report,
+        "matmul_dispatch": lambda: matmul_dispatch_report(repeats=repeats),
+        "norm_bwd": lambda: norm_bwd_report(repeats=repeats),
+        "policy": lambda: policy_report(repeats=repeats),
+        "state_plane": state_plane_report,
+        "attention": lambda: attention_report(repeats=repeats),
+        "robustness": robustness_report,
+    }
+    if only is not None and only not in sections:
+        raise SystemExit(f"unknown section {only!r}; "
+                         f"choose from {sorted(sections)}")
+    doc = {
         "task": "backend_compare",
         "backend_device": jax.default_backend(),
         "pallas_interpret": jax.default_backend() != "tpu",
-        "presets": [compare_preset(p, repeats) for p in PRESETS],
-        "moe_dispatch": moe_dispatch_report(),
-        "matmul_dispatch": matmul_dispatch_report(repeats=repeats),
-        "norm_bwd": norm_bwd_report(repeats=repeats),
-        "policy": policy_report(repeats=repeats),
-        "state_plane": state_plane_report(),
-        "attention": attention_report(repeats=repeats),
     }
+    for name, fn in sections.items():
+        if only is None or name == only:
+            doc[name] = fn()
+    return doc
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--only", default=None,
+                    help="emit a single section (e.g. robustness)")
     ap.add_argument("--out", default=None, help="write JSON here (else stdout)")
     args = ap.parse_args()
-    doc = run(args.repeats)
+    doc = run(args.repeats, only=args.only)
     text = json.dumps(doc, indent=2)
     if args.out:
         with open(args.out, "w") as f:

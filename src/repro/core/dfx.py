@@ -329,6 +329,35 @@ def dfx_matmul(a: DfxTensor, b: DfxTensor,
 
 
 # ---------------------------------------------------------------------------
+# Health counters (runtime sentinel probes — core/health.py)
+# ---------------------------------------------------------------------------
+
+def health_stats(x: jax.Array, bits: int) -> dict:
+    """Counters of mapping ``x`` at ``bits``: clip rate at the
+    ``jnp.clip(y, -lim, lim)`` saturation point of :func:`quantize`, mantissa
+    zero-fraction (underflow proxy), step exponent, non-finite count.
+
+    Same frexp/step arithmetic as ``quantize`` but on sanitized magnitudes —
+    a single NaN must raise the ``nonfinite`` counter, not poison the amax
+    (and thereby every other counter).  Plain XLA reductions over a tensor
+    already resident: zero extra ``pallas_call`` dispatches.
+    """
+    x = x.astype(jnp.float32)
+    finite = jnp.isfinite(x)
+    ax = jnp.where(finite, jnp.abs(x), 0.0)
+    e = _scale_exponent(ax, None)
+    exp = (e - (bits - 1)).astype(jnp.int32)
+    y = jnp.round(ax * jnp.exp2(-exp.astype(jnp.float32)))
+    lim = float(2 ** (bits - 1) - 1)
+    return {
+        "clip": jnp.mean((y >= lim).astype(jnp.float32)),
+        "zero": jnp.mean((y == 0).astype(jnp.float32)),
+        "nonfinite": jnp.sum(~finite).astype(jnp.float32),
+        "exp": exp.astype(jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
 # Error-bound helpers (Proposition 1) — used by property tests and monitors
 # ---------------------------------------------------------------------------
 

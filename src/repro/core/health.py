@@ -1,0 +1,177 @@
+"""In-graph numerics health counters — the runtime sentinel's eyes.
+
+Every integer call site in the model stack can report a tiny bundle of
+health statistics about the tensor it is about to quantize: the clip rate
+at the ``jnp.clip(y, -lim, lim)`` saturation point of ``core/dfx.py``, the
+mantissa zero-fraction (gradient-underflow proxy), the scale exponent, and
+a non-finite element count.  The counters are plain XLA reductions over
+tensors already resident in the forward pass — **zero** extra
+``pallas_call`` dispatches, pinned by ``benchmarks/dispatch_baseline.json``
+and tests/test_chaos.py.
+
+Collection mirrors ``qpolicy.record_resolutions``: a context-manager
+installs a process-global sink; ``probe()`` is a strict NO-OP tracing zero
+ops when no sink is active, so the default jaxpr is byte-identical to the
+pre-sentinel one (the jaxpr-identity invariant of tests/test_qpolicy.py).
+
+Scan-stacked layers need one extra wrinkle: a value computed inside a
+``lax.scan`` / ``jax.checkpoint`` body cannot escape through a Python
+global (tracer leak).  The models therefore open a :func:`frame` *inside*
+the traced body, return ``frame.harvest()`` as the scan's stacked y-output,
+and feed the ``(L, ...)``-stacked counters back into the outer collector
+with :func:`record_stacked` after the scan.  Per-layer tags are
+canonicalized (``blocks.3.attn`` → ``blocks.*.attn``) so every layer of a
+run reports under one key and multi-group scan concatenation stays
+structure-compatible.
+
+``suspend()`` masks probes over paths whose traced values must stay
+byte-identical regardless of an active collector (serve decode, the hybrid
+family's nested scans).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dfx
+
+__all__ = ["collect", "frame", "suspend", "active", "probe",
+           "record_stacked", "merge", "summarize"]
+
+#: counter name -> cross-site / cross-layer reduction
+REDUCTIONS = {"clip": jnp.max, "zero": jnp.max,
+              "nonfinite": jnp.sum, "exp": jnp.max}
+
+Stats = Dict[str, jax.Array]
+
+_SINK: Optional[Dict[str, Stats]] = None
+_FRAMES: List[Dict[str, Stats]] = []
+_SUSPENDED: int = 0
+
+
+def active() -> bool:
+    """True when a probe would record (collector installed, not suspended)."""
+    return _SINK is not None and _SUSPENDED == 0
+
+
+#: counters of quantizing a tensor (see dfx.health_stats — single-sourced
+#: with the quantizer's own clip/step arithmetic)
+stats = dfx.health_stats
+
+
+def _merge_into(sink: Dict[str, Stats], tag: str, s: Stats) -> None:
+    prev = sink.get(tag)
+    if prev is None:
+        sink[tag] = dict(s)
+    else:
+        sink[tag] = {k: REDUCTIONS[k](jnp.stack([prev[k], s[k]]))
+                     for k in REDUCTIONS}
+
+
+def canonical_tag(path: Tuple[str, ...]) -> str:
+    """Dotted tag with layer indices wildcarded (``blocks.3`` → ``blocks.*``)
+    so scan-stacked layers of one run share a key and multi-group scans
+    concatenate structure-compatible harvests."""
+    def wild(seg: str) -> str:
+        s = seg[1:] if seg.startswith("-") else seg
+        return "*" if s.isdigit() else seg
+    return ".".join(wild(s) for s in path)
+
+
+def probe(path: Tuple[str, ...], x: jax.Array, bits: int) -> None:
+    """Record health counters for ``x`` under ``path``.  Traces ZERO ops
+    when inactive — the no-collector jaxpr is byte-identical."""
+    if not active():
+        return
+    sink = _FRAMES[-1] if _FRAMES else _SINK
+    _merge_into(sink, canonical_tag(path), stats(x, bits))
+
+
+class collect:
+    """Install a health sink for the block; yields the tag->stats dict."""
+
+    def __enter__(self) -> Dict[str, Stats]:
+        global _SINK
+        self._prev = _SINK
+        self.health: Dict[str, Stats] = {}
+        _SINK = self.health
+        return self.health
+
+    def __exit__(self, *exc):
+        global _SINK
+        _SINK = self._prev
+        return False
+
+
+class frame:
+    """Scoped sink for probes issued inside a scanned/rematted body.
+
+    ``harvest()`` returns the frame's tag->stats dict (or ``None`` when no
+    collector is active) — returned as the scan's y-output so the tracers
+    ride out of the loop legally."""
+
+    def __enter__(self) -> "frame":
+        if active():
+            self._fr: Optional[Dict[str, Stats]] = {}
+            _FRAMES.append(self._fr)
+        else:
+            self._fr = None
+        return self
+
+    def __exit__(self, *exc):
+        if self._fr is not None:
+            _FRAMES.pop()
+        return False
+
+    def harvest(self) -> Optional[Dict[str, Stats]]:
+        return self._fr if self._fr else None
+
+
+class suspend:
+    """Mask probes for the block (serve paths, nested hybrid scans)."""
+
+    def __enter__(self):
+        global _SUSPENDED
+        _SUSPENDED += 1
+        return self
+
+    def __exit__(self, *exc):
+        global _SUSPENDED
+        _SUSPENDED -= 1
+        return False
+
+
+def record_stacked(stacked: Optional[Dict[str, Stats]]) -> None:
+    """Reduce ``(L, ...)``-stacked per-layer counters (a scan's harvested
+    y-output) over the layer axis and merge into the active sink."""
+    if stacked is None or not active():
+        return
+    sink = _FRAMES[-1] if _FRAMES else _SINK
+    for tag, s in stacked.items():
+        red = {"clip": jnp.max(s["clip"]), "zero": jnp.max(s["zero"]),
+               "nonfinite": jnp.sum(s["nonfinite"]),
+               "exp": jnp.max(s["exp"])}
+        _merge_into(sink, tag, red)
+
+
+def merge(a: Dict[str, Stats], b: Dict[str, Stats]) -> Dict[str, Stats]:
+    """Merge two harvested health dicts (same reductions as probing)."""
+    out = {t: dict(s) for t, s in a.items()}
+    for t, s in b.items():
+        _merge_into(out, t, s)
+    return out
+
+
+def summarize(health: Dict[str, Stats]) -> Stats:
+    """Whole-model scalars: max clip/zero rate, total non-finite count."""
+    if not health:
+        z = jnp.float32(0)
+        return {"clip": z, "zero": z, "nonfinite": z}
+    return {
+        "clip": jnp.max(jnp.stack([s["clip"] for s in health.values()])),
+        "zero": jnp.max(jnp.stack([s["zero"] for s in health.values()])),
+        "nonfinite": jnp.sum(jnp.stack([s["nonfinite"]
+                                        for s in health.values()])),
+    }

@@ -294,12 +294,25 @@ class PolicyScopeError(ValueError):
 
 def _env_default_rules() -> Tuple[ScopeRule, ...]:
     """Rules layered over bare configs when ``$REPRO_QPOLICY`` names a
-    policy preset (CI mixed-policy smoke leg) — read per call so tests can
-    monkeypatch the environment."""
+    preset (CI mixed-policy + chaos legs) — read per call so tests can
+    monkeypatch the environment.
+
+    Policy presets contribute their rule list; a *uniform config* preset
+    name (``int8`` etc.) becomes one catch-all ``"*"`` rule carrying the
+    preset's bit-widths, so ``REPRO_QPOLICY=int8`` forces every bare config
+    entering the model stack to the paper's int8 setting."""
     name = os.environ.get("REPRO_QPOLICY", "")
     if not name:
         return ()
-    return preset_rules(name)
+    if name in _POLICY_TABLE:
+        return preset_rules(name)
+    if name in CONFIG_PRESETS:
+        c = QuantConfig.preset(name)
+        return (ScopeRule("*", (
+            ("enabled", c.enabled), ("weight_bits", c.weight_bits),
+            ("act_bits", c.act_bits), ("grad_bits", c.grad_bits),
+            ("warn_stability", False))),)
+    return preset_rules(name)             # KeyError with the full name list
 
 
 def as_policy(q: QuantLike) -> QuantPolicy:

@@ -26,9 +26,16 @@ from repro.core import grad_compress
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.launch.mesh import make_host_mesh
 from repro.models import encdec, lm
-from repro.train import checkpoint, fault, optimizer as opt_lib, trainer
+from repro.train import (chaos as chaos_lib, checkpoint, fault,
+                         optimizer as opt_lib, sentinel as sentinel_lib,
+                         trainer)
 
 log = logging.getLogger("repro.train")
+
+
+def _steps_list(s: str) -> tuple:
+    """CLI step lists: "3,7,11" -> (3, 7, 11)."""
+    return tuple(int(x) for x in s.split(",") if x)
 
 
 def main() -> None:
@@ -61,6 +68,28 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--sentinel", action="store_true",
+                    help="numerics-sentinel step: in-graph health counters, "
+                         "lax.cond skip on non-finite grads, hysteresis-"
+                         "gated per-scope bit escalation (DESIGN.md §9)")
+    ap.add_argument("--chaos-seed", type=int, default=0)
+    ap.add_argument("--chaos-preempt-at", type=_steps_list, default=(),
+                    help="comma-separated steps at which to inject a "
+                         "preemption (recover via restore + replay)")
+    ap.add_argument("--chaos-drop-psum-at", type=_steps_list, default=(),
+                    help="steps at which a psum participant drops")
+    ap.add_argument("--chaos-bitflip-at", type=_steps_list, default=(),
+                    help="steps at which a state QTensor mantissa bit flips")
+    ap.add_argument("--chaos-corrupt-exp-at", type=_steps_list, default=(),
+                    help="steps at which a shard scale-exponent goes stale")
+    ap.add_argument("--chaos-nan-at", type=_steps_list, default=(),
+                    help="steps at which gradients get a NaN injected "
+                         "(needs --sentinel; proves one skipped step)")
+    ap.add_argument("--chaos-straggle-at", type=_steps_list, default=(),
+                    help="steps preceded by an injected straggler delay")
+    ap.add_argument("--chaos-corrupt-ckpt-at", type=_steps_list, default=(),
+                    help="steps at which the newest checkpoint leaf gets "
+                         "flipped bytes (restore must fall back)")
     args = ap.parse_args()
 
     logging.basicConfig(level=logging.INFO)
@@ -71,6 +100,12 @@ def main() -> None:
     compressed = args.grad_compress_bits > 0
     if compressed and args.pods < 2:
         ap.error("--grad-compress-bits needs --pods > 1 (a pod mesh axis)")
+    if args.sentinel and compressed:
+        ap.error("--sentinel and --grad-compress-bits are mutually "
+                 "exclusive (the sentinel step owns the optimizer update)")
+    if args.chaos_nan_at and not args.sentinel:
+        ap.error("--chaos-nan-at needs --sentinel (the NaN rides the "
+                 "sentinel step's inject operand)")
     mesh = make_host_mesh(args.model_parallel, pods=args.pods)
     sharding.set_mesh(mesh)
 
@@ -92,10 +127,28 @@ def main() -> None:
              "state_bits=%d", cfg.name, n_params / 1e6, args.quant,
              dict(mesh.shape), args.gather_bits, args.state_bits)
 
+    events = []
+
+    def on_event(ev):
+        events.append(ev)
+        log.info("event: %s", ev)
+
     tcfg = trainer.TrainConfig(microbatches=args.microbatches,
                                grad_compress_bits=args.grad_compress_bits,
                                gather_bits=args.gather_bits)
-    if compressed:
+    watch = None
+    holder = {}
+    if args.sentinel:
+        watch = sentinel_lib.Sentinel(sentinel_lib.SentinelConfig(), qcfg,
+                                      on_event=on_event)
+        # mutable holder: an escalation rebuilds the policy and re-jits;
+        # one_step always calls through holder["fn"]
+        holder["fn"] = jax.jit(sentinel_lib.make_sentinel_step(
+            loss_fn, cfg, qcfg, opt_cfg, tcfg, mesh=mesh,
+            param_specs=pspecs))
+        step_fn = None
+        residuals = None
+    elif compressed:
         step_fn = trainer.make_compressed_train_step(
             loss_fn, cfg, qcfg, opt_cfg, mesh, tcfg)
         residuals = grad_compress.init_residuals(params)
@@ -109,17 +162,22 @@ def main() -> None:
     data = SyntheticLM(DataConfig(batch_size=args.batch, seq_len=args.seq,
                                   vocab=cfg.vocab))
 
+    def state_like():
+        like = {"params": params, "opt": opt_state, "data": data.state()}
+        if compressed:
+            # error-feedback residuals ride in the checkpoint: dropping
+            # them on restart would bias the first post-restore steps
+            like["residuals"] = residuals
+        return like
+
     start = 0
     if args.ckpt_dir:
-        latest = checkpoint.latest_step(args.ckpt_dir)
-        if latest is not None:
-            like = {"params": params, "opt": opt_state, "data": data.state()}
-            if compressed:
-                # error-feedback residuals ride in the checkpoint: dropping
-                # them on restart would bias the first post-restore steps
-                like["residuals"] = residuals
-            restored = checkpoint.restore(args.ckpt_dir, latest, like,
-                                          shardings=None)
+        # newest checkpoint that passes its crc manifest; corrupt steps are
+        # skipped (ckpt-corrupt events) and the previous retained one loads
+        got = checkpoint.restore_latest(args.ckpt_dir, state_like(),
+                                        on_event=on_event)
+        if got is not None:
+            restored, latest = got
             params, opt_state = restored["params"], restored["opt"]
             if compressed:
                 residuals = restored["residuals"]
@@ -141,17 +199,39 @@ def main() -> None:
 
     state = (params, opt_state, residuals)
 
+    monkey = chaos_lib.ChaosMonkey(chaos_lib.ChaosConfig(
+        seed=args.chaos_seed,
+        preempt_at=args.chaos_preempt_at,
+        bitflip_at=args.chaos_bitflip_at,
+        corrupt_exp_at=args.chaos_corrupt_exp_at,
+        drop_psum_at=args.chaos_drop_psum_at,
+        nan_grad_at=args.chaos_nan_at,
+        straggle_at=args.chaos_straggle_at,
+        corrupt_ckpt_at=args.chaos_corrupt_ckpt_at,
+        ckpt_dir=args.ckpt_dir))
+
     def one_step(state, step):
         params, opt_state, residuals = state
         batch = make_batch(next(data))
         k = jax.random.fold_in(key, step)
-        if compressed:
+        if args.sentinel:
+            params, opt_state, metrics = holder["fn"](
+                params, opt_state, batch, k, monkey.nan_flag(step))
+            new_policy = watch.observe(step, jax.device_get(metrics))
+            if new_policy is not None:
+                holder["fn"] = jax.jit(sentinel_lib.make_sentinel_step(
+                    loss_fn, cfg, new_policy, opt_cfg, tcfg, mesh=mesh,
+                    param_specs=pspecs))
+                log.info("sentinel: recompiled with escalated policy "
+                         "(%d rules)", len(new_policy.rules))
+        elif compressed:
             params, opt_state, residuals, metrics = step_fn(
                 params, opt_state, residuals, batch, k)
         else:
             params, opt_state, metrics = step_fn(params, opt_state, batch, k)
         if step % args.log_every == 0:
-            m = {k_: float(v) for k_, v in metrics.items()}
+            m = {k_: float(v) for k_, v in metrics.items()
+                 if not isinstance(v, dict)}
             log.info("step %d loss=%.4f gnorm=%.3f", step, m.get("loss", -1),
                      m.get("grad_norm", -1))
         return params, opt_state, residuals
@@ -164,11 +244,25 @@ def main() -> None:
             checkpoint.save(args.ckpt_dir, step, blob)
             log.info("checkpointed step %d", step)
 
+    restore_fn = None
+    if args.ckpt_dir:
+        def restore_fn():
+            got = checkpoint.restore_latest(args.ckpt_dir, state_like(),
+                                            on_event=on_event)
+            if got is None:
+                raise RuntimeError("no usable checkpoint to restore from")
+            blob, step = got
+            data.restore(blob["data"])
+            return ((blob["params"], blob["opt"], blob.get("residuals")),
+                    step)
+
     t0 = time.time()
     state = fault.run_with_recovery(
-        one_step, state, start_step=start, num_steps=args.steps,
-        save_fn=save_state, save_every=args.ckpt_every)
-    log.info("done: %d steps in %.1fs", args.steps, time.time() - t0)
+        monkey.wrap(one_step), state, start_step=start, num_steps=args.steps,
+        save_fn=save_state, restore_fn=restore_fn,
+        save_every=args.ckpt_every, on_event=on_event)
+    log.info("done: %d steps in %.1fs (%d events)", args.steps,
+             time.time() - t0, len(events))
     if args.ckpt_dir:
         save_state(state, start + args.steps)
 

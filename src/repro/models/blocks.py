@@ -28,7 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import utils
-from repro.core import int_ops
+from repro.core import health, int_ops
 from repro.core.qpolicy import QuantLike, ensure_scope
 from repro.models.config import ArchConfig
 
@@ -222,6 +222,7 @@ def attention_apply(
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     G = H // KV
     sc = ensure_scope(qcfg)
+    health.probe(sc.path, x, sc.leaf("wq").act_bits)
     bq = p.get("bq")
     q = int_ops.int_linear(x, p["wq"], bq, subkey(key, 0), sc.leaf("wq"))
     q = q.reshape(B, S, KV, G, hd)
@@ -311,6 +312,8 @@ def mlp_init(key, cfg: ArchConfig, d_ff: Optional[int] = None) -> Params:
 def mlp_apply(p: Params, x: Array, cfg: ArchConfig, qcfg: QuantLike,
               key: Optional[Array]) -> Array:
     sc = ensure_scope(qcfg)
+    health.probe(sc.path, x,
+                 sc.leaf("wg" if "wg" in p else "w1").act_bits)
     if "wg" in p:
         g = int_ops.int_linear(x, p["wg"], None, subkey(key, 0), sc.leaf("wg"))
         u = int_ops.int_linear(x, p["wu"], None, subkey(key, 1), sc.leaf("wu"))
@@ -360,6 +363,7 @@ def moe_apply(p: Params, x: Array, cfg: ArchConfig, qcfg: QuantLike,
     E, K = cfg.moe_experts, cfg.moe_topk
     T = B * S
     sc = ensure_scope(qcfg)
+    health.probe(sc.path, x, sc.leaf("router").act_bits)
     xf = x.reshape(T, D)
     logits = int_ops.int_linear(xf, p["router"], None, subkey(key, 0),
                                 sc.leaf("router"))
@@ -445,7 +449,9 @@ def norm_init(cfg: ArchConfig) -> Params:
 
 def norm_apply(p: Params, x: Array, cfg: ArchConfig, qcfg: QuantLike,
                key: Optional[Array]) -> Array:
-    leaf = ensure_scope(qcfg).cfg()      # the scope path IS the norm's path
+    sc = ensure_scope(qcfg)
+    leaf = sc.cfg()                      # the scope path IS the norm's path
+    health.probe(sc.path, x, leaf.act_bits)
     if "b" in p:
         return int_ops.int_layernorm(x, p["g"], p["b"], key, leaf)
     return int_ops.int_rmsnorm(x, p["g"], key, leaf)

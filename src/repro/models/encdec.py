@@ -14,7 +14,7 @@ import jax.numpy as jnp
 
 from repro import sharding
 from repro import utils
-from repro.core import int_ops
+from repro.core import health, int_ops
 from repro.core.qpolicy import QuantLike, ensure_scope, layer_groups
 from repro.models import blocks
 from repro.models.blocks import subkey
@@ -108,8 +108,9 @@ def encode(params: Params, frames: Array, cfg: ArchConfig, qcfg: QuantLike,
 
     Le = cfg.n_enc_layers
     groups = layer_groups(sc, Le, _enc_leaves(cfg), stack="enc")
-    x, _ = blocks.scan_stack(make_body, x, groups,
-                             (params["enc_blocks"], jnp.arange(Le)))
+    with health.suspend():     # enc-dec scans have no harvest channel
+        x, _ = blocks.scan_stack(make_body, x, groups,
+                                 (params["enc_blocks"], jnp.arange(Le)))
     return blocks.norm_apply(params["enc_ln"], x, cfg, sc.child("enc_ln"),
                              subkey(key, -5))
 
@@ -161,8 +162,9 @@ def _decoder(params: Params, x: Array, enc: Array, cfg: ArchConfig,
             return utils.checkpoint(
                 lambda c, i: (body(c, i[0], i[1], None, None, bsc)[0], None))
 
-        x, _ = blocks.scan_stack(make_body, x, groups,
-                                 (params["dec_blocks"], jnp.arange(L)))
+        with health.suspend():     # enc-dec scans have no harvest channel
+            x, _ = blocks.scan_stack(make_body, x, groups,
+                                     (params["dec_blocks"], jnp.arange(L)))
         return x, None
     # decode: per-layer self cache + precomputed cross KV
     ck, cv, xk, xv = self_cache
@@ -171,9 +173,10 @@ def _decoder(params: Params, x: Array, enc: Array, cfg: ArchConfig,
         return lambda c, i: body(c, i[0], i[1], (i[2], i[3]), (i[4], i[5]),
                                  bsc)
 
-    return blocks.scan_stack(
-        make_cached_body, x, groups,
-        (params["dec_blocks"], jnp.arange(L), ck, cv, xk, xv))
+    with health.suspend():
+        return blocks.scan_stack(
+            make_cached_body, x, groups,
+            (params["dec_blocks"], jnp.arange(L), ck, cv, xk, xv))
 
 
 def _dec_embed(params, tokens, cfg, qcfg, key, index=0):

@@ -21,7 +21,7 @@ import jax.numpy as jnp
 
 from repro import sharding
 from repro import utils
-from repro.core import int_ops
+from repro.core import health, int_ops
 from repro.core.qpolicy import (PolicyScopeError, QuantLike, ensure_scope,
                                 layer_groups)
 from repro.models import blocks, ssm
@@ -160,57 +160,72 @@ def _backbone_train(params: Params, x: Array, cfg: ArchConfig,
     sc = ensure_scope(qcfg)
 
     if cfg.family in ("ssm", "hybrid"):
-        every = cfg.hybrid_attn_every or L
-
-        def make_mamba_body(bsc):
-            def mamba_body(x, inp):
-                bp, idx = inp
-                k = subkey(key, idx)
-                h, _ = ssm.mamba2_apply(bp["mamba"], x, cfg,
-                                        bsc.child("mamba"), k)
-                return sharding.constrain_tokens(x + h), None
-            return utils.checkpoint(mamba_body)
-
-        if cfg.family == "ssm":
-            groups = layer_groups(sc, L, _MAMBA_LEAVES)
-            x, _ = blocks.scan_stack(make_mamba_body, x, groups,
-                                     (params["blocks"], jnp.arange(L)))
-            return x, jnp.float32(0)
-
-        # hybrid: groups of ``every`` mamba layers + the shared attn block
-        bsc = _uniform_stack_scope(sc, L, _MAMBA_LEAVES, "hybrid")
-        mamba_body = make_mamba_body(bsc)
-        G = L // every
-        grouped = jax.tree.map(
-            lambda a: a.reshape((G, every) + a.shape[1:]), params["blocks"])
-
-        shared_body = utils.checkpoint(
-            lambda x, idx: _attn_block(params["shared_attn"], x, cfg,
-                                       sc.child("shared_attn"),
-                                       subkey(key, 10_000 + idx))[:2])
-
-        def group_body(x, inp):
-            gp, gidx = inp
-            x, _ = utils.scan(mamba_body, x,
-                                (gp, gidx * every + jnp.arange(every)))
-            x, _ = shared_body(x, gidx)
-            return x, None
-
-        x, _ = utils.scan(group_body, x, (grouped, jnp.arange(G)))
-        return x, jnp.float32(0)
+        # probes are masked here: the hybrid family runs _attn_block inside
+        # nested scans with no harvest channel, so a live collector would
+        # leak tracers out of the loop trace
+        with health.suspend():
+            return _backbone_train_ssm(params, x, cfg, sc, key)
 
     def make_body(bsc):
         def body(carry, inp):
             x, aux = carry
             bp, idx = inp
-            x, a, _ = _attn_block(bp, x, cfg, bsc, subkey(key, idx))
-            return (x, aux + a), None
+            # frame opens INSIDE the remat/scan body: probe tracers ride out
+            # as the scan's stacked y-output instead of leaking through the
+            # module-global sink (core/health.py)
+            with health.frame() as fr:
+                x, a, _ = _attn_block(bp, x, cfg, bsc, subkey(key, idx))
+            return (x, aux + a), fr.harvest()
         return utils.checkpoint(body)
 
     groups = layer_groups(sc, L, _block_leaves(cfg))
-    (x, aux), _ = blocks.scan_stack(make_body, (x, jnp.float32(0)), groups,
-                                    (params["blocks"], jnp.arange(L)))
+    (x, aux), hs = blocks.scan_stack(make_body, (x, jnp.float32(0)), groups,
+                                     (params["blocks"], jnp.arange(L)))
+    health.record_stacked(hs)
     return x, aux
+
+
+def _backbone_train_ssm(params: Params, x: Array, cfg: ArchConfig,
+                        sc, key) -> Tuple[Array, Array]:
+    L = cfg.n_layers
+    every = cfg.hybrid_attn_every or L
+
+    def make_mamba_body(bsc):
+        def mamba_body(x, inp):
+            bp, idx = inp
+            k = subkey(key, idx)
+            h, _ = ssm.mamba2_apply(bp["mamba"], x, cfg,
+                                    bsc.child("mamba"), k)
+            return sharding.constrain_tokens(x + h), None
+        return utils.checkpoint(mamba_body)
+
+    if cfg.family == "ssm":
+        groups = layer_groups(sc, L, _MAMBA_LEAVES)
+        x, _ = blocks.scan_stack(make_mamba_body, x, groups,
+                                 (params["blocks"], jnp.arange(L)))
+        return x, jnp.float32(0)
+
+    # hybrid: groups of ``every`` mamba layers + the shared attn block
+    bsc = _uniform_stack_scope(sc, L, _MAMBA_LEAVES, "hybrid")
+    mamba_body = make_mamba_body(bsc)
+    G = L // every
+    grouped = jax.tree.map(
+        lambda a: a.reshape((G, every) + a.shape[1:]), params["blocks"])
+
+    shared_body = utils.checkpoint(
+        lambda x, idx: _attn_block(params["shared_attn"], x, cfg,
+                                   sc.child("shared_attn"),
+                                   subkey(key, 10_000 + idx))[:2])
+
+    def group_body(x, inp):
+        gp, gidx = inp
+        x, _ = utils.scan(mamba_body, x,
+                            (gp, gidx * every + jnp.arange(every)))
+        x, _ = shared_body(x, gidx)
+        return x, None
+
+    x, _ = utils.scan(group_body, x, (grouped, jnp.arange(G)))
+    return x, jnp.float32(0)
 
 
 # =========================================================================
@@ -226,6 +241,7 @@ def _embed(params: Params, tokens: Array, cfg: ArchConfig, qcfg: QuantLike,
         pe = int_ops.int_linear(prefix_embeds, params["mm_proj"], None,
                                 subkey(key, -2), sc.leaf("mm_proj"))
         x = jnp.concatenate([pe, x], axis=1)
+    health.probe(sc.path + ("embed",), x, sc.leaf("embed").act_bits)
     return sharding.constrain_tokens(x)
 
 
@@ -240,6 +256,7 @@ def _logits(params: Params, x: Array, cfg: ArchConfig, qcfg: QuantLike,
         head = params["lm_head"]
     # the head resolves under "lm_head" whether or not it is tied to the
     # embedding table (a tied table can still be *read* at head precision)
+    health.probe(sc.path + ("lm_head",), x, sc.leaf("lm_head").act_bits)
     logits = int_ops.int_linear(x, head, None, subkey(key, -4),
                                 sc.leaf("lm_head"))
     return sharding.constrain(logits, sharding.batch_axes(), None, "model")
@@ -377,8 +394,10 @@ def lm_decode_step(params: Params, token: Array, cache: Params,
                                      ssc.child("mlp"), None)
                 return x + h, ns + (nk, nv)
 
-            x, (n_ssm, n_cx, n_cbc, nk, nv) = utils.scan(
-                group_body, x, (grouped,) + g_states + (cache["k"], cache["v"]))
+            with health.suspend():   # probes inside group_body can't harvest
+                x, (n_ssm, n_cx, n_cbc, nk, nv) = utils.scan(
+                    group_body, x,
+                    (grouped,) + g_states + (cache["k"], cache["v"]))
             new_cache = {
                 "ssm": n_ssm.reshape((L,) + n_ssm.shape[2:]),
                 "conv_x": n_cx.reshape((L,) + n_cx.shape[2:]),
@@ -423,9 +442,10 @@ def lm_prefill_cache(params: Params, tokens: Array, cache: Params,
         return body
 
     groups = layer_groups(sc, L, _block_leaves(cfg))
-    (x, _), (nk, nv) = blocks.scan_stack(
-        make_body, (x, jnp.float32(0)), groups,
-        (params["blocks"], cache["k"], cache["v"], jnp.arange(L)))
+    with health.suspend():     # serve-path scan has no harvest channel
+        (x, _), (nk, nv) = blocks.scan_stack(
+            make_body, (x, jnp.float32(0)), groups,
+            (params["blocks"], cache["k"], cache["v"], jnp.arange(L)))
     logits = _logits(params, x[:, -1:], cfg, sc, key)
     new_index = index + tokens.shape[1]
     return logits, _constrain_cache({"k": nk, "v": nv, "index": new_index})

@@ -9,6 +9,7 @@ decode cells in EXPERIMENTS.md.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -27,12 +28,24 @@ class ServeConfig:
     temperature: float = 0.0          # 0 => greedy
     eos_id: int = -1                  # -1 => never stop early
     cache_dtype: Any = jnp.float32    # dtype or string ("bfloat16", ...)
+    #: bounded admission queue: ``submit`` raises :class:`QueueFull` beyond
+    #: this — backpressure belongs at the edge, not as unbounded memory
+    max_queue: int = 64
+    #: default per-request deadline (seconds, wall clock from submit);
+    #: ``None`` = no deadline.  Expired requests are evicted with whatever
+    #: tokens they produced and recorded in ``ContinuousBatcher.failed``.
+    default_deadline_s: Optional[float] = None
 
     def __post_init__(self):
         if isinstance(self.cache_dtype, str):
             # config files pass dtypes as strings; normalize once here so
             # init_cache and every jit signature see a real dtype object
             self.cache_dtype = jnp.dtype(self.cache_dtype)
+
+
+class QueueFull(RuntimeError):
+    """Admission queue at capacity — shed load at the edge instead of
+    growing an unbounded backlog (``ServeConfig.max_queue``)."""
 
 
 class Engine:
@@ -102,6 +115,8 @@ class _Slot:
     produced: int = 0
     budget: int = 0
     tokens: list = dataclasses.field(default_factory=list)
+    #: absolute ``time.monotonic()`` cutoff; None = no deadline
+    deadline: Optional[float] = None
 
 
 def _merge_slot(base: Dict[str, jax.Array], donor: Dict[str, jax.Array],
@@ -148,8 +163,12 @@ class ContinuousBatcher:
         self.engine = engine
         scfg = engine.scfg
         self.slots = [_Slot() for _ in range(scfg.batch_slots)]
-        self.queue: List[Tuple[int, np.ndarray, int]] = []
+        self.queue: List[Tuple[int, np.ndarray, int, Optional[float]]] = []
         self.results: Dict[int, np.ndarray] = {}
+        #: request_id -> reason for every request that did not complete
+        #: normally ("deadline", "nonfinite_logits"); partial output (possibly
+        #: empty) still lands in ``results``
+        self.failed: Dict[int, str] = {}
         self._next_id = 0
         B = scfg.batch_slots
         self.cache = lm.init_cache(engine.cfg, B, scfg.max_seq,
@@ -160,20 +179,59 @@ class ContinuousBatcher:
         self.last_tok = jnp.zeros((B, 1), jnp.int32)
         self._logits: Optional[jax.Array] = None
 
-    def submit(self, prompt: np.ndarray, max_new_tokens: int) -> int:
+    def submit(self, prompt: np.ndarray, max_new_tokens: int,
+               deadline_s: Optional[float] = None) -> int:
+        """Enqueue a request; raises :class:`QueueFull` when the admission
+        queue is at ``max_queue`` (callers retry with backoff or shed).
+        ``deadline_s`` (seconds from now; default ``default_deadline_s``)
+        bounds queue wait + decode — expired requests are evicted with their
+        partial output and show up in ``failed``."""
+        if len(self.queue) >= self.engine.scfg.max_queue:
+            raise QueueFull(
+                f"admission queue at capacity ({self.engine.scfg.max_queue})")
         rid = self._next_id
         self._next_id += 1
         prompt = np.asarray(prompt).astype(np.int32)
         if prompt.size == 0:
             raise ValueError("empty prompt")
-        self.queue.append((rid, prompt, max_new_tokens))
+        if deadline_s is None:
+            deadline_s = self.engine.scfg.default_deadline_s
+        deadline = None if deadline_s is None else time.monotonic() + deadline_s
+        self.queue.append((rid, prompt, max_new_tokens, deadline))
         return rid
+
+    def _fail(self, rid: int, tokens: list, reason: str) -> None:
+        self.results[rid] = np.asarray(tokens, dtype=np.int32)
+        self.failed[rid] = reason
+
+    def _evict(self, slot_id: int, reason: str) -> None:
+        """Evict one slot: partial tokens become the result, the cache row
+        is reset from the pristine cache so a poisoned row (non-finite KV
+        state) cannot linger in the shared batch."""
+        s = self.slots[slot_id]
+        self._fail(s.request_id, s.tokens, reason)
+        self.cache = _merge_slot(self.cache, self._fresh_cache, slot_id)
+        self.slots[slot_id] = _Slot()
+
+    def _pop_live(self):
+        """Next queued request whose deadline has not already expired;
+        expired ones fail immediately with an empty result."""
+        while self.queue:
+            rid, prompt, budget, deadline = self.queue.pop(0)
+            if deadline is not None and time.monotonic() > deadline:
+                self._fail(rid, [], "deadline")
+                continue
+            return rid, prompt, budget, deadline
+        return None
 
     def _admit(self) -> None:
         for slot_id, s in enumerate(self.slots):
-            if s.active or not self.queue:
+            if s.active:
                 continue
-            rid, prompt, budget = self.queue.pop(0)
+            nxt = self._pop_live()
+            if nxt is None:
+                return
+            rid, prompt, budget, deadline = nxt
             # snapshot: prefill below steps the shared decode function, which
             # touches every slot's cache row/index and logits.
             snap_cache, snap_logits = self.cache, self._logits
@@ -200,11 +258,30 @@ class ContinuousBatcher:
             if snap_logits is not None:
                 logits = _merge_rows(snap_logits, logits, slot_id)
             self.slots[slot_id] = _Slot(active=True, request_id=rid,
-                                        produced=0, budget=budget, tokens=[])
+                                        produced=0, budget=budget, tokens=[],
+                                        deadline=deadline)
             self._logits = logits
 
     def step(self) -> None:
         self._admit()
+        if not any(s.active for s in self.slots):
+            return
+        # health pass before sampling: expired deadlines and poisoned slots
+        # (non-finite logits row — a blown-up integer decode in ONE sequence)
+        # evict that slot only; the rest of the batch keeps decoding.
+        now = time.monotonic()
+        logits_np: Optional[np.ndarray] = None
+        for i, s in enumerate(self.slots):
+            if not s.active:
+                continue
+            if s.deadline is not None and now > s.deadline:
+                self._evict(i, "deadline")
+                continue
+            if logits_np is None:
+                logits_np = np.asarray(
+                    self._logits[:, -1, : self.engine.cfg.vocab])
+            if not np.isfinite(logits_np[i]).all():
+                self._evict(i, "nonfinite_logits")
         if not any(s.active for s in self.slots):
             return
         nxt = self.engine._sample(self._logits, None)

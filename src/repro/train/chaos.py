@@ -1,0 +1,193 @@
+"""Chaos harness: deterministic, seeded fault injectors for the step loop.
+
+Every injector is driven by ``ChaosConfig`` step lists and a seed; each
+fault fires **once** per (kind, step) so a restored-and-replayed step does
+not refire it — recovery therefore converges and, because the train step is
+a pure function of (state, step), a chaos run that recovers via
+``run_with_recovery`` reproduces the clean run's trajectory exactly.
+
+Injector catalog (DESIGN.md §9):
+
+* ``preempt_at``     — raise :class:`Preemption` before the step (SIGTERM /
+  maintenance event); recovery is restore + replay.
+* ``drop_psum_at``   — raise :class:`CollectiveTimeout`: the detection a
+  real deployment gets when a ``compressed_psum_mean`` participant drops
+  out of the ICI collective; same restore + replay recovery.
+* ``bitflip_at``     — flip one random mantissa bit in a QTensor limb plane
+  (or one bit of an f32 leaf) of the optimizer state, then raise
+  :class:`StateCorruption` (the detected-corruption model: checksums /
+  device ECC flag it; the silent-blowup case is the sentinel's NaN story).
+* ``corrupt_exp_at`` — perturb a QTensor's shared scale exponent (a stale /
+  torn per-shard exponent), then raise :class:`StateCorruption`.
+* ``nan_grad_at``    — returns 1.0 from :func:`ChaosMonkey.nan_flag` so the
+  sentinel step's ``inject_nan`` operand poisons the gradients in-graph;
+  proves exactly one skipped step with bit-identical params.
+* ``straggle_at``    — sleep ``straggle_s`` before the step (slow host);
+  exercises the StragglerMonitor, no exception.
+* ``corrupt_ckpt_at`` — flip bytes in the newest on-disk checkpoint leaf,
+  then raise :class:`StateCorruption`: restore must detect the bad checksum
+  and fall back to the previous retained checkpoint.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+import zlib
+from typing import Any, Optional, Sequence, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import qtensor
+
+
+class Preemption(RuntimeError):
+    """Injected preemption (SIGTERM / maintenance event)."""
+
+
+class CollectiveTimeout(RuntimeError):
+    """Injected dropped-participant timeout on a psum collective."""
+
+
+class StateCorruption(RuntimeError):
+    """Injected detected corruption (bad checksum / ECC flag)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosConfig:
+    seed: int = 0
+    preempt_at: Tuple[int, ...] = ()
+    bitflip_at: Tuple[int, ...] = ()
+    corrupt_exp_at: Tuple[int, ...] = ()
+    drop_psum_at: Tuple[int, ...] = ()
+    nan_grad_at: Tuple[int, ...] = ()
+    straggle_at: Tuple[int, ...] = ()
+    straggle_s: float = 0.05
+    corrupt_ckpt_at: Tuple[int, ...] = ()
+    ckpt_dir: str = ""                    # target of corrupt_ckpt_at
+
+
+def _flip_bit_array(a: np.ndarray, rng: np.random.Generator) -> np.ndarray:
+    """One random bit-flip in any array's raw bytes."""
+    out = np.array(a)                         # writable copy
+    u = out.view(np.uint8).reshape(-1)
+    i = int(rng.integers(u.size))
+    u[i] ^= np.uint8(1 << int(rng.integers(8)))
+    return out
+
+
+def corrupt_qtensor(t: qtensor.QTensor, rng: np.random.Generator,
+                    *, exponent: bool = False) -> qtensor.QTensor:
+    """QTensor with one flipped mantissa bit (or, with ``exponent=True``, a
+    randomly shifted scale exponent — the stale-shard-exponent fault)."""
+    if exponent:
+        e = np.array(jax.device_get(t.exp))
+        flat = e.reshape(-1) if e.ndim else e[None]
+        j = int(rng.integers(flat.size))
+        flat[j] += int(rng.integers(1, 8))    # wildly wrong scale
+        return qtensor.QTensor(m=t.m, exp=jnp.asarray(e.reshape(t.exp.shape)),
+                               bits=t.bits)
+    m = _flip_bit_array(np.asarray(jax.device_get(t.m)), rng)
+    return qtensor.QTensor(m=jnp.asarray(m), exp=t.exp, bits=t.bits)
+
+
+def corrupt_leaf(tree: Any, rng: np.random.Generator,
+                 *, exponent: bool = False) -> Any:
+    """Tree with one corrupted leaf: a random QTensor when any exist (the
+    quantized state plane), else the largest float leaf gets a bit-flip."""
+    flat, treedef = jax.tree.flatten(tree, is_leaf=qtensor.is_qtensor)
+    qidx = [i for i, l in enumerate(flat) if qtensor.is_qtensor(l)]
+    if qidx:
+        i = qidx[int(rng.integers(len(qidx)))]
+        flat[i] = corrupt_qtensor(flat[i], rng, exponent=exponent)
+    else:
+        sizes = [getattr(l, "size", 0) for l in flat]
+        i = int(np.argmax(sizes))
+        flat[i] = jnp.asarray(
+            _flip_bit_array(np.asarray(jax.device_get(flat[i])), rng))
+    return jax.tree.unflatten(treedef, flat)
+
+
+def corrupt_file(path: str, rng: np.random.Generator,
+                 n_bytes: int = 4) -> None:
+    """Flip ``n_bytes`` random bytes of an on-disk file in place."""
+    size = os.path.getsize(path)
+    with open(path, "r+b") as f:
+        for _ in range(n_bytes):
+            off = int(rng.integers(max(size - 1, 1)))
+            f.seek(off)
+            b = f.read(1)
+            f.seek(off)
+            f.write(bytes([b[0] ^ 0x41]))
+
+
+def _newest_leaf_file(ckpt_dir: str) -> Optional[str]:
+    steps = sorted(d for d in os.listdir(ckpt_dir)
+                   if d.startswith("step_") and ".tmp" not in d)
+    if not steps:
+        return None
+    full = os.path.join(ckpt_dir, steps[-1])
+    leaves = sorted(f for f in os.listdir(full) if f.endswith(".npy"))
+    return os.path.join(full, leaves[0]) if leaves else None
+
+
+class ChaosMonkey:
+    """Stateful injector: consult it at the top of every step.
+
+    ``wrap(step_fn)`` is the usual integration — the wrapped step runs
+    ``before_step`` (which may sleep, corrupt, or raise) and then the real
+    step.  Each fault fires once per (kind, step): a replayed step after
+    recovery passes clean.
+    """
+
+    def __init__(self, cfg: ChaosConfig):
+        self.cfg = cfg
+        self.fired: Set[Tuple[str, int]] = set()
+
+    def _rng(self, kind: str, step: int) -> np.random.Generator:
+        # zlib.crc32, not hash(): str hashes are per-process randomized
+        return np.random.default_rng(
+            [self.cfg.seed, step, zlib.crc32(kind.encode())])
+
+    def _fire(self, kind: str, plan: Sequence[int], step: int) -> bool:
+        if step in plan and (kind, step) not in self.fired:
+            self.fired.add((kind, step))
+            return True
+        return False
+
+    def nan_flag(self, step: int) -> jax.Array:
+        """inject_nan operand for the sentinel step (fires once)."""
+        return jnp.float32(
+            1.0 if self._fire("nan", self.cfg.nan_grad_at, step) else 0.0)
+
+    def before_step(self, state: Any, step: int) -> Any:
+        c = self.cfg
+        if self._fire("straggle", c.straggle_at, step):
+            time.sleep(c.straggle_s)
+        if self._fire("preempt", c.preempt_at, step):
+            raise Preemption(f"injected preemption at step {step}")
+        if self._fire("drop_psum", c.drop_psum_at, step):
+            raise CollectiveTimeout(
+                f"injected dropped psum participant at step {step}")
+        if self._fire("ckpt", c.corrupt_ckpt_at, step):
+            leaf = _newest_leaf_file(c.ckpt_dir) if c.ckpt_dir else None
+            if leaf is not None:
+                corrupt_file(leaf, self._rng("ckpt", step))
+            raise StateCorruption(
+                f"injected checkpoint corruption at step {step}")
+        if self._fire("bitflip", c.bitflip_at, step):
+            corrupt_leaf(state, self._rng("bitflip", step))
+            raise StateCorruption(f"injected bit-flip at step {step}")
+        if self._fire("exp", c.corrupt_exp_at, step):
+            corrupt_leaf(state, self._rng("exp", step), exponent=True)
+            raise StateCorruption(
+                f"injected stale shard exponent at step {step}")
+        return state
+
+    def wrap(self, step_fn):
+        def wrapped(state, step):
+            state = self.before_step(state, step)
+            return step_fn(state, step)
+        return wrapped

@@ -26,15 +26,24 @@ instead of silently value-casting floats into mantissa planes.
 from __future__ import annotations
 
 import json
+import logging
 import os
 import shutil
 import time
-from typing import Any, Dict, Optional
+import zlib
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import numpy as np
 
+log = logging.getLogger("repro.checkpoint")
+
 _MANIFEST = "manifest.json"
+
+
+class CheckpointCorruption(RuntimeError):
+    """A saved leaf fails its manifest checksum (flipped bytes on disk) or a
+    manifest is structurally broken — restore from an older retained step."""
 
 
 def _flatten_with_names(tree: Any):
@@ -67,8 +76,12 @@ def save(ckpt_dir: str, step: int, state: Dict[str, Any],
         arr = np.asarray(jax.device_get(leaf))
         fname = f"leaf_{i:05d}.npy"
         np.save(os.path.join(tmp, fname), arr)
+        # crc32 of the raw array bytes: restore verifies before trusting a
+        # leaf, so flipped bytes on disk fail loudly (CheckpointCorruption)
+        # instead of silently loading garbage mantissas
+        crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
         manifest["leaves"][name] = {"file": fname, "dtype": str(arr.dtype),
-                                    "shape": list(arr.shape)}
+                                    "shape": list(arr.shape), "crc32": crc}
     treedef = jax.tree.structure(state)
     manifest["treedef"] = str(treedef)
     with open(os.path.join(tmp, _MANIFEST), "w") as f:
@@ -93,20 +106,50 @@ def _retain(ckpt_dir: str, keep: int) -> None:
                 shutil.rmtree(full, ignore_errors=True)
 
 
-def latest_step(ckpt_dir: str) -> Optional[int]:
+def _steps_on_disk(ckpt_dir: str) -> list:
     if not os.path.isdir(ckpt_dir):
-        return None
-    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
-             if d.startswith("step_") and ".tmp" not in d]
-    return max(steps) if steps else None
+        return []
+    return sorted(int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+                  if d.startswith("step_") and ".tmp" not in d)
+
+
+def verify_manifest(ckpt_dir: str, step: int) -> bool:
+    """Structural check of one checkpoint: manifest parses and every listed
+    leaf file exists with the expected byte size (full-content CRC happens
+    at restore — this stays cheap enough to run inside ``latest_step``)."""
+    path = os.path.join(ckpt_dir, f"step_{step:010d}")
+    try:
+        with open(os.path.join(path, _MANIFEST)) as f:
+            manifest = json.load(f)
+        for name, entry in manifest["leaves"].items():
+            fname = entry["file"] if isinstance(entry, dict) else entry
+            if not os.path.isfile(os.path.join(path, fname)):
+                return False
+    except (OSError, ValueError, KeyError, TypeError):
+        return False
+    return True
+
+
+def latest_step(ckpt_dir: str, *, verify: bool = True) -> Optional[int]:
+    """Newest step whose manifest verifies (``verify=False`` restores the
+    old name-only behavior)."""
+    for step in reversed(_steps_on_disk(ckpt_dir)):
+        if not verify or verify_manifest(ckpt_dir, step):
+            return step
+        log.warning("checkpoint step %d fails manifest verification; "
+                    "skipping", step)
+    return None
 
 
 def restore(ckpt_dir: str, step: int, like: Dict[str, Any],
-            shardings: Any = None) -> Dict[str, Any]:
+            shardings: Any = None, *, verify: bool = True) -> Dict[str, Any]:
     """Restore into the structure of ``like``; ``shardings`` (same-structure
     pytree of NamedShardings or None) enables elastic re-sharding onto any
     mesh — the saved arrays are logical/full, so no shard-count match is
-    required."""
+    required.  With ``verify`` (default) every leaf's bytes are checked
+    against the manifest's crc32: a mismatch raises
+    :class:`CheckpointCorruption` (callers fall back to an older step via
+    :func:`restore_latest`)."""
     path = os.path.join(ckpt_dir, f"step_{step:010d}")
     with open(os.path.join(path, _MANIFEST)) as f:
         manifest = json.load(f)
@@ -120,7 +163,21 @@ def restore(ckpt_dir: str, step: int, like: Dict[str, Any],
             raise KeyError(f"checkpoint missing leaf {name!r}")
         # pre-QTensor manifests stored the bare filename
         fname = entry["file"] if isinstance(entry, dict) else entry
-        arr = np.load(os.path.join(path, fname), mmap_mode="r")
+        try:
+            arr = np.load(os.path.join(path, fname), mmap_mode="r")
+        except (OSError, ValueError) as e:
+            # flipped bytes can land in the .npy header, not just the data:
+            # an unparseable leaf is corruption, same as a crc mismatch
+            raise CheckpointCorruption(
+                f"step {step} leaf {name!r} ({fname}): unreadable "
+                f"({e})") from e
+        if verify and isinstance(entry, dict) and "crc32" in entry:
+            crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+            if crc != entry["crc32"]:
+                raise CheckpointCorruption(
+                    f"step {step} leaf {name!r} ({fname}): stored crc32 "
+                    f"{entry['crc32']:#010x} != on-disk {crc:#010x} — "
+                    "bytes flipped since save")
         if hasattr(ref, "shape") and tuple(arr.shape) != tuple(ref.shape):
             raise ValueError(f"{name}: saved {arr.shape} != expected {ref.shape}")
         if (hasattr(ref, "dtype") and arr.dtype != ref.dtype
@@ -137,3 +194,28 @@ def restore(ckpt_dir: str, step: int, like: Dict[str, Any],
             out.append(np.asarray(arr) if not hasattr(ref, "dtype")
                        else np.asarray(arr, dtype=ref.dtype))
     return jax.tree.unflatten(jax.tree.structure(like), out)
+
+
+def restore_latest(ckpt_dir: str, like: Dict[str, Any],
+                   shardings: Any = None,
+                   on_event: Optional[Callable[[dict], None]] = None
+                   ) -> Optional[tuple]:
+    """Restore the newest checkpoint that verifies, walking backwards over
+    retained steps on corruption.  Returns ``(state, step)`` or ``None``
+    when no usable checkpoint exists.  Emits
+    ``{"type": "ckpt-corrupt", "step": k}`` per rejected step."""
+    for step in reversed(_steps_on_disk(ckpt_dir)):
+        if not verify_manifest(ckpt_dir, step):
+            log.warning("checkpoint step %d: manifest broken; trying "
+                        "previous", step)
+            if on_event is not None:
+                on_event({"type": "ckpt-corrupt", "step": step})
+            continue
+        try:
+            return restore(ckpt_dir, step, like, shardings), step
+        except CheckpointCorruption as e:
+            log.warning("checkpoint step %d corrupt (%s); trying previous",
+                        step, e)
+            if on_event is not None:
+                on_event({"type": "ckpt-corrupt", "step": step})
+    return None

@@ -1,0 +1,209 @@
+"""Numerics sentinel: react to the in-graph health counters.
+
+Two layers:
+
+* :func:`make_sentinel_step` — a train step that collects the per-scope
+  health pytree (core/health.py) beside the loss, computes gradient health
+  (mantissa zero-fraction, exponent, non-finite count at the policy's
+  ``grad_bits``), and guards the optimizer update with ``lax.cond``: a
+  non-finite gradient **skips the step** — params and optimizer state pass
+  through bit-identical — instead of poisoning every FSDP shard.  An
+  always-traced ``inject_nan`` scalar argument lets the chaos harness force
+  the skip branch without changing the jaxpr.
+* :class:`Sentinel` — the host-side policy loop.  It digests each step's
+  metrics: hysteresis-gated per-scope **bit-width escalation** (a scope
+  whose clip rate stays above ``clip_high`` for ``patience`` steps gets an
+  int8→int16 ``ScopeRule`` appended to a rebuilt ``QuantPolicy``; the
+  caller recompiles — bounded by ``max_escalations`` and a ``cooldown``),
+  and a :class:`NumericsError` after ``nonfinite_patience`` consecutive
+  skipped steps (persistent blow-up: degrade loudly, don't spin).
+
+Graceful degradation instead of divergence — the runtime counterpart to
+quantlint's static QL005 stability check (paper Fig. 4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro import sharding
+from repro.core import health, qtensor
+from repro.core.qpolicy import QuantLike, QuantPolicy, as_policy, rule
+from repro.train import optimizer as opt_lib
+from repro.train.trainer import LossFn, TrainConfig
+
+
+class NumericsError(RuntimeError):
+    """Persistent non-finite gradients — numeric health is unrecoverable by
+    skipping; restore/rescale/widen instead."""
+
+
+@dataclasses.dataclass(frozen=True)
+class SentinelConfig:
+    #: clip-rate hysteresis band: a scope counts "hot" at >= clip_high and
+    #: resets only at <= clip_low (between the two, the streak holds)
+    clip_high: float = 0.25
+    clip_low: float = 0.05
+    #: consecutive hot steps before a scope escalates
+    patience: int = 3
+    #: min steps between escalations (bounds recompiles)
+    cooldown: int = 20
+    #: total escalation budget per run
+    max_escalations: int = 4
+    escalate_bits: int = 16
+    #: consecutive skipped (non-finite) steps before NumericsError
+    nonfinite_patience: int = 3
+
+
+def make_sentinel_step(loss_fn: LossFn, cfg, qcfg: QuantLike,
+                       opt_cfg: opt_lib.OptimizerConfig,
+                       train_cfg: TrainConfig = TrainConfig(),
+                       *, mesh: Optional[Mesh] = None,
+                       param_specs: Any = None):
+    """Sentinel variant of ``trainer.make_train_step``.
+
+    ``step(params, opt_state, batch, key, inject_nan)`` returns
+    ``(params, opt_state, metrics)`` where metrics carries ``skipped`` (1.0
+    when the non-finite guard fired; params/opt-state are then bit-identical
+    to the inputs) and ``health`` — the per-scope counter pytree plus the
+    ``grads`` aggregate.  ``inject_nan`` is an always-present f32 scalar
+    (0.0 = clean); gating happens with ``jnp.where`` so the traced jaxpr is
+    independent of its value.
+    """
+    gb = train_cfg.gather_bits
+    grad_bits = as_policy(qcfg).base.grad_bits
+
+    def loss_with_health(params, batch, key):
+        # the collector opens INSIDE the differentiated function so the
+        # probe tracers return through the aux pytree, not a Python global
+        with health.collect() as hp:
+            loss, metrics = loss_fn(params, batch, cfg, qcfg, key)
+        scal = {k: v for k, v in metrics.items() if jnp.ndim(v) == 0}
+        return loss, {**scal, "health": hp}
+
+    def step(params, opt_state, batch, key, inject_nan):
+        if gb and mesh is not None and "data" in mesh.axis_names:
+            qparams = sharding.quantized_all_gather(
+                params, mesh, bits=gb, pspecs=param_specs)
+        elif gb:
+            qparams = jax.tree.map(
+                lambda p: qtensor.fake_quant_ste(p, gb), params)
+        else:
+            qparams = params
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_with_health, has_aux=True)(qparams, batch, key)
+        bad = jnp.where(inject_nan > 0, jnp.float32(jnp.nan), 0.0)
+        grads = jax.tree.map(lambda g: g + bad.astype(g.dtype), grads)
+
+        # gradient health at the policy's grad_bits: worst clip, element-
+        # weighted mean zero-fraction, total non-finite, max step exponent
+        leaves = jax.tree.leaves(grads)
+        gs = [health.stats(g, grad_bits) for g in leaves]
+        sizes = jnp.asarray([g.size for g in leaves], jnp.float32)
+        gh = {
+            "clip": jnp.max(jnp.stack([s["clip"] for s in gs])),
+            "zero": (jnp.sum(jnp.stack([s["zero"] for s in gs]) * sizes)
+                     / jnp.sum(sizes)),
+            "nonfinite": jnp.sum(jnp.stack([s["nonfinite"] for s in gs])),
+            "exp": jnp.max(jnp.stack([s["exp"] for s in gs])),
+        }
+        finite = gh["nonfinite"] == 0
+
+        def do_update(_):
+            p2, o2, om = opt_lib.update(opt_cfg, grads, opt_state, params)
+            return p2, o2, {"grad_norm": om["grad_norm"], "lr": om["lr"]}
+
+        def skip(_):
+            # bit-identical pass-through; lr 0 marks the skip in the logs
+            return params, opt_state, {
+                "grad_norm": opt_lib.global_norm(grads),
+                "lr": jnp.float32(0.0)}
+
+        params, opt_state, om = jax.lax.cond(finite, do_update, skip, None)
+        metrics = {"loss": loss, **metrics, **om,
+                   "skipped": (~finite).astype(jnp.float32),
+                   "health": {**metrics["health"], "grads": gh}}
+        return params, opt_state, metrics
+
+    return step
+
+
+Event = Dict[str, Any]
+
+
+class Sentinel:
+    """Host-side reaction loop over sentinel-step metrics.
+
+    ``observe(step, metrics)`` returns a rebuilt :class:`QuantPolicy` when a
+    scope escalated (the caller re-jits its step with it) or ``None``.
+    Raises :class:`NumericsError` on a persistent non-finite streak.
+    """
+
+    def __init__(self, cfg: SentinelConfig, qcfg: QuantLike,
+                 on_event: Optional[Callable[[Event], None]] = None):
+        self.cfg = cfg
+        self.policy = as_policy(qcfg)
+        self.on_event = on_event
+        self.events: List[Event] = []
+        self.hot: Dict[str, int] = {}
+        self.escalated: Dict[str, int] = {}
+        self.escalations = 0
+        self.cooldown_until = -1
+        self.nonfinite_streak = 0
+
+    def _emit(self, ev: Event) -> None:
+        self.events.append(ev)
+        if self.on_event is not None:
+            self.on_event(ev)
+
+    def observe(self, step: int, metrics: Dict[str, Any]
+                ) -> Optional[QuantPolicy]:
+        if float(metrics.get("skipped", 0.0)) > 0:
+            self.nonfinite_streak += 1
+            self._emit({"type": "skip-step", "step": step,
+                        "streak": self.nonfinite_streak})
+            if self.nonfinite_streak >= self.cfg.nonfinite_patience:
+                raise NumericsError(
+                    f"{self.nonfinite_streak} consecutive non-finite-"
+                    f"gradient steps at step {step}; skipping cannot "
+                    "recover — restore from checkpoint or widen bits")
+        else:
+            self.nonfinite_streak = 0
+
+        new_policy = None
+        hp = metrics.get("health") or {}
+        for tag in sorted(hp):
+            if tag == "grads" or tag in self.escalated:
+                continue
+            clip = float(hp[tag]["clip"])
+            if clip >= self.cfg.clip_high:
+                self.hot[tag] = self.hot.get(tag, 0) + 1
+            elif clip <= self.cfg.clip_low:
+                self.hot[tag] = 0
+            # clip_low < clip < clip_high: hysteresis — streak holds
+            if (self.hot.get(tag, 0) >= self.cfg.patience
+                    and step >= self.cooldown_until
+                    and self.escalations < self.cfg.max_escalations):
+                new_policy = self._escalate(step, tag)
+        return new_policy
+
+    def _escalate(self, step: int, tag: str) -> QuantPolicy:
+        b = self.cfg.escalate_bits
+        self.escalations += 1
+        self.cooldown_until = step + self.cfg.cooldown
+        self.escalated[tag] = b
+        self.hot[tag] = 0
+        # tag "blocks.*.mlp" -> pattern "blocks.*.mlp*" covers the module
+        # and all its leaves; appended rules out-rank earlier ties
+        self.policy = QuantPolicy(
+            base=self.policy.base,
+            rules=self.policy.rules + (
+                rule(tag + "*", weight_bits=b, act_bits=b, grad_bits=b,
+                     warn_stability=False),))
+        self._emit({"type": "escalation", "step": step, "scope": tag,
+                    "bits": b, "n": self.escalations})
+        return self.policy

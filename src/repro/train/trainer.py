@@ -50,8 +50,13 @@ def make_grads_fn(loss_fn: LossFn, cfg, qcfg: QuantLike, microbatches: int):
     def single(params, batch, key):
         (loss, metrics), grads = jax.value_and_grad(
             loss_fn, has_aux=True)(params, batch, cfg, qcfg, key)
-        return grads, {"loss": loss, **{k: v for k, v in metrics.items()
-                                        if jnp.ndim(v) == 0}}
+        # scalar metrics only (arrays would blow up the replicated metric
+        # tree) — but nested dicts of scalars (the sentinel health pytree)
+        # pass whole
+        return grads, {"loss": loss,
+                       **{k: v for k, v in metrics.items()
+                          if all(jnp.ndim(l) == 0
+                                 for l in jax.tree.leaves(v))}}
 
     if microbatches <= 1:
         return single

@@ -1,0 +1,419 @@
+"""Numerics sentinel + chaos harness: health counters, skip-step, policy
+escalation, deterministic fault injection, crc-verified checkpoint fallback,
+and end-to-end recovery equivalence (DESIGN.md §9)."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.core import health, int_ops, qtensor
+from repro.core.qconfig import QuantConfig
+from repro.core.qpolicy import QuantPolicy
+from repro.models import lm
+from repro.train import (chaos, checkpoint, fault, optimizer as opt_lib,
+                         sentinel, trainer)
+from repro.utils import count_pallas_calls
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _toy_batch(cfg, bs=2, seq=16):
+    return {"tokens": jax.random.randint(KEY, (bs, seq), 0, cfg.vocab),
+            "labels": jax.random.randint(KEY, (bs, seq), 0, cfg.vocab)}
+
+
+# ------------------------- health counters -------------------------------
+
+def test_probe_is_noop_without_collector():
+    """No active collector => probe traces ZERO operations: the jaxpr is
+    byte-identical to the probe-free function (the zero-overhead guarantee
+    every non-sentinel step relies on)."""
+    x = jnp.ones((4, 4))
+
+    def with_probe(x):
+        health.probe(("blocks", "0", "attn"), x, 8)
+        return x * 2.0
+
+    def without_probe(x):
+        return x * 2.0
+
+    assert str(jax.make_jaxpr(with_probe)(x)) == \
+        str(jax.make_jaxpr(without_probe)(x))
+
+
+def test_health_stats_counters():
+    # half the values clip at lim, none are zero after rounding
+    x = jnp.array([1.0, -1.0, 0.5, 127.0])
+    s = health.stats(x, 8)
+    assert 0.0 <= float(s["clip"]) <= 1.0
+    assert float(s["nonfinite"]) == 0.0
+    s2 = health.stats(jnp.array([jnp.nan, jnp.inf, 1.0]), 8)
+    assert float(s2["nonfinite"]) == 2.0
+    # mantissa at the saturation point (127 = 2^7-1) -> clip rate 1
+    s3 = health.stats(jnp.full((8,), 127.0), 8)
+    assert float(s3["clip"]) == 1.0
+    assert float(s3["zero"]) == 0.0
+
+
+def test_canonical_tag_wildcards_layer_indices():
+    assert health.canonical_tag(("blocks", "3", "attn")) == "blocks.*.attn"
+    assert health.canonical_tag(("blocks", "-1", "mlp")) == "blocks.*.mlp"
+    assert health.canonical_tag(("embed",)) == "embed"
+
+
+def test_collect_gathers_model_scopes():
+    cfg = registry.get_config("smollm-135m").reduced()
+    qcfg = QuantConfig.int8()
+    params = lm.lm_init(KEY, cfg)
+    batch = _toy_batch(cfg)
+
+    with health.collect() as hp:
+        loss, _ = lm.lm_loss(params, batch, cfg, qcfg, KEY)
+    assert {"embed", "lm_head", "blocks.*.attn", "blocks.*.mlp"} <= set(hp)
+    for tag, counters in hp.items():
+        for k in ("clip", "zero", "nonfinite", "exp"):
+            assert jnp.ndim(counters[k]) == 0, (tag, k)
+        assert 0.0 <= float(counters["clip"]) <= 1.0, tag
+        assert float(counters["nonfinite"]) == 0.0, tag
+
+
+# --------------------------- sentinel step -------------------------------
+
+def _sentinel_fixture(qcfg=None):
+    cfg = registry.get_config("smollm-135m").reduced()
+    qcfg = qcfg or QuantConfig.int8()
+    params = lm.lm_init(KEY, cfg)
+    opt_state = opt_lib.init(params)
+    opt_cfg = opt_lib.OptimizerConfig(lr=1e-3)
+    step = jax.jit(sentinel.make_sentinel_step(lm.lm_loss, cfg, qcfg, opt_cfg))
+    return cfg, params, opt_state, step
+
+
+def test_sentinel_step_clean_updates_and_reports_health():
+    cfg, params, opt_state, step = _sentinel_fixture()
+    batch = _toy_batch(cfg)
+    p2, o2, m = step(params, opt_state, batch, KEY, jnp.float32(0.0))
+    assert float(m["skipped"]) == 0.0
+    assert float(m["lr"]) > 0.0
+    assert "grads" in m["health"]
+    assert float(m["health"]["grads"]["nonfinite"]) == 0.0
+    # the update actually moved the params
+    assert any(bool(jnp.any(a != b)) for a, b in
+               zip(jax.tree.leaves(p2), jax.tree.leaves(params)))
+
+
+def test_sentinel_skips_nonfinite_step_bit_identical():
+    cfg, params, opt_state, step = _sentinel_fixture()
+    batch = _toy_batch(cfg)
+    p2, o2, m = step(params, opt_state, batch, KEY, jnp.float32(1.0))
+    assert float(m["skipped"]) == 1.0
+    assert float(m["lr"]) == 0.0
+    assert float(m["health"]["grads"]["nonfinite"]) > 0
+    for a, b in zip(jax.tree.leaves(p2), jax.tree.leaves(params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(o2), jax.tree.leaves(opt_state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # recovery: the very next clean step updates again
+    p3, _, m3 = step(p2, o2, batch, KEY, jnp.float32(0.0))
+    assert float(m3["skipped"]) == 0.0
+
+
+def test_sentinel_adds_zero_pallas_dispatches():
+    """The acceptance property for 'telemetry at zero extra dispatches':
+    with the pallas backend, the sentinel step traces exactly as many
+    pallas_call equations as the plain train step."""
+    cfg = registry.get_config("smollm-135m").reduced()
+    qcfg = dataclasses.replace(QuantConfig.int8(), backend="pallas",
+                               stochastic_grad=False)
+    params = lm.lm_init(KEY, cfg)
+    opt_state = opt_lib.init(params)
+    batch = _toy_batch(cfg)
+    opt_cfg = opt_lib.OptimizerConfig(lr=1e-3)
+    plain = trainer.make_train_step(lm.lm_loss, cfg, qcfg, opt_cfg)
+    sent = sentinel.make_sentinel_step(lm.lm_loss, cfg, qcfg, opt_cfg)
+    n_plain = count_pallas_calls(
+        jax.make_jaxpr(plain)(params, opt_state, batch, KEY))
+    n_sent = count_pallas_calls(jax.make_jaxpr(sent)(
+        params, opt_state, batch, KEY, jnp.float32(0.0)))
+    assert n_plain > 0
+    assert n_sent == n_plain, (n_sent, n_plain)
+
+
+# ------------------------- sentinel policy loop --------------------------
+
+def _metrics(clip_by_tag, skipped=0.0):
+    hp = {tag: {"clip": jnp.float32(c), "zero": jnp.float32(0.0),
+                "nonfinite": jnp.float32(0.0), "exp": jnp.float32(0.0)}
+          for tag, c in clip_by_tag.items()}
+    return {"skipped": jnp.float32(skipped), "health": hp}
+
+
+def test_sentinel_escalates_after_patience():
+    cfg = sentinel.SentinelConfig(clip_high=0.25, patience=3, cooldown=5)
+    s = sentinel.Sentinel(cfg, QuantConfig.int8())
+    pol = None
+    for step in range(5):
+        pol = s.observe(step, _metrics({"blocks.*.mlp": 0.4})) or pol
+        if pol is not None:
+            break
+    assert pol is not None and step == 2          # 3rd hot step escalates
+    assert s.escalated == {"blocks.*.mlp": 16}
+    leaf = pol.resolve("blocks.3.mlp.w1")
+    assert leaf.weight_bits == 16 and leaf.act_bits == 16
+    # untouched scopes keep the base widths
+    base = pol.resolve("blocks.0.attn.wq")
+    assert base.weight_bits == QuantConfig.int8().weight_bits
+    ev = [e for e in s.events if e["type"] == "escalation"]
+    assert len(ev) == 1 and ev[0]["scope"] == "blocks.*.mlp"
+
+
+def test_sentinel_hysteresis_band_holds_streak():
+    cfg = sentinel.SentinelConfig(clip_high=0.25, clip_low=0.05, patience=3)
+    s = sentinel.Sentinel(cfg, QuantConfig.int8())
+    # two hot steps, then a mid-band step (streak holds), then hot again
+    assert s.observe(0, _metrics({"embed": 0.4})) is None
+    assert s.observe(1, _metrics({"embed": 0.4})) is None
+    assert s.observe(2, _metrics({"embed": 0.15})) is None    # holds at 2
+    assert s.observe(3, _metrics({"embed": 0.4})) is not None
+    # a cool step RESETS the streak
+    s2 = sentinel.Sentinel(cfg, QuantConfig.int8())
+    s2.observe(0, _metrics({"embed": 0.4}))
+    s2.observe(1, _metrics({"embed": 0.4}))
+    s2.observe(2, _metrics({"embed": 0.01}))                  # reset
+    assert s2.observe(3, _metrics({"embed": 0.4})) is None
+    assert s2.hot["embed"] == 1
+
+
+def test_sentinel_cooldown_and_budget_bound_recompiles():
+    cfg = sentinel.SentinelConfig(patience=1, cooldown=10, max_escalations=2)
+    s = sentinel.Sentinel(cfg, QuantConfig.int8())
+    hot = {"a": 0.9, "b": 0.9, "c": 0.9}
+    p0 = s.observe(0, _metrics(hot))
+    assert p0 is not None and s.escalations == 1
+    # cooldown: steps 1..9 escalate nothing even though scopes stay hot
+    for k in range(1, 10):
+        assert s.observe(k, _metrics(hot)) is None
+    p1 = s.observe(10, _metrics(hot))
+    assert p1 is not None and s.escalations == 2
+    # budget exhausted: never escalates again
+    for k in range(20, 40):
+        assert s.observe(k, _metrics(hot)) is None
+    assert s.escalations == 2
+
+
+def test_sentinel_raises_on_persistent_nonfinite():
+    s = sentinel.Sentinel(sentinel.SentinelConfig(nonfinite_patience=3),
+                          QuantConfig.int8())
+    s.observe(0, _metrics({}, skipped=1.0))
+    s.observe(1, _metrics({}, skipped=1.0))
+    with pytest.raises(sentinel.NumericsError):
+        s.observe(2, _metrics({}, skipped=1.0))
+    # a clean step in between resets the streak
+    s2 = sentinel.Sentinel(sentinel.SentinelConfig(nonfinite_patience=3),
+                           QuantConfig.int8())
+    s2.observe(0, _metrics({}, skipped=1.0))
+    s2.observe(1, _metrics({}, skipped=0.0))
+    s2.observe(2, _metrics({}, skipped=1.0))
+    s2.observe(3, _metrics({}, skipped=1.0))   # streak 2, no raise
+
+
+# ----------------------------- chaos harness -----------------------------
+
+def test_chaos_monkey_fires_once_per_step():
+    m = chaos.ChaosMonkey(chaos.ChaosConfig(preempt_at=(3,)))
+    state = {"x": 1}
+    with pytest.raises(chaos.Preemption):
+        m.before_step(state, 3)
+    # replayed step 3 after recovery passes clean
+    assert m.before_step(state, 3) is state
+    assert m.before_step(state, 4) is state
+
+
+def test_chaos_rng_deterministic():
+    a = chaos.ChaosMonkey(chaos.ChaosConfig(seed=5))._rng("bitflip", 7)
+    b = chaos.ChaosMonkey(chaos.ChaosConfig(seed=5))._rng("bitflip", 7)
+    assert a.integers(1 << 30) == b.integers(1 << 30)
+    c = chaos.ChaosMonkey(chaos.ChaosConfig(seed=6))._rng("bitflip", 7)
+    assert a.integers(1 << 30) != c.integers(1 << 30) or \
+        a.integers(1 << 30) != c.integers(1 << 30)
+
+
+def test_corrupt_qtensor_mantissa_and_exponent():
+    t = qtensor.quantize(jax.random.normal(KEY, (16, 16)), 8)
+    rng = np.random.default_rng(0)
+    flipped = chaos.corrupt_qtensor(t, rng)
+    dm = np.asarray(flipped.m) != np.asarray(t.m)
+    assert dm.sum() == 1                       # exactly one mantissa changed
+    np.testing.assert_array_equal(np.asarray(flipped.exp),
+                                  np.asarray(t.exp))
+    stale = chaos.corrupt_qtensor(t, rng, exponent=True)
+    assert bool(np.any(np.asarray(stale.exp) != np.asarray(t.exp)))
+    np.testing.assert_array_equal(np.asarray(stale.m), np.asarray(t.m))
+
+
+def test_corrupt_leaf_prefers_qtensor():
+    tree = {"w": jnp.ones((4, 4)),
+            "q": qtensor.quantize(jax.random.normal(KEY, (8, 8)), 8)}
+    out = chaos.corrupt_leaf(tree, np.random.default_rng(0))
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.ones((4, 4)))
+    assert bool(np.any(np.asarray(out["q"].m) != np.asarray(tree["q"].m)))
+    # float-only tree: the largest leaf gets the flip
+    tree2 = {"small": jnp.zeros((2,)), "big": jnp.zeros((64,))}
+    out2 = chaos.corrupt_leaf(tree2, np.random.default_rng(0))
+    np.testing.assert_array_equal(np.asarray(out2["small"]), np.zeros((2,)))
+    assert bool(np.any(np.asarray(out2["big"]) != 0))
+
+
+# --------------------- end-to-end recovery equivalence -------------------
+
+def _toy_sgd_loop(tmp, ccfg, steps=20):
+    cfg_q = dataclasses.replace(QuantConfig.int8(), stochastic_grad=False)
+    w0 = jax.random.normal(KEY, (16, 16)) * 0.1
+    x = jax.random.normal(jax.random.fold_in(KEY, 1), (8, 16))
+    sgd = jax.jit(lambda w: w - 0.1 * jax.grad(
+        lambda w: jnp.mean(int_ops.int_linear(x, w, None, None, cfg_q) ** 2))(w))
+    events = []
+    monkey = chaos.ChaosMonkey(ccfg)
+
+    def restore_fn():
+        got = checkpoint.restore_latest(tmp, {"w": w0},
+                                        on_event=events.append)
+        assert got is not None
+        return got
+
+    final = fault.run_with_recovery(
+        monkey.wrap(lambda st, k: {"w": sgd(st["w"])}), {"w": w0},
+        start_step=0, num_steps=steps,
+        save_fn=lambda st, k: checkpoint.save(tmp, k, st),
+        restore_fn=restore_fn, save_every=5, on_event=events.append)
+    return final, events
+
+
+def test_chaos_run_recovers_to_clean_trajectory(tmp_path):
+    """Preemption + QTensor/state bit-flip + dropped psum participant: the
+    recovered run's final state is EXACTLY the clean run's (the step is a
+    pure function of (state, step) and every fault fires once)."""
+    clean, _ = _toy_sgd_loop(str(tmp_path / "clean"), chaos.ChaosConfig())
+    ccfg = chaos.ChaosConfig(seed=7, preempt_at=(7,), bitflip_at=(12,),
+                             drop_psum_at=(16,),
+                             ckpt_dir=str(tmp_path / "chaos"))
+    chaotic, events = _toy_sgd_loop(str(tmp_path / "chaos"), ccfg)
+    np.testing.assert_array_equal(np.asarray(clean["w"]),
+                                  np.asarray(chaotic["w"]))
+    kinds = [e["type"] for e in events]
+    assert kinds.count("retry") == 3
+    assert kinds.count("restore") == 3
+    errors = {e["error"] for e in events if e["type"] == "retry"}
+    assert errors == {"Preemption", "StateCorruption", "CollectiveTimeout"}
+
+
+def test_chaos_corrupt_ckpt_falls_back_to_previous(tmp_path):
+    """corrupt_ckpt_at flips bytes in the newest checkpoint leaf; recovery
+    must reject it (crc) and restore the previous retained step."""
+    ccfg = chaos.ChaosConfig(seed=3, corrupt_ckpt_at=(12,),
+                             ckpt_dir=str(tmp_path))
+    final, events = _toy_sgd_loop(str(tmp_path), ccfg)
+    kinds = [e["type"] for e in events]
+    assert "ckpt-corrupt" in kinds          # step 10's checkpoint rejected
+    restores = [e for e in events if e["type"] == "restore"]
+    assert restores and restores[0]["step"] == 5
+    clean, _ = _toy_sgd_loop(str(tmp_path / "clean"), chaos.ChaosConfig())
+    np.testing.assert_array_equal(np.asarray(clean["w"]),
+                                  np.asarray(final["w"]))
+
+
+# ---------------------- checkpoint crc hardening -------------------------
+
+def _save_two(tmp_path):
+    state1 = {"w": jnp.arange(16.0).reshape(4, 4)}
+    state2 = {"w": jnp.arange(16.0).reshape(4, 4) * 2}
+    checkpoint.save(str(tmp_path), 1, state1)
+    checkpoint.save(str(tmp_path), 2, state2)
+    return state1, state2
+
+
+def test_restore_detects_flipped_bytes(tmp_path):
+    _, state2 = _save_two(tmp_path)
+    leaf = os.path.join(str(tmp_path), "step_0000000002", "leaf_00000.npy")
+    # flip a byte in the DATA region (last byte), leaving the header intact:
+    # only the crc can catch this
+    with open(leaf, "r+b") as f:
+        f.seek(-1, os.SEEK_END)
+        b = f.read(1)
+        f.seek(-1, os.SEEK_END)
+        f.write(bytes([b[0] ^ 0x41]))
+    with pytest.raises(checkpoint.CheckpointCorruption):
+        checkpoint.restore(str(tmp_path), 2, state2)
+    # verify=False restores the (corrupt) bytes without checking
+    checkpoint.restore(str(tmp_path), 2, state2, verify=False)
+
+
+def test_restore_latest_falls_back_on_corruption(tmp_path):
+    state1, state2 = _save_two(tmp_path)
+    leaf = os.path.join(str(tmp_path), "step_0000000002", "leaf_00000.npy")
+    chaos.corrupt_file(leaf, np.random.default_rng(0))
+    events = []
+    got = checkpoint.restore_latest(str(tmp_path), state1,
+                                    on_event=events.append)
+    assert got is not None
+    state, step = got
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(state["w"]),
+                                  np.asarray(state1["w"]))
+    assert events == [{"type": "ckpt-corrupt", "step": 2}]
+
+
+def test_latest_step_skips_broken_manifest(tmp_path):
+    _save_two(tmp_path)
+    assert checkpoint.latest_step(str(tmp_path)) == 2
+    man = os.path.join(str(tmp_path), "step_0000000002", "manifest.json")
+    with open(man, "w") as f:
+        f.write("{ not json")
+    assert checkpoint.latest_step(str(tmp_path)) == 1
+    assert checkpoint.latest_step(str(tmp_path), verify=False) == 2
+
+
+# -------------------------- fault-loop hardening -------------------------
+
+def test_recovery_emits_events_and_heartbeats(tmp_path):
+    hb = str(tmp_path / "hb")
+    fcfg = fault.FaultConfig(heartbeat_path=hb, max_retries=3)
+    calls = {"n": 0}
+    events = []
+
+    def step(state, k):
+        if k == 2 and calls["n"] == 0:
+            calls["n"] += 1
+            os.unlink(hb) if os.path.exists(hb) else None
+            raise RuntimeError("boom")
+        return state + 1
+
+    out = fault.run_with_recovery(
+        step, 0, start_step=0, num_steps=4, fault_cfg=fcfg,
+        restore_fn=lambda: (1, 1), on_event=events.append)
+    assert out == 4
+    kinds = [e["type"] for e in events]
+    assert kinds[:2] == ["retry", "restore"]
+    # the heartbeat was touched during the recovery path, before the loop
+    # resumed (the unlink above would otherwise leave it missing)
+    assert os.path.exists(hb)
+    # no stale tmp file left behind by the atomic write
+    assert not [f for f in os.listdir(tmp_path) if ".tmp-" in f]
+
+
+def test_straggler_monitor_warmup_ignores_compile_step():
+    """The compile-dominated first step must not seed the EWMA: a 60s step 0
+    followed by 1s steps would otherwise mask real stragglers."""
+    mon = fault.StragglerMonitor(fault.FaultConfig(straggler_threshold=2.0,
+                                                   warmup_steps=1))
+    assert not mon.observe(0, 60.0)           # compile step: ignored
+    assert mon.ewma is None
+    for i in range(1, 6):
+        assert not mon.observe(i, 1.0)
+    assert abs(mon.ewma - 1.0) < 1e-9
+    assert mon.observe(6, 5.0)                # a real straggler still flags
+    assert mon.flagged == [(6, 5.0)]

@@ -279,3 +279,77 @@ def test_multipod_mesh_shapes():
         print('MESH_OK')
     """, devices=512)
     assert "MESH_OK" in out
+
+
+def test_multihost_chaos_recovery_matches_clean():
+    """Injected preemption + state bit-flip + dropped psum participant on a
+    (2, 2) data/model mesh: run_with_recovery restores from crc-verified
+    checkpoints and the recovered run reproduces the clean run's final loss
+    (the step is a pure function of (state, step), so replay is exact)."""
+    out = _run("""
+        import tempfile
+        import jax, jax.numpy as jnp, numpy as np
+        from repro import sharding
+        from repro.configs import registry
+        from repro.core.qconfig import QuantConfig
+        from repro.data.pipeline import DataConfig, SyntheticLM
+        from repro.models import lm
+        from repro.train import (chaos, checkpoint, fault,
+                                 optimizer as opt_lib, trainer)
+
+        cfg = registry.get_config('smollm-135m').reduced()
+        qcfg = QuantConfig.int8()
+        key = jax.random.PRNGKey(0)
+        mesh = sharding.make_mesh_compat((2, 2), ("data", "model"))
+        sharding.set_mesh(mesh)
+        opt_cfg = opt_lib.OptimizerConfig(lr=1e-3)
+        params, opt_state, pspecs = trainer.init_train_state(
+            lambda k: lm.lm_init(k, cfg), key, mesh, fsdp=True)
+        step = trainer.jit_train_step(
+            trainer.make_train_step(lm.lm_loss, cfg, qcfg, opt_cfg,
+                                    mesh=mesh, param_specs=pspecs),
+            mesh, pspecs, donate=False)
+
+        def run(ccfg, ckpt_dir, steps=14):
+            data = SyntheticLM(DataConfig(batch_size=4, seq_len=32,
+                                          vocab=cfg.vocab, seed=3))
+            last = {}
+
+            def one(state, k):
+                p, o = state
+                b = {n: jnp.asarray(v) for n, v in next(data).items()}
+                p, o, m = step(p, o, b, jax.random.fold_in(key, k))
+                last['loss'] = float(m['loss'])
+                return (p, o)
+
+            def save_fn(state, k):
+                checkpoint.save(ckpt_dir, k,
+                                {"params": state[0], "opt": state[1],
+                                 "data": data.state()})
+
+            def restore_fn():
+                got = checkpoint.restore_latest(
+                    ckpt_dir, {"params": params, "opt": opt_state,
+                               "data": data.state()})
+                assert got is not None, 'no usable checkpoint'
+                blob, k = got
+                data.restore(blob["data"])
+                return (blob["params"], blob["opt"]), k
+
+            monkey = chaos.ChaosMonkey(ccfg)
+            final = fault.run_with_recovery(
+                monkey.wrap(one), (params, opt_state), start_step=0,
+                num_steps=steps, save_fn=save_fn, restore_fn=restore_fn,
+                save_every=4)
+            return final, last['loss']
+
+        with tempfile.TemporaryDirectory() as d:
+            _, clean_loss = run(chaos.ChaosConfig(), d)
+        with tempfile.TemporaryDirectory() as d:
+            _, chaos_loss = run(chaos.ChaosConfig(
+                seed=11, preempt_at=(6,), bitflip_at=(9,),
+                drop_psum_at=(12,), ckpt_dir=d), d)
+        assert abs(clean_loss - chaos_loss) < 1e-5, (clean_loss, chaos_loss)
+        print('CHAOS_MULTIHOST_OK')
+    """, devices=4)
+    assert "CHAOS_MULTIHOST_OK" in out

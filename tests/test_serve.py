@@ -1,12 +1,16 @@
 """Serving engine: generation correctness and continuous batching."""
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import registry
 from repro.core.qconfig import QuantConfig
 from repro.models import lm
-from repro.serve.engine import ContinuousBatcher, Engine, ServeConfig
+from repro.serve.engine import (ContinuousBatcher, Engine, QueueFull,
+                               ServeConfig)
 
 KEY = jax.random.PRNGKey(0)
 
@@ -180,3 +184,88 @@ def test_continuous_batcher_eos_stops_early():
     rid = batcher.submit(prompts[0], 10)
     results = batcher.run_until_drained()
     assert len(results[rid]) == 1 and results[rid][0] == first
+
+
+# ------------------------- robustness hardening --------------------------
+
+def test_submit_queue_full_backpressure():
+    engine, cfg, _ = _engine(slots=2)
+    engine.scfg.max_queue = 3
+    batcher = ContinuousBatcher(engine)
+    for _ in range(3):
+        batcher.submit(np.array([1, 2, 3]), 2)
+    with pytest.raises(QueueFull):
+        batcher.submit(np.array([1, 2, 3]), 2)
+    # draining the queue reopens admission
+    batcher.run_until_drained()
+    batcher.submit(np.array([1, 2, 3]), 2)
+
+
+def test_deadline_expired_in_queue_fails_fast():
+    engine, cfg, _ = _engine(slots=1)
+    batcher = ContinuousBatcher(engine)
+    live = batcher.submit(np.array([1, 2, 3]), 2)
+    dead = batcher.submit(np.array([4, 5, 6]), 2, deadline_s=-1.0)
+    results = batcher.run_until_drained()
+    assert batcher.failed == {dead: "deadline"}
+    assert len(results[dead]) == 0          # empty partial output
+    assert len(results[live]) == 2          # unaffected request completes
+
+
+def test_deadline_evicts_active_slot_with_partial_output():
+    engine, cfg, _ = _engine(slots=1)
+    batcher = ContinuousBatcher(engine)
+    rid = batcher.submit(np.array([1, 2, 3]), 50, deadline_s=60.0)
+    batcher.step()                          # admits + produces one token
+    batcher.step()
+    # force the deadline into the past mid-flight
+    batcher.slots[0].deadline = time.monotonic() - 1.0
+    batcher.step()
+    assert batcher.failed == {rid: "deadline"}
+    assert 1 <= len(batcher.results[rid]) < 50   # partial tokens delivered
+    assert not batcher.slots[0].active
+
+
+def test_poisoned_slot_evicted_batch_survives():
+    """Non-finite logits in ONE slot evict that slot only: the other
+    request keeps decoding and its output matches a clean solo run."""
+    engine, cfg, _ = _engine(slots=2)
+    prompt_a = np.array([5, 6, 7])
+    prompt_b = np.array([9, 10, 11])
+    solo = ContinuousBatcher(_engine(slots=2)[0])
+    rid_solo = solo.submit(prompt_a, 4)
+    want = solo.run_until_drained()[rid_solo]
+
+    batcher = ContinuousBatcher(engine)
+    ra = batcher.submit(prompt_a, 4)
+    rb = batcher.submit(prompt_b, 4)
+    batcher.step()                          # both admitted, one token each
+    # poison slot 1's logits row (a blown-up integer decode in that slot)
+    poisoned = np.array(batcher._logits)
+    poisoned[1, -1, :] = np.nan
+    batcher._logits = jnp.asarray(poisoned)
+    results = batcher.run_until_drained()
+    assert batcher.failed == {rb: "nonfinite_logits"}
+    assert len(results[rb]) == 1            # the one pre-poison token
+    np.testing.assert_array_equal(results[ra], want)
+
+
+def test_poisoned_slot_cache_row_reset():
+    """Eviction resets the poisoned slot's cache row from the pristine
+    cache, so a follow-up request admitted into that slot decodes clean."""
+    engine, cfg, _ = _engine(slots=1)
+    batcher = ContinuousBatcher(engine)
+    r1 = batcher.submit(np.array([3, 4, 5]), 8)
+    batcher.step()
+    poisoned = np.array(batcher._logits)
+    poisoned[0, -1, :] = np.inf
+    batcher._logits = jnp.asarray(poisoned)
+    batcher.step()                          # evicts r1
+    assert batcher.failed == {r1: "nonfinite_logits"}
+    for name, leaf in batcher.cache.items():
+        assert bool(np.isfinite(np.asarray(leaf)).all()), name
+    r2 = batcher.submit(np.array([3, 4, 5]), 4)
+    results = batcher.run_until_drained()
+    solo = ContinuousBatcher(_engine(slots=1)[0])
+    rs = solo.submit(np.array([3, 4, 5]), 4)
+    np.testing.assert_array_equal(results[r2], solo.run_until_drained()[rs])
