@@ -32,6 +32,12 @@ and reports
   reduced config — FSDP param all-gather and grad psum — plus resident
   optimizer-moment bytes (f32 Adam m/v vs QTensor moments), all from
   ``eval_shape`` so no device work is involved,
+* a kept-ops section (``kept_ops``): measured max error of every
+  ``core/iapprox.py`` integer approximation against its exact-f64 oracle in
+  ``kernels/ref.py`` over a dense domain grid, next to the DESIGN.md §10
+  documented bound, plus wall-clock of the swapped layers (norm / attention
+  / activation) and a BERT-tiny forward under ``kept_ops="fp32"`` vs
+  ``kept_ops="integer"``,
 * an attention section (``attention``): the fused integer flash-attention
   op per preset — sim-vs-pallas fwd/bwd divergence (bit-exact by
   construction: both backends quantize P and dS at identical points),
@@ -429,6 +435,108 @@ def attention_report(repeats: int = 3) -> dict:
             "presets": rows}
 
 
+def kept_ops_report(repeats: int = 3) -> dict:
+    """Integer kept ops (DESIGN.md §10): measured error vs documented bound,
+    and the cost of the swap.
+
+    ``per_op`` evaluates each ``iapprox`` approximation on a dense grid over
+    its documented domain against the exact-f64 oracle in ``kernels/ref.py``
+    and reports the measured max error beside the §10 bound (the same table
+    tests/test_iapprox.py enforces).  ``layers`` and ``bert_fwd`` time the
+    swapped call sites under ``kept_ops="fp32"`` vs ``"integer"`` — off-TPU
+    this measures XLA on the iapprox arithmetic, not a fused kernel, so the
+    interesting number is the ratio staying O(1), not the absolute µs.
+    """
+    from repro.core import iapprox
+    from repro.kernels import ref
+    from repro.models import paper_models as pm
+
+    key = jax.random.PRNGKey(0)
+    f64 = lambda a: np.asarray(a, np.float64)              # noqa: E731
+
+    def _rel(approx, exact):
+        return float(np.max(np.abs(f64(approx) - f64(exact))
+                            / np.maximum(np.abs(f64(exact)), 1e-300)))
+
+    def _abs(approx, exact):
+        return float(np.max(np.abs(f64(approx) - f64(exact))))
+
+    x30 = jnp.asarray(np.linspace(-30.0, 30.0, 100_001), jnp.float32)
+    x10 = jnp.asarray(np.linspace(-10.0, 10.0, 100_001), jnp.float32)
+    pos = jnp.asarray(np.concatenate([
+        np.linspace(0.5, 4.0, 50_001),
+        np.logspace(-30, 30, 50_001, base=2.0)]).astype(np.float32))
+    rows_x = jax.random.normal(key, (64, 128)) * 5.0
+    per_op = {
+        "i_exp": {"metric": "rel", "bound": 3e-4,
+                  "measured": _rel(iapprox.i_exp(x30), ref.i_exp_ref(x30))},
+        "i_recip": {"metric": "rel", "bound": 4e-4,
+                    "measured": _rel(iapprox.i_recip(pos),
+                                     ref.i_recip_ref(pos))},
+        "i_rsqrt": {"metric": "rel", "bound": 4e-4,
+                    "measured": _rel(iapprox.i_rsqrt(pos),
+                                     ref.i_rsqrt_ref(pos))},
+        "i_sqrt": {"metric": "rel", "bound": 4e-4,
+                   "measured": _rel(iapprox.i_sqrt(pos),
+                                    ref.i_sqrt_ref(pos))},
+        "i_sigmoid": {"metric": "abs", "bound": 1e-3,
+                      "measured": _abs(iapprox.i_sigmoid(x30),
+                                       ref.i_sigmoid_ref(x30))},
+        "i_tanh": {"metric": "abs", "bound": 1e-3,
+                   "measured": _abs(iapprox.i_tanh(x30),
+                                    ref.i_tanh_ref(x30))},
+        "i_gelu": {"metric": "abs", "bound": 2e-3,
+                   "measured": _abs(iapprox.i_gelu(x10),
+                                    ref.i_gelu_ref(x10))},
+        "i_silu": {"metric": "abs", "bound": 4e-3,
+                   "measured": _abs(iapprox.i_silu(x30),
+                                    ref.i_silu_ref(x30))},
+        "i_softmax": {"metric": "abs", "bound": 1e-3,
+                      "measured": _abs(iapprox.i_softmax(rows_x),
+                                       ref.i_softmax_ref(rows_x))},
+    }
+    for name, row in per_op.items():
+        assert row["measured"] <= row["bound"], (name, row)
+
+    # swapped-layer timings: fp32-kept vs integer-kept, sim backend
+    cfgs = {kept: dataclasses.replace(QuantConfig.int8(),
+                                      stochastic_grad=False, backend="sim",
+                                      kept_ops=kept)
+            for kept in ("fp32", "integer")}
+    xln = jax.random.normal(key, (256, 512))
+    gm, bt = jnp.ones((512,)), jnp.zeros((512,))
+    q = jax.random.normal(jax.random.fold_in(key, 1), (2, 64, 2, 2, 32))
+    k = jax.random.normal(jax.random.fold_in(key, 2), (2, 64, 2, 32))
+    v = jax.random.normal(jax.random.fold_in(key, 3), (2, 64, 2, 32))
+    xact = jax.random.normal(jax.random.fold_in(key, 4), (256, 512))
+    layer_fns = {
+        "layernorm": lambda c: int_ops.int_layernorm(xln, gm, bt, None, c),
+        "attention": lambda c: int_ops.int_attention(
+            q, k, v, jnp.asarray(0), None, c, c, True, None),
+        "gelu": lambda c: int_ops.int_activation(xact, c, "gelu"),
+        "silu": lambda c: int_ops.int_activation(xact, c, "silu"),
+    }
+    layers = {}
+    for name, fn in layer_fns.items():
+        row = {kept: _time_us(jax.jit(lambda c=c: fn(c)), repeats)
+               for kept, c in cfgs.items()}
+        row["integer_over_fp32"] = row["integer"] / row["fp32"]
+        layers[name] = row
+
+    # the acceptance subject: BERT-tiny forward, both kept modes
+    bcfg = pm.bert_config(n_layers=2, d_model=64, n_heads=2, d_ff=128,
+                          vocab=128, name="bert-tiny")
+    params = pm.bert_init(jax.random.PRNGKey(1), bcfg)
+    toks = jnp.asarray(
+        np.random.default_rng(0).integers(0, bcfg.vocab, (2, 16)))
+    bert = {}
+    for kept, c in cfgs.items():
+        step = jax.jit(lambda p, t, c=c: pm.bert_apply(p, t, bcfg, c, None))
+        bert[kept] = _time_us(lambda: step(params, toks), repeats)
+    bert["integer_over_fp32"] = bert["integer"] / bert["fp32"]
+    return {"per_op": per_op, "layers": layers, "bert_fwd_us": bert}
+
+
 def robustness_report(steps: int = 20) -> dict:
     """Fault-injection recovery + sentinel skip, measured end to end.
 
@@ -530,6 +638,7 @@ def run(repeats: int = 3, only: str = None) -> dict:
         "policy": lambda: policy_report(repeats=repeats),
         "state_plane": state_plane_report,
         "attention": lambda: attention_report(repeats=repeats),
+        "kept_ops": lambda: kept_ops_report(repeats=repeats),
         "robustness": robustness_report,
     }
     if only is not None and only not in sections:

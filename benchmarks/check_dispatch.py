@@ -146,6 +146,11 @@ def policy_counts() -> dict:
             QuantPolicy(base=base, rules=preset_rules("int8_embed16"))),
         "bert_step_int8_firstlast16": step_counts(
             QuantPolicy(base=base, rules=preset_rules("int8_firstlast16"))),
+        # integer kept ops swap IN-KERNEL (exp/rsqrt) or at the XLA level
+        # (activations) — ZERO extra dispatches vs the same uniform int8
+        # step, pinned as its own entry so the property can't drift
+        "bert_step_int8_keptint": step_counts(QuantPolicy(
+            base=dataclasses.replace(base, kept_ops="integer"))),
     }
 
 

@@ -10,11 +10,21 @@ stability constraint (weight_bits == 8 with act_bits < 12 — the Fig. 4
 divergence regime) are flagged ``UNSTABLE`` in the table; constructing those
 leaves also emits the ``StabilityWarning`` from ``QuantConfig``.
 
+A second, orthogonal axis (``--kept-ops``) sweeps the DESIGN.md §10 integer
+kept-ops swap the same way: the whole model stays at the paper's int8 with
+the kept FP32 ops, and ONE scope at a time swaps its kept ops (softmax exp,
+GeLU/SiLU, norm rsqrt, pooler tanh) for the ``core/iapprox.py`` fixed-point
+forms, reporting the metric delta vs both the FP32-kept run and the
+everything-integer run.
+
     PYTHONPATH=src python examples/finetune_layer_sensitivity.py --steps 80
     PYTHONPATH=src python examples/finetune_layer_sensitivity.py \
         --task span --paper-int8   # drop scopes to w8-a12-g8 instead
+    PYTHONPATH=src python examples/finetune_layer_sensitivity.py \
+        --kept-ops                 # sweep the integer kept-ops axis instead
 """
 import argparse
+import dataclasses
 import sys
 
 sys.path.insert(0, ".")
@@ -37,9 +47,45 @@ SCOPES = [
 ]
 
 
+#: (label, glob pattern) — the kept-op call-site scopes of the proxy models
+#: (DESIGN.md §10): the attention softmax exp resolves at the ``attn.qk``
+#: leaf, GeLU/SiLU at ``mlp.act`` (and the BERT pooler tanh at
+#: ``pooler.act``), the norm rsqrt at the ``ln*`` leaves.
+KEPT_SCOPES = [
+    ("softmax exp", "*.attn.qk"),
+    ("activations", "*.act*"),
+    ("norm rsqrt", "*ln*"),
+    ("everything", "*"),
+]
+
+
 def block_scopes(n_layers):
     return [(f"block {i}", f"blocks.{i}.*", f"blocks.{i}.attn.wq")
             for i in range(n_layers)]
+
+
+def kept_ops_sweep(args, ft):
+    """The --kept-ops axis: int8 body everywhere; ONE scope at a time swaps
+    its kept FP32 ops for the iapprox integer forms."""
+    base = dataclasses.replace(QuantConfig.int8(), kept_ops="fp32")
+    print(f"kept-ops axis (task={args.task}, {args.steps} steps/point, "
+          "body uniform w8-a12-g8):")
+    ref, _ = finetune(args.task, base, ft)
+    all_int, _ = finetune(
+        args.task, dataclasses.replace(base, kept_ops="integer"), ft)
+    print(f"  {'fp32 kept ops (paper)':22s} metric={ref:6.2f}")
+    print(f"  {'integer kept ops (all)':22s} metric={all_int:6.2f} "
+          f"({all_int - ref:+.2f})")
+    print(f"\n  {'scope':12s} {'pattern':12s} {'metric':>7s} {'delta':>7s}")
+    for label, pattern in KEPT_SCOPES:
+        policy = QuantPolicy(base=base, rules=(
+            rule(pattern, kept_ops="integer"),))
+        metric, _ = finetune(args.task, policy, ft)
+        print(f"  {label:12s} {pattern:12s} {metric:7.2f} {metric - ref:+7.2f}")
+    print("\nnote: deltas the size of the fp32-vs-int8 gap mean the iapprox "
+          "approximation error is visible to the proxy task; near-zero "
+          "deltas mean the swap is metric-neutral at these bounds "
+          "(tests/test_iapprox.py pins the per-op bounds themselves).")
 
 
 def drop_overrides(paper_int8: bool):
@@ -66,9 +112,15 @@ def main():
     ap.add_argument("--blocks", type=int, default=4,
                     help="number of per-block scopes to sweep "
                          "(the proxy models have 4 layers)")
+    ap.add_argument("--kept-ops", action="store_true",
+                    help="sweep the integer kept-ops axis (DESIGN.md §10) "
+                         "instead of the bit-width axis")
     args = ap.parse_args()
 
     ft = FtConfig(steps=args.steps)
+    if args.kept_ops:
+        kept_ops_sweep(args, ft)
+        return
     base = QuantConfig.preset(args.base)
     if not isinstance(base, QuantConfig):
         raise SystemExit(f"--base must be a uniform config preset "

@@ -54,11 +54,13 @@ def _pallas_policy(preset: str):
 
 
 def _loss_thunk(config: str, policy):
-    """Build ``(loss_of_params, params)`` for one config, policy closed over.
-
-    Reduced dims everywhere — the invariants are structural, so the tiny
-    variant proves the same properties as the published shape while keeping
-    a full ``--config all`` sweep tractable on CPU.
+    """Build ``(loss_of_params, fwd_of_params, params)`` for one config,
+    policy closed over.  ``fwd_of_params`` is the *inference* forward —
+    the subject of the kept-ops invariant (QL008): the model apply for the
+    paper subjects, a decode step for the serving stacks.  Reduced dims
+    everywhere — the invariants are structural, so the tiny variant proves
+    the same properties as the published shape while keeping a full
+    ``--config all`` sweep tractable on CPU.
     """
     import jax
     import jax.numpy as jnp
@@ -73,6 +75,8 @@ def _loss_thunk(config: str, policy):
         batch = {"tokens": jnp.zeros((2, 16), jnp.int32),
                  "labels": jnp.zeros((2,), jnp.int32)}
         return (lambda p: pm.bert_cls_loss(p, batch, cfg, policy, key)[0],
+                lambda p: pm.bert_apply(p, batch["tokens"], cfg, policy,
+                                        key),
                 params)
 
     if config == "vit_base":
@@ -84,6 +88,8 @@ def _loss_thunk(config: str, policy):
                  "labels": jnp.zeros((2,), jnp.int32)}
         return (lambda p: pm.vit_cls_loss(p, batch, cfg, policy, key,
                                           patch=16)[0],
+                lambda p: pm.vit_apply(p, batch["images"], cfg, policy, key,
+                                       patch=16),
                 params)
 
     from repro.configs import registry
@@ -100,22 +106,47 @@ def _loss_thunk(config: str, policy):
     if cfg.vlm_prefix:
         batch["patch_embeds"] = jnp.zeros((B, cfg.vlm_prefix, cfg.d_model),
                                           jnp.float32)
-    return (lambda p: loss_fn(p, batch, cfg, policy, key)[0], params)
+    tok1 = jnp.zeros((B, 1), jnp.int32)
+    if cfg.enc_dec:
+        def fwd(p):
+            enc = encdec.encode(p, batch["frames"], cfg, policy, key)
+            cross = encdec.encdec_precompute_cross(p, enc, cfg, policy)
+            cache = encdec.encdec_init_cache(cfg, B, S)
+            return encdec.encdec_decode_step(p, tok1, cache, cross, cfg,
+                                             policy)[0]
+    else:
+        def fwd(p):
+            cache = lm.init_cache(cfg, B, S, dtype=jnp.float32)
+            return lm.lm_decode_step(p, tok1, cache, cfg, policy)[0]
+    return (lambda p: loss_fn(p, batch, cfg, policy, key)[0], fwd, params)
 
 
 def lint_cell(config: str, preset: str) -> Dict[str, Any]:
-    """Trace one ``config × preset`` cell and run every rule on it."""
+    """Trace one ``config × preset`` cell and run every rule on it.
+
+    QL008 (kept-op escape) is a *forward-pass* property: the paper's
+    kept-ops set covers the inference ops (softmax exp, GeLU/SiLU, norm
+    rsqrt, pooler tanh), while the training loss head's ``log_softmax`` is
+    the documented training-only exemption (DESIGN.md §10).  So the grad
+    trace runs the rule battery with QL008 off, and the rule is applied to
+    the inference forward trace instead whenever the policy carries
+    ``kept_ops="integer"``.
+    """
     import jax
 
     from repro.analysis import rules
     from repro.core import qpolicy
 
     policy = _pallas_policy(preset)
-    loss, params = _loss_thunk(config, policy)
+    loss, fwd, params = _loss_thunk(config, policy)
     with qpolicy.record_resolutions() as recs:
         jaxpr = jax.make_jaxpr(jax.grad(loss))(params)
     paths = [p for pol, p in recs if pol == policy]
-    findings = rules.run_rules(jaxpr, policy=policy, resolutions=paths)
+    findings = rules.run_rules(jaxpr, policy=policy, resolutions=paths,
+                               kept_ops=False)
+    if rules._policy_wants_integer_kept_ops(policy):
+        findings = findings + rules.check_kept_ops(
+            jax.make_jaxpr(fwd)(params))
     counts = rules.dispatch_counts(jaxpr)
     return {
         "config": config,

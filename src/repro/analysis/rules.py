@@ -34,8 +34,17 @@ QL007    wire-format         no float32 ``all_gather`` moves a tensor the
                              carry int8 limb planes + a per-shard exponent
                              (sharding.quantized_all_gather), ~4x fewer
                              bytes on the wire
+QL008    kept-op-escape      under a ``kept_ops="integer"`` policy no
+                             ``exp``/``erf``/``logistic``/``tanh``/``rsqrt``
+                             primitive is reachable outside a ``pallas_call``
+                             — every kept op runs its iapprox fixed-point
+                             form (DESIGN.md §10); purely iota/literal-
+                             derived constant tables (rope frequencies) are
+                             exempt
 
-Graph rules (QL001/QL002/QL006/QL007) need only a closed jaxpr; policy rules
+Graph rules (QL001/QL002/QL006/QL007/QL008) need only a closed jaxpr —
+QL008 additionally gates on the policy carrying ``kept_ops="integer"``
+anywhere (base or any rule override); policy rules
 (QL003/QL005) need the resolutions recorded while tracing
 (``qpolicy.record_resolutions``); QL004 compares count dicts and is what
 ``benchmarks/check_dispatch.py`` delegates to.
@@ -53,7 +62,8 @@ from repro.analysis import budget, walker
 __all__ = ["Finding", "ALL_RULES", "check_integer_closure",
            "check_key_discipline", "check_policy_hygiene",
            "check_dispatch_budget", "check_stability", "check_accum_budget",
-           "check_wire_format", "dispatch_counts", "run_rules"]
+           "check_wire_format", "check_kept_ops", "dispatch_counts",
+           "run_rules"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -564,6 +574,76 @@ def check_wire_format(jaxpr) -> List[Finding]:
 
 
 # =========================================================================
+# QL008 — kept-op escape
+# =========================================================================
+
+#: the paper's kept FP32 transcendentals — what ``kept_ops="integer"``
+#: promises to replace with iapprox forms.  ``log``/``exp2`` are
+#: deliberately NOT here: the attention lse epilogue keeps a float log (it
+#: never touches activations downstream) and ``exp2`` of integer exponents
+#: is the exact power-of-two scaling every dequantize step uses.
+_KEPT_PRIMS = frozenset({"exp", "erf", "logistic", "tanh", "rsqrt"})
+
+
+class _KeptOpsSemantics(walker.Semantics):
+    """QL008 taint walk — the QL001 iota-tracking reduced to one tag.
+
+    Only ``_IOTA`` is tracked: a kept-prim whose every input is
+    iota/literal-derived (a data-independent constant table, e.g. rope's
+    ``exp`` over scaled ``iota`` frequencies) is benign.  Anything touched
+    by real data loses the tag, so a ``tanh`` on activations outside a
+    ``pallas_call`` is flagged.
+    """
+
+    def __init__(self):
+        self.findings: List[Finding] = []
+
+    def literal(self, lit):
+        return _IOTA
+
+    def eqn(self, eqn, in_vals, ctx):
+        prim = eqn.primitive.name
+        const_only = bool(in_vals) and all(v == _IOTA for v in in_vals)
+        if not ctx.inside_pallas and prim in _KEPT_PRIMS and not const_only:
+            self.findings.append(Finding(
+                code="QL008", rule="kept-op-escape",
+                message=f"{prim} outside a pallas kernel under a "
+                        'kept_ops="integer" policy — route the call site '
+                        "through the iapprox fixed-point form "
+                        "(int_ops.int_activation / i_rsqrt / i_exp, "
+                        "DESIGN.md §10)",
+                where=_src(eqn)))
+        if prim == "iota":
+            return [_IOTA]
+        if walker.sub_jaxprs(eqn) and prim != "pallas_call":
+            return None                                  # generic descent
+        # a value computed ONLY from literals/iota stays index math through
+        # any primitive — it cannot carry activations
+        if const_only and prim != "pallas_call":
+            return [_IOTA] * len(eqn.outvars)
+        return [None] * len(eqn.outvars)
+
+
+#: FP32-by-design regions the kept-ops swap deliberately does not cover
+#: (DESIGN.md §10): the SSD selective-scan recurrence in ``models/ssm.py``
+#: and its softplus-dt / ``exp(A_log)`` reparameterization — never
+#: quantized, same category as the optimizer (see the scope docs in
+#: ``models/lm.py``).  Findings whose source frame lands in one of these
+#: functions are suppressed.
+_KEPT_OPS_EXEMPT_FNS = ("ssd_chunked", "ssd_decode_step", "mamba2_apply")
+
+
+def check_kept_ops(jaxpr,
+                   exempt_fns: Sequence[str] = _KEPT_OPS_EXEMPT_FNS
+                   ) -> List[Finding]:
+    """QL008 on one (closed) jaxpr traced under ``kept_ops="integer"``."""
+    sem = _KeptOpsSemantics()
+    walker.interpret(jaxpr, sem)
+    return [f for f in sem.findings
+            if not any(f"({fn})" in f.where for fn in exempt_fns)]
+
+
+# =========================================================================
 # Registry / driver
 # =========================================================================
 
@@ -575,21 +655,41 @@ ALL_RULES = {
     "QL005": "stability",
     "QL006": "accum-budget",
     "QL007": "wire-format",
+    "QL008": "kept-op-escape",
 }
+
+
+def _policy_wants_integer_kept_ops(policy) -> bool:
+    """Does the policy carry ``kept_ops="integer"`` anywhere — base config
+    or any rule override?  (The activation gate for QL008.)"""
+    if getattr(policy.base, "kept_ops", "fp32") == "integer":
+        return True
+    return any(dict(r.overrides).get("kept_ops") == "integer"
+               for r in policy.rules)
 
 
 def run_rules(jaxpr, *, policy=None,
               resolutions: Optional[Sequence[Tuple[str, ...]]] = None,
+              kept_ops: Optional[bool] = None,
               ) -> List[Finding]:
     """All graph rules on one traced jaxpr, plus the policy rules when the
     trace's policy and recorded resolutions are supplied.  (QL004 runs
     against a baseline via ``check_dispatch_budget`` — see
-    ``benchmarks/check_dispatch.py``.)"""
+    ``benchmarks/check_dispatch.py``.)
+
+    QL008 runs when ``kept_ops=True``, or (``kept_ops=None``) when the
+    supplied policy carries ``kept_ops="integer"`` anywhere — a plain-FP32
+    trace legitimately keeps its float transcendentals, so the rule is
+    activation-gated rather than unconditional."""
     findings = []
     findings += check_integer_closure(jaxpr)
     findings += check_key_discipline(jaxpr)
     findings += check_accum_budget(jaxpr)
     findings += check_wire_format(jaxpr)
+    if kept_ops is None:
+        kept_ops = policy is not None and _policy_wants_integer_kept_ops(policy)
+    if kept_ops:
+        findings += check_kept_ops(jaxpr)
     if policy is not None:
         findings += check_policy_hygiene(policy, resolutions or ())
         findings += check_stability(policy, resolutions or ())

@@ -1,0 +1,244 @@
+"""Integer approximations of the paper's kept FP32 ops (DESIGN.md §10).
+
+The paper keeps softmax, GeLU/SiLU and the norm rsqrt in FP32; I-BERT
+(PAPERS.md) shows low-order polynomial *integer* approximations replace them
+with negligible metric loss.  This module is that subsystem: every function
+here computes its transcendental with **int32 fixed-point arithmetic only** —
+the traced jaxpr contains no ``exp`` / ``erf`` / ``logistic`` / ``tanh`` /
+``rsqrt`` primitive (quantlint QL008 proves it).  The only float ops used are
+exact power-of-two scalings (``exp2`` of an integer exponent, the same
+dequantization idiom the matmul kernels use), IEEE multiplies/adds, and
+round-to-nearest-even converts — all deterministic, so the same function
+traced in XLA (sim backend) and inside a Pallas kernel produces **bit
+identical** results on the same platform.  That determinism is what lets the
+kernels swap their in-kernel FP32 ops for these forms without breaking the
+sim/pallas parity contract.
+
+Fixed-point format: Q.14 — ``F = 14`` fraction bits, chosen so every
+intermediate product stays inside int32 (the widest TPU vector-integer type):
+with operands bounded by ``2^15`` and ``2^16`` the worst product is
+``< 2^31``.  Per-op construction and measured error bounds (the table in
+DESIGN.md §10 is generated from the sweeps in ``tests/test_iapprox.py``):
+
+``i_exp``    range reduction ``exp(x) = 2^q * 2^f`` with ``q = floor(x*log2 e)``
+             (an arithmetic shift — no integer division), ``f in [0,1)``
+             evaluated by a degree-3 fixed-point polynomial (Horner, Q.14).
+             Domain |x| <= 30 (clamped).  max rel err <= 3e-4.
+``i_recip``  normalize ``d = y*2^(-e-1) in [0.5,1)`` from the IEEE exponent
+             field, linear init ``48/17 - 32/17 d`` (rel err 1/17), then 3
+             Newton steps ``x <- x(2 - dx)`` in Q.14.  Quadratic convergence
+             puts the algebraic error below 1/17^8 ~ 1e-10 after 3 steps, so
+             the Q.14 truncation floor dominates.  max rel err <= 4e-4.
+``i_rsqrt``  normalize ``d = y*2^-e in [1,2)``, linear minimax init, 3 Newton
+             steps ``x <- x(3 - d x^2)/2`` in Q.14; odd exponents multiply by
+             an ``1/sqrt(2)`` constant.  max rel err <= 4e-4.
+``i_sqrt``   ``y * i_rsqrt(y)``, zero-guarded.  max rel err <= 4e-4.
+``i_sigmoid``/``i_tanh``  via ``i_exp(-|x|)`` resp. ``i_exp(-2|x|)`` and
+             ``i_recip`` on a denominator in [1,2] (the best-conditioned
+             reciprocal domain); the sign is restored by reflection, so the
+             exp argument never goes positive.  max abs err <= 1e-3.
+``i_gelu``   the tanh-form gelu (what ``jax.nn.gelu(approximate=True)``
+             computes — the form the call sites being replaced used) with the
+             tanh swapped for ``i_tanh``.  max abs err <= 2e-3 on |x| <= 10.
+``i_silu``   ``x * i_sigmoid(x)``.  max abs err <= 4e-3 on |x| <= 30.
+``i_softmax`` integer max-subtraction + ``i_exp`` + fixed-point reciprocal
+             normalizer; rows sum to 1 within 1e-3.
+
+Iteration-count bound (why 3 Newton steps suffice, both ops): with initial
+relative error ``e0`` the division-free Newton recurrences contract as
+``e_{n+1} <= e_n^2`` (reciprocal) / ``e_{n+1} <= (3/2) e_n^2`` (rsqrt).  The
+linear inits give ``e0 <= 1/17`` resp. ``e0 <= 0.018``, so after n=3 steps
+the algebraic error is ``<= 1.5e-10`` resp. ``<= 9e-8`` — already below the
+Q.14 truncation floor of ``~2^-14`` per step; a 4th step could not improve
+the result, and 2 steps would leave algebraic error above the floor.
+
+Exact-f64 oracles for every op live in ``kernels/ref.py`` and the sweeps in
+``tests/test_iapprox.py`` pin the bounds above.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["F", "i_exp", "i_recip", "i_rsqrt", "i_sqrt", "i_sigmoid",
+           "i_tanh", "i_gelu", "i_silu", "i_softmax", "d_tanh", "d_sigmoid",
+           "d_gelu", "d_silu", "EXP_CLAMP"]
+
+#: Q.14 fixed point: fraction bits of every integer intermediate.
+F = 14
+
+#: ``i_exp`` input clamp — exp(±30) spans [9.4e-14, 1.1e13], far beyond any
+#: post-max-subtraction softmax score or sigmoid argument this stack feeds it.
+EXP_CLAMP = 30.0
+
+_LOG2E = 1.4426950408889634
+
+#: degree-3 fit of ``2^f`` on [0,1), Q.14 (scripts: chebfit, see DESIGN §10).
+_EXP2_C0 = 16381
+_EXP2_C1 = 11417
+_EXP2_C2 = 3672
+_EXP2_C3 = 1295
+
+#: reciprocal Newton init 48/17 - 32/17 d on d in [0.5,1), Q.14.
+_RECIP_A = 46261
+_RECIP_B = 30840
+
+#: rsqrt Newton linear-minimax init A - B d on d in [1,2), Q.14.
+_RSQRT_A = 20559
+_RSQRT_B = 4658
+
+_INV_SQRT2 = 0.7071067811865476
+
+
+def _exp2_frac(r: jax.Array) -> jax.Array:
+    """Q.14 polynomial for ``2^f``; ``r = round(f * 2^F)`` in [0, 2^F)."""
+    acc = jnp.full_like(r, _EXP2_C3)
+    for c in (_EXP2_C2, _EXP2_C1, _EXP2_C0):
+        acc = ((acc * r) >> F) + c
+    return acc
+
+
+def i_exp(x: jax.Array) -> jax.Array:
+    """Integer-arithmetic ``exp(x)`` on |x| <= 30 (clamped outside).
+
+    ``exp(x) = 2^(x log2 e) = 2^q * 2^f`` with the integer part ``q``
+    extracted by an arithmetic shift (exact floor, no division primitive)
+    and the fractional part fed to the Q.14 polynomial.
+    """
+    x = jnp.clip(x.astype(jnp.float32), -EXP_CLAMP, EXP_CLAMP)
+    ti = jnp.round(x * jnp.float32(_LOG2E) * (1 << F)).astype(jnp.int32)
+    q = ti >> F                       # floor(x log2 e), exact for negatives
+    r = ti - (q << F)                 # fractional part in [0, 2^F)
+    acc = _exp2_frac(r)
+    return acc.astype(jnp.float32) * jnp.exp2((q - F).astype(jnp.float32))
+
+
+def _floor_log2(y: jax.Array) -> jax.Array:
+    """``floor(log2 y)`` for positive normal f32, read off the IEEE exponent
+    field (bitcast + shift — no transcendental primitive)."""
+    b = jax.lax.bitcast_convert_type(y.astype(jnp.float32), jnp.int32)
+    return (b >> 23) - 127
+
+
+def i_recip(y: jax.Array) -> jax.Array:
+    """Integer-Newton ``1/y`` for positive normal f32 ``y``.
+
+    3 division-free Newton steps ``x <- x (2 - d x)`` in Q.14 on the
+    normalized ``d = y * 2^(-e-1) in [0.5, 1)`` — see the iteration-count
+    bound in the module docstring.
+    """
+    y = y.astype(jnp.float32)
+    e = _floor_log2(y)
+    d = jnp.round(y * jnp.exp2((-(e + 1)).astype(jnp.float32))
+                  * (1 << F)).astype(jnp.int32)     # [2^(F-1), 2^F]
+    x = _RECIP_A - ((_RECIP_B * d) >> F)
+    for _ in range(3):
+        x = (x * ((2 << F) - ((d * x) >> F))) >> F
+    return x.astype(jnp.float32) * jnp.exp2(
+        (-(F + e + 1)).astype(jnp.float32))
+
+
+def i_rsqrt(y: jax.Array) -> jax.Array:
+    """Integer-Newton ``1/sqrt(y)`` for positive normal f32 ``y``.
+
+    3 division-free Newton steps ``x <- x (3 - d x^2) / 2`` in Q.14 on the
+    normalized ``d = y * 2^-e in [1, 2)``; ``2^(-e/2)`` is re-applied as an
+    exact power of two plus one ``1/sqrt(2)`` multiply when ``e`` is odd.
+    """
+    y = y.astype(jnp.float32)
+    e = _floor_log2(y)
+    k = e >> 1                                      # floor(e/2), negatives ok
+    odd = e - (k << 1)                              # e - 2k in {0, 1}
+    d = jnp.round(y * jnp.exp2((-e).astype(jnp.float32))
+                  * (1 << F)).astype(jnp.int32)     # [2^F, 2^(F+1)]
+    x = _RSQRT_A - ((_RSQRT_B * d) >> F)
+    for _ in range(3):
+        t = ((((d * x) >> F) * x) >> F)             # d x^2 in Q.14
+        x = (x * ((3 << F) - t)) >> (F + 1)
+    r = x.astype(jnp.float32) * jnp.exp2((-(F + k)).astype(jnp.float32))
+    return jnp.where(odd == 1, r * jnp.float32(_INV_SQRT2), r)
+
+
+def i_sqrt(y: jax.Array) -> jax.Array:
+    """``sqrt(y) = y * i_rsqrt(y)``, exact 0 at y <= 0."""
+    y = y.astype(jnp.float32)
+    safe = jnp.maximum(y, jnp.float32(1e-30))
+    return jnp.where(y > 0, y * i_rsqrt(safe), jnp.float32(0))
+
+
+def i_sigmoid(x: jax.Array) -> jax.Array:
+    """``1 / (1 + i_exp(-|x|))`` reflected to the negative half-line.
+
+    The exp argument is always <= 0 (no overflow branch) and the reciprocal
+    denominator sits in [1, 2] — the best-conditioned i_recip domain.
+    """
+    x = x.astype(jnp.float32)
+    z = i_exp(-jnp.abs(x))                          # (0, 1]
+    p = i_recip(jnp.float32(1) + z)                 # sigmoid(|x|) in [0.5, 1)
+    return jnp.where(x >= 0, p, jnp.float32(1) - p)
+
+
+def i_tanh(x: jax.Array) -> jax.Array:
+    """``tanh(x) = sign(x) * (1 - z) / (1 + z)`` with ``z = i_exp(-2|x|)``."""
+    x = x.astype(jnp.float32)
+    z = i_exp(jnp.float32(-2) * jnp.abs(x))         # (0, 1]
+    p = (jnp.float32(1) - z) * i_recip(jnp.float32(1) + z)
+    return jnp.where(x >= 0, p, -p)
+
+
+_GELU_C = 0.7978845608028654      # sqrt(2/pi)
+_GELU_A = 0.044715
+
+
+def i_gelu(x: jax.Array) -> jax.Array:
+    """tanh-form GeLU (the ``jax.nn.gelu(approximate=True)`` the call sites
+    used) with the tanh replaced by ``i_tanh``."""
+    x = x.astype(jnp.float32)
+    u = jnp.float32(_GELU_C) * (x + jnp.float32(_GELU_A) * x * x * x)
+    return jnp.float32(0.5) * x * (jnp.float32(1) + i_tanh(u))
+
+
+def i_silu(x: jax.Array) -> jax.Array:
+    """``x * i_sigmoid(x)``."""
+    x = x.astype(jnp.float32)
+    return x * i_sigmoid(x)
+
+
+def i_softmax(x: jax.Array, axis: int = -1) -> jax.Array:
+    """Row softmax: integer max-subtraction, ``i_exp``, and the fixed-point
+    reciprocal normalizer.  Rows sum to 1 within the i_recip bound."""
+    x = x.astype(jnp.float32)
+    m = jnp.max(x, axis=axis, keepdims=True)
+    z = i_exp(x - m)
+    return z * i_recip(jnp.sum(z, axis=axis, keepdims=True))
+
+
+# ---------------------------------------------------------------------------
+# derivatives (for int_ops.int_activation's custom_vjp backward) — built from
+# the same integer forms so the backward jaxpr is QL008-clean too
+# ---------------------------------------------------------------------------
+
+def d_tanh(x: jax.Array) -> jax.Array:
+    t = i_tanh(x)
+    return jnp.float32(1) - t * t
+
+
+def d_sigmoid(x: jax.Array) -> jax.Array:
+    s = i_sigmoid(x)
+    return s * (jnp.float32(1) - s)
+
+
+def d_silu(x: jax.Array) -> jax.Array:
+    x = x.astype(jnp.float32)
+    s = i_sigmoid(x)
+    return s * (jnp.float32(1) + x * (jnp.float32(1) - s))
+
+
+def d_gelu(x: jax.Array) -> jax.Array:
+    x = x.astype(jnp.float32)
+    u = jnp.float32(_GELU_C) * (x + jnp.float32(_GELU_A) * x * x * x)
+    t = i_tanh(u)
+    du = jnp.float32(_GELU_C) * (jnp.float32(1)
+                                 + jnp.float32(3 * _GELU_A) * x * x)
+    return (jnp.float32(0.5) * (jnp.float32(1) + t)
+            + jnp.float32(0.5) * x * (jnp.float32(1) - t * t) * du)

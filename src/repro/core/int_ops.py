@@ -65,6 +65,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import dfx
+from repro.core import iapprox
 from repro.core.qconfig import QuantConfig
 from repro.kernels import ops as kops
 
@@ -392,10 +393,11 @@ int_embedding.defvjp(_int_embedding_fwd, _int_embedding_bwd)
 #   mean/var forward, XLA sums backward.  Integer-valued operands, float
 #   arithmetic — parity with pallas is bounded by f32 rounding, not exact.
 #
-# The rsqrt stays FP32 on both (precision-critical, same category as softmax
-# in the paper's recipe); Ghaffari et al. 2022 additionally integerize the
-# sqrt via Newton iterations — we document this as an FP32-kept op in
-# DESIGN.md.  Both layers honor cfg.stochastic_fwd with the same key-split
+# The rsqrt is the paper's kept op (precision-critical, same category as
+# softmax); under ``cfg.kept_ops == "integer"`` it swaps for the fixed-point
+# Newton ``iapprox.i_rsqrt`` (DESIGN.md §10) — in-kernel on pallas, the same
+# XLA form on sim.  The backward kernels consume the forward-saved rstd, so
+# the swap is forward-only.  Both layers honor cfg.stochastic_fwd with the same key-split
 # contract as the linear layers (activation noise from the first split,
 # grad-quantization noise from the remainder; bit-identical across backends
 # under the same key).
@@ -408,6 +410,7 @@ def int_layernorm(x: Array, gamma: Array, beta: Array, key,
 
 
 def _int_ln_fwd(x, gamma, beta, key, cfg: QuantConfig, eps):
+    ik = cfg.enabled and cfg.int_layernorm and cfg.kept_ops == "integer"
     if cfg.enabled and cfg.int_layernorm:
         kf = None
         if cfg.stochastic_fwd and key is not None:
@@ -417,7 +420,8 @@ def _int_ln_fwd(x, gamma, beta, key, cfg: QuantConfig, eps):
         if cfg.backend == "pallas":
             D = x.shape[-1]
             y, mu, rstd = kops.layernorm_pallas(xq.m.reshape(-1, D), xq.exp,
-                                                gv, beta, eps=eps)
+                                                gv, beta, eps=eps,
+                                                integer_rsqrt=ik)
             # the residual statistics ARE the kernel's outputs — the exact
             # (mu, rstd) it normalized with, not a value-domain recompute
             lead = x.shape[:-1]
@@ -431,7 +435,8 @@ def _int_ln_fwd(x, gamma, beta, key, cfg: QuantConfig, eps):
         res_x = x
     mu = jnp.mean(xv, axis=-1, keepdims=True)
     var = jnp.mean(jnp.square(xv - mu), axis=-1, keepdims=True)
-    rstd = jax.lax.rsqrt(var + eps)             # FP32 (precision-critical)
+    rstd = (iapprox.i_rsqrt(var + eps) if ik    # kept op: FP32 or i_rsqrt
+            else jax.lax.rsqrt(var + eps))
     xn = (xv - mu) * rstd
     y = xn * gv + beta
     return y, (res_x, gv, rstd, mu, key)
@@ -473,6 +478,7 @@ def int_rmsnorm(x: Array, gamma: Array, key, cfg: QuantConfig,
 
 
 def _int_rms_fwd(x, gamma, key, cfg: QuantConfig, eps):
+    ik = cfg.enabled and cfg.int_layernorm and cfg.kept_ops == "integer"
     if cfg.enabled and cfg.int_layernorm:
         kf = None
         if cfg.stochastic_fwd and key is not None:
@@ -482,7 +488,7 @@ def _int_rms_fwd(x, gamma, key, cfg: QuantConfig, eps):
         if cfg.backend == "pallas":
             D = x.shape[-1]
             y, rstd = kops.rmsnorm_pallas(xq.m.reshape(-1, D), xq.exp, gv,
-                                          eps=eps)
+                                          eps=eps, integer_rsqrt=ik)
             return (y.reshape(x.shape),
                     (xq, gv, rstd.reshape(x.shape[:-1] + (1,)), key))
         xv = dfx.dequantize(xq)
@@ -491,7 +497,8 @@ def _int_rms_fwd(x, gamma, key, cfg: QuantConfig, eps):
         xv, gv = x, gamma
         res_x = x
     ms = jnp.mean(jnp.square(xv), axis=-1, keepdims=True)
-    rstd = jax.lax.rsqrt(ms + eps)
+    rstd = (iapprox.i_rsqrt(ms + eps) if ik
+            else jax.lax.rsqrt(ms + eps))
     y = xv * rstd * gv
     return y, (res_x, gv, rstd, key)
 
@@ -520,6 +527,71 @@ def _int_rms_bwd(cfg: QuantConfig, eps, res, g):
 
 
 int_rmsnorm.defvjp(_int_rms_fwd, _int_rms_bwd)
+
+
+# =========================================================================
+# Kept-op activations — GeLU / SiLU / tanh (DESIGN.md §10)
+# =========================================================================
+# The paper keeps the nonlinearities in FP32; ``kept_ops="integer"`` swaps
+# each for its iapprox fixed-point form.  There is NO pallas_call here — the
+# swap must add zero traced dispatches (the acceptance pins the dispatch
+# baseline), and iapprox is deterministic integer arithmetic plus exact
+# power-of-two float scalings, so the XLA trace is the bit-identical form
+# both backends run.  The integer branch carries a custom_vjp whose backward
+# is built from the same iapprox ops, so the *backward* jaxpr is QL008-clean
+# too (no tanh/logistic/erf primitives from autodiff).
+
+_ACT_FNS = {
+    # kind -> (fp32 form, integer forward, integer derivative)
+    "gelu": (jax.nn.gelu, iapprox.i_gelu, iapprox.d_gelu),
+    "silu": (jax.nn.silu, iapprox.i_silu, iapprox.d_silu),
+    "tanh": (jnp.tanh, iapprox.i_tanh, iapprox.d_tanh),
+}
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _int_act(kind: str, x: Array) -> Array:
+    return _ACT_FNS[kind][1](x)
+
+
+def _int_act_fwd(kind: str, x):
+    return _ACT_FNS[kind][1](x), x
+
+
+def _int_act_bwd(kind: str, x, g):
+    return (g * _ACT_FNS[kind][2](x),)
+
+
+_int_act.defvjp(_int_act_fwd, _int_act_bwd)
+
+
+def int_activation(x: Array, cfg: QuantConfig, kind: str) -> Array:
+    """Policy-routed activation: ``kind`` in {"gelu", "silu", "tanh"}.
+
+    ``cfg`` is the resolved leaf for the call site's scope path (e.g.
+    ``blocks.3.mlp.act``); with ``cfg.kept_ops == "fp32"`` (or quantization
+    disabled) this IS the stock float op — same primitive, natively
+    differentiable — so FP32 baselines are untouched.  Under an enabled
+    config with ``kept_ops="integer"`` the iapprox form runs instead, with
+    an iapprox-built backward."""
+    if kind not in _ACT_FNS:
+        raise KeyError(f"int_activation kind {kind!r} not in "
+                       f"{sorted(_ACT_FNS)}")
+    if cfg.enabled and cfg.kept_ops == "integer":
+        return _int_act(kind, x)
+    return _ACT_FNS[kind][0](x)
+
+
+def int_softmax(x: Array, cfg: QuantConfig, axis: int = -1) -> Array:
+    """Policy-routed softmax for out-of-attention call sites (the MoE
+    router gate).  Attention's softmax lives inside the flash kernels and
+    swaps its exp there; this covers the standalone form: under an enabled
+    config with ``kept_ops="integer"`` the row softmax runs as ``i_exp`` +
+    the fixed-point reciprocal normalizer (rows sum to 1 within the i_recip
+    bound, DESIGN.md §10), else the stock float op."""
+    if cfg.enabled and cfg.kept_ops == "integer":
+        return iapprox.i_softmax(x, axis=axis)
+    return jax.nn.softmax(x, axis=axis)
 
 
 # =========================================================================
@@ -576,8 +648,14 @@ def _ds_exp(g_norm: Array, v_norm: Array, ds_bits: int) -> Array:
 
 
 def _sim_attention_fwd(qd: Array, kd: Array, vd: Array, off: Array,
-                       p_bits: int, causal: bool, window):
-    """XLA online-softmax forward on dequantized values, 128-wide chunks."""
+                       p_bits: int, causal: bool, window,
+                       integer_exp: bool = False):
+    """XLA online-softmax forward on dequantized values, 128-wide chunks.
+
+    ``integer_exp`` mirrors the pallas kernel's kept-ops swap: the chunked
+    recurrence is unchanged, but p/alpha come from ``iapprox.i_exp`` and
+    the final normalizer from ``iapprox.i_recip``."""
+    _exp = iapprox.i_exp if integer_exp else jnp.exp
     B, Sq, KV, G, hd = qd.shape
     Sk = kd.shape[1]
     sc = 1.0 / float(hd) ** 0.5
@@ -605,8 +683,8 @@ def _sim_attention_fwd(qd: Array, kd: Array, vd: Array, off: Array,
         s = jnp.einsum("bqhgd,bkhd->bhgqk", qd, kb) * sc
         s = jnp.where(okb, s, -1e30)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
-        p = jnp.where(okb, jnp.exp(s - m_new), 0.0)
-        alpha = jnp.exp(m - m_new)
+        p = jnp.where(okb, _exp(s - m_new), 0.0)
+        alpha = _exp(m - m_new)
         l = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
         pm = jnp.clip(jnp.round(p * 2.0 ** (p_bits - 1)), -lim, lim)
         acc = acc * alpha + (jnp.einsum("bhgqk,bkhd->bhgqd", pm, vb)
@@ -618,16 +696,22 @@ def _sim_attention_fwd(qd: Array, kd: Array, vd: Array, off: Array,
     a0 = jnp.zeros((B, KV, G, Sq, hd), jnp.float32)
     (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
                                   (kc, vc, jnp.arange(n)))
-    o = (acc / jnp.maximum(l, 1e-20)).transpose(0, 3, 1, 2, 4)
+    if integer_exp:
+        o = (acc * iapprox.i_recip(jnp.maximum(l, 1e-20))
+             ).transpose(0, 3, 1, 2, 4)
+    else:
+        o = (acc / jnp.maximum(l, 1e-20)).transpose(0, 3, 1, 2, 4)
     lse = (m + jnp.log(jnp.maximum(l, 1e-37)))[..., 0]        # (B,KV,G,Sq)
     return o, lse
 
 
 def _sim_attention_bwd(qd: Array, kd: Array, vd: Array, gd: Array,
                        lse: Array, delta: Array, ds_exp: Array, off: Array,
-                       p_bits: int, ds_bits: int, causal: bool, window):
+                       p_bits: int, ds_bits: int, causal: bool, window,
+                       integer_exp: bool = False):
     """XLA backward on dequantized values — same quantization points as the
     kernels (P and dS clipped at their static exponents)."""
+    _exp = iapprox.i_exp if integer_exp else jnp.exp
     B, Sq, KV, G, hd = qd.shape
     Sk = kd.shape[1]
     sc = 1.0 / float(hd) ** 0.5
@@ -641,7 +725,7 @@ def _sim_attention_bwd(qd: Array, kd: Array, vd: Array, gd: Array,
     okb = ok[:, None, None]
     s = jnp.einsum("bqhgd,bkhd->bhgqk", qd, kd) * sc
     s = jnp.where(okb, s, -1e30)
-    p = jnp.where(okb, jnp.exp(s - lse[..., None]), 0.0)
+    p = jnp.where(okb, _exp(s - lse[..., None]), 0.0)
     plim = float(2 ** (p_bits - 1) - 1)
     pm = jnp.clip(jnp.round(p * 2.0 ** (p_bits - 1)), -plim, plim)
     dv = (jnp.einsum("bhgqk,bqhgd->bkhd", pm, gd) * 2.0 ** -(p_bits - 1))
@@ -693,13 +777,15 @@ def _int_attention_fwd(q, k, v, q_offset, key, cfg_qk: QuantConfig,
     qv = _quantize(v, cfg_pv.act_bits, cfg_pv, stochastic=kf is not None,
                    key=kv, limb_planes=planes)
     p_bits = cfg_pv.act_bits
+    iexp = cfg_qk.enabled and cfg_qk.kept_ops == "integer"
     if planes:
         o, lse = kops.attention_fwd(qq.m, qq.exp, qk.m, qk.exp, qv.m, qv.exp,
-                                    off, p_bits, causal=causal, window=window)
+                                    off, p_bits, causal=causal, window=window,
+                                    integer_exp=iexp)
     else:
         o, lse = _sim_attention_fwd(dfx.dequantize(qq), dfx.dequantize(qk),
                                     dfx.dequantize(qv), off, p_bits,
-                                    causal, window)
+                                    causal, window, integer_exp=iexp)
     v_norm = _max_row_norm(v)          # residual for the bwd dS exponent
     return o, (qq, qk, qv, o, lse, v_norm, q_offset, off, key)
 
@@ -715,16 +801,17 @@ def _int_attention_bwd(cfg_qk: QuantConfig, cfg_pv: QuantConfig, causal,
     p_bits = cfg_pv.act_bits
     ds_bits = cfg_qk.grad_bits
     ds_exp = _ds_exp(_max_row_norm(g), v_norm, ds_bits)
+    iexp = cfg_qk.enabled and cfg_qk.kept_ops == "integer"
     if planes:
         dq, dk, dv = kops.attention_bwd(
             qq.m, qq.exp, qk.m, qk.exp, qv.m, qv.exp, qg.m, qg.exp,
             lse, delta, ds_exp, off, p_bits, ds_bits,
-            causal=causal, window=window)
+            causal=causal, window=window, integer_exp=iexp)
     else:
         dq, dk, dv = _sim_attention_bwd(
             dfx.dequantize(qq), dfx.dequantize(qk), dfx.dequantize(qv),
             dfx.dequantize(qg), lse, delta, ds_exp, off,
-            p_bits, ds_bits, causal, window)
+            p_bits, ds_bits, causal, window, integer_exp=iexp)
     return (dq, dk, dv, _float0(q_offset),
             _float0(key) if key is not None else None)
 

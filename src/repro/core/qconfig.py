@@ -48,6 +48,18 @@ def _env_default_backend() -> str:
     return os.environ.get("REPRO_BACKEND", "sim")
 
 
+def _env_default_kept_ops() -> str:
+    """Default kept-ops mode; ``REPRO_KEPT_OPS`` overrides it.
+
+    Same pattern as ``_env_default_backend``: the CI kept-ops matrix leg
+    exports ``REPRO_KEPT_OPS=integer`` and every ``QuantConfig`` built
+    without an explicit ``kept_ops=`` picks it up.  An empty value counts
+    as unset (the CI matrix passes ``REPRO_KEPT_OPS=""`` on other legs).
+    Invalid values fail fast in ``__post_init__``.
+    """
+    return os.environ.get("REPRO_KEPT_OPS") or "fp32"
+
+
 @dataclasses.dataclass(frozen=True)
 class QuantConfig:
     """Static configuration of the b-bit dynamic fixed-point mapping."""
@@ -76,6 +88,16 @@ class QuantConfig:
     #: interpret mode off-TPU.  Defaults to $REPRO_BACKEND (else "sim") so
     #: CI can matrix the whole suite over both backends.
     backend: str = dataclasses.field(default_factory=_env_default_backend)
+    #: what the paper's *kept* FP32 ops (softmax exp, GeLU/SiLU, the norm
+    #: rsqrt, the pooler tanh) compute with: "fp32" is the paper's setting;
+    #: "integer" swaps each for its fixed-point form in ``core/iapprox.py``
+    #: (I-BERT-style, DESIGN.md §10) — in-kernel on the pallas backend, the
+    #: bit-identical XLA trace on sim.  Per-scope resolvable through
+    #: ``QuantPolicy`` like every other field.  Only meaningful with
+    #: ``enabled=True``: a disabled config is the FP32 *baseline* and keeps
+    #: the stock float ops everywhere.  Defaults to $REPRO_KEPT_OPS (else
+    #: "fp32") so CI can run a kept-ops matrix leg.
+    kept_ops: str = dataclasses.field(default_factory=_env_default_kept_ops)
     #: emit a ``StabilityWarning`` when the paper's "act_bits >= 12 when
     #: weight_bits == 8" constraint is violated (Fig. 4's divergence).
     #: Opt-out knob, not an error — ``int8_naive`` is a paper experiment.
@@ -97,6 +119,9 @@ class QuantConfig:
         if self.backend not in ("sim", "pallas"):
             raise ValueError(
                 f"backend={self.backend!r} not in ('sim', 'pallas')")
+        if self.kept_ops not in ("fp32", "integer"):
+            raise ValueError(
+                f"kept_ops={self.kept_ops!r} not in ('fp32', 'integer')")
         if self.backend == "pallas" and self.block_size is not None:
             raise ValueError("backend='pallas' supports per-tensor scales "
                              "only (block_size must be None)")

@@ -70,6 +70,7 @@ _CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerPar
 
 # single source of the limb radix + digit split: quantized P / dS planes cut
 # in-kernel MUST match the shifts the quantize kernel uses for Q/K/V.
+from repro.core import iapprox
 from repro.kernels.dfx_quant import (  # noqa: E402
     LIMB_BITS, _round_clip, _split_planes, n_limbs)
 
@@ -143,6 +144,17 @@ def _valid_mask(off, qi, kj, *, bq: int, bk: int, sq_p: int, kv_len: int,
     return ok
 
 
+def _p_exp(x, integer_exp: bool):
+    """In-kernel softmax exp: FP32 (the paper's kept op) or the iapprox
+    fixed-point form under ``kept_ops="integer"``.  Static flag — the swap
+    is in-kernel, the dispatch count is unchanged either way.  i_exp clamps
+    at exp(-30) ~ 9e-14, which rounds to a zero P mantissa at every
+    supported p_bits, so the tail behaves like the exact exp's underflow."""
+    if integer_exp:
+        return iapprox.i_exp(x)
+    return jnp.exp(x)
+
+
 # =========================================================================
 # Forward
 # =========================================================================
@@ -151,7 +163,8 @@ def _int_attn_fwd_kernel(q_ref, k_ref, v_ref, off_ref, exp_ref,
                          o_ref, lse_ref, m_scr, l_scr, acc_scr, *,
                          n_k: int, lq: int, lk: int, lv: int, p_bits: int,
                          sq_p: int, kv_heads: int, kv_len: int, causal: bool,
-                         window, sc: float, bq: int, bk: int):
+                         window, sc: float, bq: int, bk: int,
+                         integer_exp: bool):
     h = pl.program_id(0)
     qi = pl.program_id(1)
     kj = pl.program_id(2)
@@ -176,8 +189,8 @@ def _int_attn_fwd_kernel(q_ref, k_ref, v_ref, off_ref, exp_ref,
     m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
     # the where-guard is load-bearing: a fully masked block has
     # s == m_new == _BIG_NEG and exp(0) = 1 would corrupt l
-    p = jnp.where(ok, jnp.exp(s - m_new), 0.0)
-    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.where(ok, _p_exp(s - m_new, integer_exp), 0.0)
+    alpha = _p_exp(m_prev - m_new, integer_exp)
     l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
     m_scr[...] = m_new
 
@@ -190,13 +203,17 @@ def _int_attn_fwd_kernel(q_ref, k_ref, v_ref, off_ref, exp_ref,
     @pl.when(kj == n_k - 1)
     def _epilogue():
         l = l_scr[...]
-        o_ref[0] = acc_scr[...] / jnp.maximum(l, 1e-20)
+        if integer_exp:
+            # fixed-point reciprocal normalizer (kept_ops="integer")
+            o_ref[0] = acc_scr[...] * iapprox.i_recip(jnp.maximum(l, 1e-20))
+        else:
+            o_ref[0] = acc_scr[...] / jnp.maximum(l, 1e-20)
         lse_ref[0] = m_scr[...] + jnp.log(jnp.maximum(l, 1e-37))
 
 
 @functools.partial(jax.jit, static_argnames=(
     "p_bits", "sq_p", "kv_heads", "kv_len", "causal", "window", "sc",
-    "bq", "bk", "interpret"))
+    "bq", "bk", "interpret", "integer_exp"))
 def int_attn_fwd(
     qm: jax.Array,          # (Lq, BH, R, hd_p) int8 limb planes
     km: jax.Array,          # (Lk, BH, Sk_p, hd_p) int8 limb planes
@@ -214,8 +231,13 @@ def int_attn_fwd(
     bq: int = 128,
     bk: int = 128,
     interpret: bool = False,
+    integer_exp: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
-    """Fused forward: ``(o, lse)`` — (BH, R, hd_p) and (BH, R, 1) f32."""
+    """Fused forward: ``(o, lse)`` — (BH, R, hd_p) and (BH, R, 1) f32.
+
+    ``integer_exp=True`` swaps the in-kernel online softmax's FP32 exp for
+    the iapprox fixed-point form (kept_ops="integer"); the running-max /
+    normalizer recurrence is unchanged."""
     Lq, BH, R, hd_p = qm.shape
     Lk, BH2, Skp, hd2 = km.shape
     Lv = vm.shape[0]
@@ -228,7 +250,8 @@ def int_attn_fwd(
         functools.partial(
             _int_attn_fwd_kernel, n_k=n_k, lq=Lq, lk=Lk, lv=Lv,
             p_bits=p_bits, sq_p=sq_p, kv_heads=kv_heads, kv_len=kv_len,
-            causal=causal, window=window, sc=sc, bq=bq, bk=bk),
+            causal=causal, window=window, sc=sc, bq=bq, bk=bk,
+            integer_exp=integer_exp),
         grid=(BH, R // bq, n_k),
         in_specs=[
             pl.BlockSpec((Lq, 1, bq, hd_p), lambda h, i, j: (0, h, i, 0)),
@@ -265,7 +288,7 @@ def _int_attn_bwd_dq_kernel(q_ref, k_ref, v_ref, g_ref, lse_ref, d_ref,
                             n_k: int, lq: int, lk: int, lv: int, lg: int,
                             ds_bits: int, sq_p: int, kv_heads: int,
                             kv_len: int, causal: bool, window, sc: float,
-                            bq: int, bk: int):
+                            bq: int, bk: int, integer_exp: bool):
     h = pl.program_id(0)
     qi = pl.program_id(1)
     kj = pl.program_id(2)
@@ -286,7 +309,7 @@ def _int_attn_bwd_dq_kernel(q_ref, k_ref, v_ref, g_ref, lse_ref, d_ref,
     s = _limb_dot(q_ref, k_ref, lq, lk, (1, 1), qe + ke, 0) * sc
     s = jnp.where(ok, s, _BIG_NEG)
     # padded q rows carry lse = +1e30, so p vanishes there exactly
-    p = jnp.where(ok, jnp.exp(s - lse_ref[0]), 0.0)
+    p = jnp.where(ok, _p_exp(s - lse_ref[0], integer_exp), 0.0)
 
     dp = _limb_dot(g_ref, v_ref, lg, lv, (1, 1), ge + ve, 0)
     ds = p * (dp - d_ref[0])
@@ -301,7 +324,7 @@ def _int_attn_bwd_dq_kernel(q_ref, k_ref, v_ref, g_ref, lse_ref, d_ref,
 
 @functools.partial(jax.jit, static_argnames=(
     "ds_bits", "sq_p", "kv_heads", "kv_len", "causal", "window", "sc",
-    "bq", "bk", "interpret"))
+    "bq", "bk", "interpret", "integer_exp"))
 def int_attn_bwd_dq(
     qm: jax.Array,          # (Lq, BH, R, hd_p) int8 limb planes
     km: jax.Array,          # (Lk, BH, Sk_p, hd_p)
@@ -322,8 +345,11 @@ def int_attn_bwd_dq(
     bq: int = 128,
     bk: int = 128,
     interpret: bool = False,
+    integer_exp: bool = False,
 ) -> jax.Array:
-    """Fused dQ: (BH, R, hd_p) f32."""
+    """Fused dQ: (BH, R, hd_p) f32.  ``integer_exp`` must match the
+    forward's flag — the FA2 recompute ``p = exp(s - lse)`` has to rebuild
+    the same P the forward contracted."""
     Lq, BH, R, hd_p = qm.shape
     Lk, _, Skp, _ = km.shape
     Lv, Lg = vm.shape[0], gm.shape[0]
@@ -334,7 +360,8 @@ def int_attn_bwd_dq(
         functools.partial(
             _int_attn_bwd_dq_kernel, n_k=n_k, lq=Lq, lk=Lk, lv=Lv, lg=Lg,
             ds_bits=ds_bits, sq_p=sq_p, kv_heads=kv_heads, kv_len=kv_len,
-            causal=causal, window=window, sc=sc, bq=bq, bk=bk),
+            causal=causal, window=window, sc=sc, bq=bq, bk=bk,
+            integer_exp=integer_exp),
         grid=(BH, R // bq, n_k),
         in_specs=[
             pl.BlockSpec((Lq, 1, bq, hd_p), lambda h, i, j: (0, h, i, 0)),
@@ -366,7 +393,8 @@ def _int_attn_bwd_dkv_kernel(q_ref, k_ref, v_ref, g_ref, lse_ref, d_ref,
                              n_q: int, lq: int, lk: int, lv: int, lg: int,
                              p_bits: int, ds_bits: int, sq_p: int,
                              kv_heads: int, kv_len: int, causal: bool,
-                             window, sc: float, bq: int, bk: int):
+                             window, sc: float, bq: int, bk: int,
+                             integer_exp: bool):
     h = pl.program_id(0)
     kj = pl.program_id(1)
     qi = pl.program_id(2)
@@ -387,7 +415,7 @@ def _int_attn_bwd_dkv_kernel(q_ref, k_ref, v_ref, g_ref, lse_ref, d_ref,
                      causal=causal, window=window)
     s = _limb_dot(q_ref, k_ref, lq, lk, (1, 1), qe + ke, 0) * sc
     s = jnp.where(ok, s, _BIG_NEG)
-    p = jnp.where(ok, jnp.exp(s - lse_ref[0]), 0.0)
+    p = jnp.where(ok, _p_exp(s - lse_ref[0], integer_exp), 0.0)
 
     # dV: quantized-Pᵀ · dO — the same static-exponent P mantissa the
     # forward contracted against V (straight-through at the quantizer)
@@ -409,7 +437,7 @@ def _int_attn_bwd_dkv_kernel(q_ref, k_ref, v_ref, g_ref, lse_ref, d_ref,
 
 @functools.partial(jax.jit, static_argnames=(
     "p_bits", "ds_bits", "sq_p", "kv_heads", "kv_len", "causal", "window",
-    "sc", "bq", "bk", "interpret"))
+    "sc", "bq", "bk", "interpret", "integer_exp"))
 def int_attn_bwd_dkv(
     qm: jax.Array,          # (Lq, BH, R, hd_p) int8 limb planes
     km: jax.Array,          # (Lk, BH, Sk_p, hd_p)
@@ -431,8 +459,10 @@ def int_attn_bwd_dkv(
     bq: int = 128,
     bk: int = 128,
     interpret: bool = False,
+    integer_exp: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
-    """Fused dK, dV: each (BH, Sk_p, hd_p) f32."""
+    """Fused dK, dV: each (BH, Sk_p, hd_p) f32.  ``integer_exp`` as in
+    ``int_attn_bwd_dq``."""
     Lq, BH, R, hd_p = qm.shape
     Lk, _, Skp, _ = km.shape
     Lv, Lg = vm.shape[0], gm.shape[0]
@@ -444,7 +474,7 @@ def int_attn_bwd_dkv(
             _int_attn_bwd_dkv_kernel, n_q=n_q, lq=Lq, lk=Lk, lv=Lv, lg=Lg,
             p_bits=p_bits, ds_bits=ds_bits, sq_p=sq_p, kv_heads=kv_heads,
             kv_len=kv_len, causal=causal, window=window, sc=sc,
-            bq=bq, bk=bk),
+            bq=bq, bk=bk, integer_exp=integer_exp),
         grid=(BH, Skp // bk, n_q),
         in_specs=[
             pl.BlockSpec((Lq, 1, bq, hd_p), lambda h, j, i: (0, h, i, 0)),

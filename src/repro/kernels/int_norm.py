@@ -4,7 +4,10 @@ All four kernels consume the DFX mantissas directly (int8/int16) so the
 normalization never materializes an FP32 copy of the activation in HBM: a
 row-block is staged in VMEM, the moment sums run over the *integer*
 mantissas (exact — see ``_exact_moments``), the rsqrt is FP32
-(precision-critical, the paper's rule), and the affine epilogue is fused.
+(precision-critical, the paper's rule) — or the fixed-point Newton form
+from ``core/iapprox.py`` when the forward entry points get
+``integer_rsqrt=True`` (kept_ops="integer", DESIGN.md §10) — and the
+affine epilogue is fused.
 
 Forward kernels are **multi-output**: alongside ``y`` they return the
 per-row statistics (``mu``/``rstd`` for LN, ``rstd`` for RMS) in the value
@@ -34,6 +37,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import iapprox
 
 # jax renamed TPUCompilerParams -> CompilerParams across releases; take
 # whichever this version provides.
@@ -71,8 +76,18 @@ def _exact_moments(xi: jax.Array):
 # Layer norm
 # =========================================================================
 
+def _rstd(ms: jax.Array, eps: float, integer_rsqrt: bool) -> jax.Array:
+    """In-kernel reciprocal std: the paper's FP32 rsqrt, or the fixed-point
+    Newton form (``iapprox.i_rsqrt``) under ``kept_ops="integer"``.  The
+    static flag is threaded from the resolved ``QuantConfig`` — the swap is
+    in-kernel, so the dispatch count is unchanged either way."""
+    if integer_rsqrt:
+        return iapprox.i_rsqrt(ms + eps)
+    return jax.lax.rsqrt(ms + eps)
+
+
 def _ln_fwd_kernel(xm_ref, exp_ref, g_ref, b_ref, y_ref, mu_ref, rstd_ref, *,
-                   eps: float):
+                   eps: float, integer_rsqrt: bool):
     xi = xm_ref[...].astype(jnp.int32)
     d = xi.shape[-1]
     s1, s2 = _exact_moments(xi)
@@ -85,7 +100,7 @@ def _ln_fwd_kernel(xm_ref, exp_ref, g_ref, b_ref, y_ref, mu_ref, rstd_ref, *,
     # Apply the shared scale to return to value domain for the eps guard.
     scale = jnp.exp2(exp_ref[0].astype(jnp.float32))
     mu = mu_m * scale
-    rstd = jax.lax.rsqrt(var_m * (scale * scale) + eps)   # FP32 rsqrt (kept op)
+    rstd = _rstd(var_m * (scale * scale), eps, integer_rsqrt)
     xn = (xi.astype(jnp.float32) * scale - mu) * rstd
     y_ref[...] = xn * g_ref[...] + b_ref[...]
     # Residual statistics = what THIS kernel normalized with, not a recompute.
@@ -93,7 +108,8 @@ def _ln_fwd_kernel(xm_ref, exp_ref, g_ref, b_ref, y_ref, mu_ref, rstd_ref, *,
     rstd_ref[...] = rstd
 
 
-@functools.partial(jax.jit, static_argnames=("br", "eps", "interpret"))
+@functools.partial(jax.jit, static_argnames=("br", "eps", "interpret",
+                                             "integer_rsqrt"))
 def int_layernorm_fwd(
     xm: jax.Array,          # (R, D) int8/int16 mantissas
     x_exp: jax.Array,       # scalar int32
@@ -103,13 +119,20 @@ def int_layernorm_fwd(
     br: int = 8,
     eps: float = 1e-5,
     interpret: bool = False,
+    integer_rsqrt: bool = False,
 ):
     """Fused LN forward. Returns ``(y, mu, rstd)`` — y (R, D) f32 plus the
-    (R, 1) value-domain statistics used for the normalization."""
+    (R, 1) value-domain statistics used for the normalization.
+
+    ``integer_rsqrt=True`` swaps the FP32 rsqrt for the iapprox fixed-point
+    form (kept_ops="integer"); the backward consumes the forward-saved rstd
+    either way, so it needs no flag — there is no rsqrt in the bwd kernels.
+    """
     R, D = xm.shape
     assert R % br == 0, (R, br)
     return pl.pallas_call(
-        functools.partial(_ln_fwd_kernel, eps=eps),
+        functools.partial(_ln_fwd_kernel, eps=eps,
+                          integer_rsqrt=integer_rsqrt),
         grid=(R // br,),
         in_specs=[
             pl.BlockSpec((br, D), lambda i: (i, 0)),
@@ -205,19 +228,21 @@ def int_layernorm_bwd(
 # RMS norm — same structure, no mean/beta
 # =========================================================================
 
-def _rms_fwd_kernel(xm_ref, exp_ref, g_ref, y_ref, rstd_ref, *, eps: float):
+def _rms_fwd_kernel(xm_ref, exp_ref, g_ref, y_ref, rstd_ref, *, eps: float,
+                    integer_rsqrt: bool):
     xi = xm_ref[...].astype(jnp.int32)
     d = xi.shape[-1]
     _, s2 = _exact_moments(xi)
     scale = jnp.exp2(exp_ref[0].astype(jnp.float32))
     ms = (s2 / d) * (scale * scale)           # value-domain mean square
-    rstd = jax.lax.rsqrt(ms + eps)            # FP32 rsqrt (kept op)
+    rstd = _rstd(ms, eps, integer_rsqrt)
     xn = xi.astype(jnp.float32) * scale * rstd
     y_ref[...] = xn * g_ref[...]
     rstd_ref[...] = rstd
 
 
-@functools.partial(jax.jit, static_argnames=("br", "eps", "interpret"))
+@functools.partial(jax.jit, static_argnames=("br", "eps", "interpret",
+                                             "integer_rsqrt"))
 def int_rmsnorm_fwd(
     xm: jax.Array,          # (R, D) int8/int16 mantissas
     x_exp: jax.Array,       # scalar int32
@@ -226,12 +251,15 @@ def int_rmsnorm_fwd(
     br: int = 8,
     eps: float = 1e-6,
     interpret: bool = False,
+    integer_rsqrt: bool = False,
 ):
-    """Fused RMS-norm forward. Returns ``(y, rstd)``."""
+    """Fused RMS-norm forward. Returns ``(y, rstd)``.  ``integer_rsqrt``
+    as in ``int_layernorm_fwd`` (the bwd consumes the saved rstd)."""
     R, D = xm.shape
     assert R % br == 0, (R, br)
     return pl.pallas_call(
-        functools.partial(_rms_fwd_kernel, eps=eps),
+        functools.partial(_rms_fwd_kernel, eps=eps,
+                          integer_rsqrt=integer_rsqrt),
         grid=(R // br,),
         in_specs=[
             pl.BlockSpec((br, D), lambda i: (i, 0)),

@@ -430,18 +430,21 @@ def _pad_rows(R: int, cap: int, *arrs):
 
 def layernorm_pallas(xm: jax.Array, x_exp: jax.Array, gamma: jax.Array,
                      beta: jax.Array, eps: float = 1e-5,
-                     interpret: bool | None = None):
+                     interpret: bool | None = None,
+                     integer_rsqrt: bool = False):
     """Fused LN forward with row padding. Returns ``(y, mu, rstd)``.
 
     ``mu``/``rstd`` (R, 1) are the value-domain statistics the kernel
-    normalized with — the backward residuals.
+    normalized with — the backward residuals.  ``integer_rsqrt`` swaps the
+    in-kernel FP32 rsqrt for the iapprox form (kept_ops="integer").
     """
     if interpret is None:
         interpret = not on_tpu()
     R = xm.shape[0]
     br, (xm,) = _pad_rows(R, 8, xm)
     y, mu, rstd = int_layernorm_fwd(xm, x_exp, gamma, beta, br=br, eps=eps,
-                                    interpret=interpret)
+                                    interpret=interpret,
+                                    integer_rsqrt=integer_rsqrt)
     return y[:R], mu[:R], rstd[:R]
 
 
@@ -463,14 +466,17 @@ def layernorm_bwd_pallas(xm: jax.Array, x_exp: jax.Array, gm: jax.Array,
 
 
 def rmsnorm_pallas(xm: jax.Array, x_exp: jax.Array, gamma: jax.Array,
-                   eps: float = 1e-6, interpret: bool | None = None):
-    """Fused RMS-norm forward with row padding. Returns ``(y, rstd)``."""
+                   eps: float = 1e-6, interpret: bool | None = None,
+                   integer_rsqrt: bool = False):
+    """Fused RMS-norm forward with row padding. Returns ``(y, rstd)``.
+    ``integer_rsqrt`` as in ``layernorm_pallas``."""
     if interpret is None:
         interpret = not on_tpu()
     R = xm.shape[0]
     br, (xm,) = _pad_rows(R, 8, xm)
     y, rstd = int_rmsnorm_fwd(xm, x_exp, gamma, br=br, eps=eps,
-                              interpret=interpret)
+                              interpret=interpret,
+                              integer_rsqrt=integer_rsqrt)
     return y[:R], rstd[:R]
 
 
@@ -531,7 +537,8 @@ def attention_fwd(qm: jax.Array, q_exp: jax.Array,
                   vm: jax.Array, v_exp: jax.Array,
                   q_off: jax.Array, p_bits: int, *,
                   causal: bool, window: int | None = None,
-                  interpret: bool | None = None):
+                  interpret: bool | None = None,
+                  integer_exp: bool = False):
     """Fused integer attention forward — ONE ``pallas_call``.
 
     qm: (Lq, B, Sq, KV, G, hd) int8 limb planes (the quantize kernel's
@@ -552,7 +559,7 @@ def attention_fwd(qm: jax.Array, q_exp: jax.Array,
         _kv_rows(vm, sk_p, hd_p), q_off, exps,
         p_bits=p_bits, sq_p=sq_p, kv_heads=KV, kv_len=Sk, causal=causal,
         window=window, sc=1.0 / float(hd) ** 0.5, bq=bq, bk=bk,
-        interpret=interpret)
+        interpret=interpret, integer_exp=integer_exp)
     return (_rows_q_out(o, B, KV, G, sq_p, Sq, hd),
             lse.reshape(B, KV, G, sq_p)[..., :Sq])
 
@@ -564,7 +571,8 @@ def attention_bwd(qm: jax.Array, q_exp: jax.Array,
                   lse: jax.Array, delta: jax.Array, ds_exp: jax.Array,
                   q_off: jax.Array, p_bits: int, ds_bits: int, *,
                   causal: bool, window: int | None = None,
-                  interpret: bool | None = None):
+                  interpret: bool | None = None,
+                  integer_exp: bool = False):
     """Fused integer attention backward — TWO ``pallas_call``s (dq; dk+dv).
 
     ``gm`` is the quantized upstream-grad limb stack in q layout; ``lse``
@@ -592,7 +600,8 @@ def attention_bwd(qm: jax.Array, q_exp: jax.Array,
                       jnp.reshape(ds_exp, ())]).astype(jnp.int32)
     sc = 1.0 / float(hd) ** 0.5
     common = dict(sq_p=sq_p, kv_heads=KV, kv_len=Sk, causal=causal,
-                  window=window, sc=sc, bq=bq, bk=bk, interpret=interpret)
+                  window=window, sc=sc, bq=bq, bk=bk, interpret=interpret,
+                  integer_exp=integer_exp)
     dq = int_attn_bwd_dq(qr, kr, vr, gr, lse_r, d_r, q_off, exps,
                          ds_bits=ds_bits, **common)
     dk, dv = int_attn_bwd_dkv(qr, kr, vr, gr, lse_r, d_r, q_off, exps,

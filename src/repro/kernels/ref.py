@@ -330,3 +330,53 @@ def int_attention_bwd_ref(qm: jax.Array, q_exp, km: jax.Array, k_exp,
     dk = np.einsum("bhgqk,bqhgd->bkhd", dsm, q) * (qs * dss * sc)
     return (jnp.asarray(dq, jnp.float32), jnp.asarray(dk, jnp.float32),
             jnp.asarray(dv, jnp.float32))
+
+
+# ===========================================================================
+# iapprox oracles (core/iapprox.py) — the exact f64 functions each integer
+# approximation targets.  tests/test_iapprox.py sweeps the full input domain
+# of every op against these and pins the DESIGN.md §10 error-bound table.
+# ===========================================================================
+
+def i_exp_ref(x: jax.Array) -> jax.Array:
+    """Exact ``exp`` on the clamped i_exp domain |x| <= 30."""
+    return jnp.asarray(np.exp(np.clip(_f64(x), -30.0, 30.0)), jnp.float32)
+
+
+def i_recip_ref(y: jax.Array) -> jax.Array:
+    return jnp.asarray(1.0 / _f64(y), jnp.float32)
+
+
+def i_rsqrt_ref(y: jax.Array) -> jax.Array:
+    return jnp.asarray(1.0 / np.sqrt(_f64(y)), jnp.float32)
+
+
+def i_sqrt_ref(y: jax.Array) -> jax.Array:
+    return jnp.asarray(np.sqrt(np.maximum(_f64(y), 0.0)), jnp.float32)
+
+
+def i_sigmoid_ref(x: jax.Array) -> jax.Array:
+    return jnp.asarray(1.0 / (1.0 + np.exp(-_f64(x))), jnp.float32)
+
+
+def i_tanh_ref(x: jax.Array) -> jax.Array:
+    return jnp.asarray(np.tanh(_f64(x)), jnp.float32)
+
+
+def i_gelu_ref(x: jax.Array) -> jax.Array:
+    """tanh-form GeLU in exact f64 — the function ``jax.nn.gelu``
+    (approximate=True) computes, which is what i_gelu replaces."""
+    x = _f64(x)
+    u = np.sqrt(2.0 / np.pi) * (x + 0.044715 * x ** 3)
+    return jnp.asarray(0.5 * x * (1.0 + np.tanh(u)), jnp.float32)
+
+
+def i_silu_ref(x: jax.Array) -> jax.Array:
+    x = _f64(x)
+    return jnp.asarray(x / (1.0 + np.exp(-x)), jnp.float32)
+
+
+def i_softmax_ref(x: jax.Array, axis: int = -1) -> jax.Array:
+    x = _f64(x)
+    z = np.exp(x - x.max(axis=axis, keepdims=True))
+    return jnp.asarray(z / z.sum(axis=axis, keepdims=True), jnp.float32)

@@ -51,9 +51,10 @@ def subkey(key: Optional[Array], i) -> Optional[Array]:
 
 
 def mlp_leaves(cfg: ArchConfig, prefix: str = "mlp") -> list:
-    """Integer-layer leaf paths of one MLP (policy-resolution probe set)."""
-    names = ("wg", "wu", "wd") if cfg.act == "silu" else ("w1", "w2")
-    return [f"{prefix}.{n}" for n in names]
+    """Integer-layer leaf paths of one MLP (policy-resolution probe set).
+    ``act`` is the non-linearity's kept-ops leaf (DESIGN.md §10)."""
+    names = (("wg", "wu", "wd") if cfg.act == "silu" else ("w1", "w2"))
+    return [f"{prefix}.{n}" for n in names + ("act",)]
 
 
 def scan_stack(make_body, carry, groups, xs):
@@ -317,11 +318,11 @@ def mlp_apply(p: Params, x: Array, cfg: ArchConfig, qcfg: QuantLike,
     if "wg" in p:
         g = int_ops.int_linear(x, p["wg"], None, subkey(key, 0), sc.leaf("wg"))
         u = int_ops.int_linear(x, p["wu"], None, subkey(key, 1), sc.leaf("wu"))
-        h = jax.nn.silu(g) * u                       # FP32 non-linearity
+        h = int_ops.int_activation(g, sc.leaf("act"), "silu") * u  # kept op
         return int_ops.int_linear(h, p["wd"], None, subkey(key, 2),
                                   sc.leaf("wd"))
     h = int_ops.int_linear(x, p["w1"], p["b1"], subkey(key, 0), sc.leaf("w1"))
-    h = jax.nn.gelu(h)
+    h = int_ops.int_activation(h, sc.leaf("act"), "gelu")
     return int_ops.int_linear(h, p["w2"], p["b2"], subkey(key, 1),
                               sc.leaf("w2"))
 
@@ -367,7 +368,9 @@ def moe_apply(p: Params, x: Array, cfg: ArchConfig, qcfg: QuantLike,
     xf = x.reshape(T, D)
     logits = int_ops.int_linear(xf, p["router"], None, subkey(key, 0),
                                 sc.leaf("router"))
-    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)  # FP32 router
+    # FP32 router (kept-ops swappable: i_softmax under kept_ops="integer")
+    probs = int_ops.int_softmax(logits.astype(jnp.float32),
+                                sc.leaf("router"))
     gate, sel = jax.lax.top_k(probs, K)                          # (T, K)
     gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
 
@@ -417,7 +420,7 @@ def moe_apply(p: Params, x: Array, cfg: ArchConfig, qcfg: QuantLike,
                                    sc.leaf("wg_e"))
     u = int_ops.int_batched_linear(ex_in, p["wu_e"], subkey(key, 2),
                                    sc.leaf("wu_e"))
-    h = jax.nn.silu(g) * u
+    h = int_ops.int_activation(g, sc.leaf("act"), "silu") * u
     h = _sh.constrain(h, None, _sh.batch_axes(), "model")
     ex_out = int_ops.int_batched_linear(h, p["wd_e"], subkey(key, 3),
                                         sc.leaf("wd_e"))

@@ -39,8 +39,14 @@ Params = Dict[str, Any]
 #   embed, mm_proj, final_norm, lm_head
 #   blocks.{i}.{ln1, attn.{wq,wk,wv,wo,qk,pv}, ln2, mlp.{...}, moe.{...}}
 #     (attn.qk / attn.pv are the fused integer-attention leaves: score
-#     matmul bits and P·V / value bits respectively)
-#   blocks.{i}.mamba.{wz,wx,wBC,wdt,conv_x,conv_BC,norm_g,out_proj}
+#     matmul bits and P·V / value bits respectively; mlp.act / moe.act are
+#     the non-linearity's kept-ops leaves — DESIGN.md §10)
+#   blocks.{i}.mamba.{wz,wx,wBC,wdt,conv_x,conv_BC,norm_g,out_proj,
+#                     act.{conv_x,conv_BC,gate}}
+#     (mamba's selective_scan core — softplus dt and the SSD exp recurrence —
+#     is exempt from kept-ops swapping: it is FP32 by design, like the
+#     optimizer, and never quantized; only the three SiLU sites route
+#     through the policy)
 #   shared_attn.{ln1, attn.*, ln2, mlp.*}          (hybrid family)
 # Block indices also resolve under their negative alias (blocks.-1 = last
 # layer).  Layers are scan-stacked, so a policy that assigns different
@@ -55,7 +61,8 @@ def _block_leaves(cfg: ArchConfig) -> list:
     leaves = ["ln1", "ln2"] + [
         f"attn.{n}" for n in ("wq", "wk", "wv", "wo", "qk", "pv")]
     if cfg.moe_experts:
-        leaves += ["moe.router", "moe.wg_e", "moe.wu_e", "moe.wd_e"]
+        leaves += ["moe.router", "moe.wg_e", "moe.wu_e", "moe.wd_e",
+                   "moe.act"]
         if cfg.moe_shared_dff:
             leaves += blocks.mlp_leaves(cfg, "moe.shared")
     else:
@@ -65,7 +72,8 @@ def _block_leaves(cfg: ArchConfig) -> list:
 
 _MAMBA_LEAVES = ["mamba." + n for n in
                  ("wz", "wx", "wBC", "wdt", "conv_x", "conv_BC",
-                  "norm_g", "out_proj")]
+                  "norm_g", "out_proj",
+                  "act.conv_x", "act.conv_BC", "act.gate")]
 
 
 def padded_vocab(cfg: ArchConfig) -> int:

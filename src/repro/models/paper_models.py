@@ -2,7 +2,9 @@
 
 Used by the reproduction experiments (GLUE/SQuAD/CIFAR proxies in
 ``benchmarks/``) at reduced scale. Every linear / layer-norm / embedding /
-patch-conv goes through the integer layers; softmax/GeLU/pooler-tanh FP32.
+patch-conv goes through the integer layers; softmax/GeLU/pooler-tanh are the
+paper's kept ops — FP32 by default, the iapprox fixed-point forms under
+``kept_ops="integer"`` (DESIGN.md §10).
 """
 from __future__ import annotations
 
@@ -23,7 +25,8 @@ Params = Dict[str, Any]
 
 # Quantization scope paths (resolved against a QuantPolicy at trace time):
 #   BERT: embed, type_embed, embed_ln, blocks.{i}.{ln1, attn.*, ln2,
-#         mlp.{w1,w2}}, head, span_head
+#         mlp.{w1,w2,act}}, pooler (+ pooler.act kept-ops leaf), head,
+#         span_head
 #   ViT:  patch_embed, blocks.{i}.*, final_ln, head
 # Block scopes carry the negative-index alias (blocks.-1 = last layer); a
 # policy resolving differently across block indices splits the encoder scan
@@ -32,7 +35,7 @@ Params = Dict[str, Any]
 _ENC_BLOCK_LEAVES = (["ln1", "ln2"]
                      + ["attn." + n
                         for n in ("wq", "wk", "wv", "wo", "qk", "pv")]
-                     + ["mlp.w1", "mlp.w2"])
+                     + ["mlp.w1", "mlp.w2", "mlp.act"])
 
 
 def bert_config(n_layers=12, d_model=768, n_heads=12, d_ff=3072,
@@ -92,7 +95,7 @@ def _encoder(params, x, cfg, qcfg, key):
 
 def bert_init(key, cfg: ArchConfig, num_labels: int = 2,
               span_head: bool = False) -> Params:
-    ks = jax.random.split(key, 6)
+    ks = jax.random.split(key, 7)
     p = {
         "embed": blocks._init(ks[0], (cfg.vocab, cfg.d_model)),
         "pos_embed": blocks._init(ks[1], (cfg.max_position_embeddings, cfg.d_model)),
@@ -100,11 +103,13 @@ def bert_init(key, cfg: ArchConfig, num_labels: int = 2,
         "embed_ln": blocks.norm_init(cfg),
         "blocks": jax.vmap(lambda k: _enc_block_init(k, cfg))(
             jax.random.split(ks[3], cfg.n_layers)),
+        "pooler": blocks._init(ks[5], (cfg.d_model, cfg.d_model)),
+        "pooler_b": jnp.zeros((cfg.d_model,)),
         "head": blocks._init(ks[4], (cfg.d_model, num_labels)),
         "head_b": jnp.zeros((num_labels,)),
     }
     if span_head:
-        p["span"] = blocks._init(ks[5], (cfg.d_model, 2))
+        p["span"] = blocks._init(ks[6], (cfg.d_model, 2))
     return p
 
 
@@ -123,7 +128,12 @@ def bert_apply(params: Params, tokens: Array, cfg: ArchConfig,
                           subkey(key, -3))
     x = _encoder(params, x, cfg, sc, key)
     if pool:
-        cls = x[:, 0]
+        # BERT pooler: dense + tanh on the CLS token; the tanh is a kept op
+        cls = int_ops.int_linear(x[:, 0], params["pooler"],
+                                 params["pooler_b"], subkey(key, -5),
+                                 sc.leaf("pooler"))
+        cls = int_ops.int_activation(cls, sc.child("pooler").leaf("act"),
+                                     "tanh")
         return int_ops.int_linear(cls, params["head"], params["head_b"],
                                   subkey(key, -4), sc.leaf("head"))
     return int_ops.int_linear(x, params["span"], None, subkey(key, -4),

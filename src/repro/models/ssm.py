@@ -134,12 +134,17 @@ def mamba2_apply(
     """x: (B, S, D) -> (out, new_state).
 
     Integer ops: wz/wx/wBC/wdt/out_proj (int_linear), convs
-    (int_conv1d_depthwise), gated norm (int_rmsnorm). FP32: softplus, SSD
-    recurrence, SiLU gates.
+    (int_conv1d_depthwise), gated norm (int_rmsnorm).  The three SiLU gates
+    route through ``int_ops.int_activation`` under the scope leaves
+    ``act.{conv_x, conv_BC, gate}`` so ``*.ssm.act`` is kept-ops tunable.
+    FP32 by design (exempt from kept-ops swapping): softplus dt and the SSD
+    ``selective_scan`` recurrence — never quantized, same category as the
+    optimizer (see the scope docs in models/lm.py).
     """
     B_, S, D = x.shape
     DI, N, NH, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
     sc = ensure_scope(qcfg)
+    act = sc.child("act")
     z = int_ops.int_linear(x, p["wz"], None, subkey(key, 0), sc.leaf("wz"))
     xi = int_ops.int_linear(x, p["wx"], None, subkey(key, 1), sc.leaf("wx"))
     bc = int_ops.int_linear(x, p["wBC"], None, subkey(key, 2), sc.leaf("wBC"))
@@ -152,14 +157,20 @@ def mamba2_apply(
         ssm_s, cx_s, cbc_s = state
         cx = jnp.concatenate([cx_s, xi], axis=1)
         cbc = jnp.concatenate([cbc_s, bc], axis=1)
-        xi = jax.nn.silu(jnp.einsum("bkc,kc->bc", cx, p["conv_x"]))[:, None]
-        bc = jax.nn.silu(jnp.einsum("bkc,kc->bc", cbc, p["conv_BC"]))[:, None]
+        xi = int_ops.int_activation(
+            jnp.einsum("bkc,kc->bc", cx, p["conv_x"]),
+            act.leaf("conv_x"), "silu")[:, None]
+        bc = int_ops.int_activation(
+            jnp.einsum("bkc,kc->bc", cbc, p["conv_BC"]),
+            act.leaf("conv_BC"), "silu")[:, None]
         new_cx, new_cbc = cx[:, 1:], cbc[:, 1:]
     else:
-        xi = jax.nn.silu(int_ops.int_conv1d_depthwise(
-            xi, p["conv_x"], subkey(key, 4), sc.leaf("conv_x")))
-        bc = jax.nn.silu(int_ops.int_conv1d_depthwise(
-            bc, p["conv_BC"], subkey(key, 5), sc.leaf("conv_BC")))
+        xi = int_ops.int_activation(int_ops.int_conv1d_depthwise(
+            xi, p["conv_x"], subkey(key, 4), sc.leaf("conv_x")),
+            act.leaf("conv_x"), "silu")
+        bc = int_ops.int_activation(int_ops.int_conv1d_depthwise(
+            bc, p["conv_BC"], subkey(key, 5), sc.leaf("conv_BC")),
+            act.leaf("conv_BC"), "silu")
 
     xs = xi.reshape(B_, S, NH, P)
     Bmat, Cmat = bc[..., :N], bc[..., N:]
@@ -176,8 +187,9 @@ def mamba2_apply(
 
     y = y + xs * p["D_skip"][None, None, :, None]
     y = y.reshape(B_, S, DI)
-    y = int_ops.int_rmsnorm(y * jax.nn.silu(z), p["norm_g"], subkey(key, 6),
-                            sc.leaf("norm_g"))
+    y = int_ops.int_rmsnorm(
+        y * int_ops.int_activation(z, act.leaf("gate"), "silu"),
+        p["norm_g"], subkey(key, 6), sc.leaf("norm_g"))
     return int_ops.int_linear(y, p["out_proj"], None, subkey(key, 7),
                               sc.leaf("out_proj")), new_state
 

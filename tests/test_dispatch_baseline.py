@@ -63,6 +63,9 @@ def test_baseline_pins_mixed_policy_dispatch_parity():
     here so the two views can't drift apart silently."""
     pol = _baseline()["policy"]
     assert pol["bert_step_int8_embed16"] == pol["bert_step_int8"]
+    # integer kept ops: the swaps are in-kernel / XLA-level — the pinned
+    # counts are IDENTICAL to the FP32-kept int8 step (ISSUE 10 acceptance)
+    assert pol["bert_step_int8_keptint"] == pol["bert_step_int8"]
     int8, fl16 = pol["bert_step_int8"], pol["bert_step_int8_firstlast16"]
     assert fl16["traced"] >= int8["traced"]
     assert fl16["effective"] == int8["effective"]

@@ -1,0 +1,207 @@
+"""kept_ops="integer" acceptance (DESIGN.md §10).
+
+The ISSUE-10 acceptance criterion, as tier-1 tests: with
+``kept_ops="integer"`` the traced forward jaxpr of the paper's BERT subject
+contains NO exp/erf/logistic/tanh/rsqrt primitive outside a ``pallas_call``
+(quantlint QL008), the swap is invisible to the dispatch budget (asserted in
+``test_dispatch_baseline.py``), the integer activation entry is bit-identical
+across backends per the house contract, and an end-to-end ``jax.grad`` under
+integer kept ops tracks FP32 with bits-monotone error.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import rules
+from repro.core import int_ops
+from repro.core.qconfig import PRESETS, QuantConfig
+from repro.models import paper_models as pm
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _bert():
+    cfg = pm.bert_config(n_layers=2, d_model=64, n_heads=2, d_ff=128,
+                         vocab=128, name="bert-tiny")
+    params = pm.bert_init(jax.random.PRNGKey(1), cfg)
+    toks = np.asarray(jax.random.randint(KEY, (2, 16), 0, cfg.vocab))
+    return cfg, params, toks
+
+
+def _cfg(backend, kept):
+    return QuantConfig(weight_bits=8, act_bits=12, grad_bits=8,
+                       stochastic_grad=False, backend=backend, kept_ops=kept)
+
+
+# =========================================================================
+# the acceptance criterion: QL008-clean BERT forward
+# =========================================================================
+
+@pytest.mark.parametrize("backend", ["sim", "pallas"])
+def test_bert_fwd_jaxpr_is_ql008_clean_under_integer_kept_ops(backend):
+    cfg, params, toks = _bert()
+    q = _cfg(backend, "integer")
+    jx = jax.make_jaxpr(
+        lambda p, t: pm.bert_apply(p, t, cfg, q, None))(params, toks)
+    assert rules.check_kept_ops(jx) == []
+
+
+@pytest.mark.parametrize("backend", ["sim", "pallas"])
+def test_bert_fp32_kept_control_trips_ql008(backend):
+    """The same trace with FP32 kept ops DOES contain kept primitives — the
+    clean run above is evidence of the swap, not of a blind rule."""
+    cfg, params, toks = _bert()
+    q = _cfg(backend, "fp32")
+    jx = jax.make_jaxpr(
+        lambda p, t: pm.bert_apply(p, t, cfg, q, None))(params, toks)
+    found = {f.message.split(" ")[0] for f in rules.check_kept_ops(jx)}
+    assert "tanh" in found                      # gelu tanh-form + pooler
+    if backend == "sim":
+        assert {"exp", "rsqrt"} <= found        # sim softmax + norm rsqrt
+
+
+def test_bert_grad_jaxpr_integer_kept_ops_flags_only_the_loss_softmax():
+    """The backward under integer kept ops is iapprox-built (custom_vjp), so
+    the only kept primitive in the whole grad trace is the loss head's
+    ``log_softmax`` exp — training-only, outside the paper's kept-ops set."""
+    cfg, params, toks = _bert()
+    q = _cfg("sim", "integer")
+    batch = {"tokens": toks, "labels": np.zeros((2,), np.int64)}
+    jx = jax.make_jaxpr(jax.grad(
+        lambda p: pm.bert_cls_loss(p, batch, cfg, q, None)[0]))(params)
+    prims = {f.message.split(" ")[0] for f in rules.check_kept_ops(jx)}
+    assert prims <= {"exp"}, prims
+
+
+# =========================================================================
+# backend bit-identity / parity
+# =========================================================================
+
+@pytest.mark.parametrize("preset", PRESETS)
+@pytest.mark.parametrize("kind", ["gelu", "silu", "tanh"])
+def test_int_activation_bit_identical_across_backends(preset, kind):
+    """House contract: the sim trace IS the pallas-path computation for the
+    activation entry — identical deterministic integer arithmetic, so the
+    outputs are bit-equal at every preset, forward and backward."""
+    x = jax.random.normal(KEY, (4, 64)) * 3.0
+    outs, grads = [], []
+    for backend in ("sim", "pallas"):
+        cfg = dataclasses.replace(QuantConfig.preset(preset),
+                                  stochastic_grad=False, backend=backend,
+                                  kept_ops="integer")
+        outs.append(np.asarray(int_ops.int_activation(x, cfg, kind)))
+        grads.append(np.asarray(jax.grad(
+            lambda t: int_ops.int_activation(t, cfg, kind).sum())(x)))
+    np.testing.assert_array_equal(outs[0], outs[1])
+    np.testing.assert_array_equal(grads[0], grads[1])
+
+
+def test_norms_and_attention_parity_under_integer_kept_ops():
+    """Swapping rsqrt/exp for the iapprox forms must not widen the
+    sim-vs-pallas gap: parity stays within the same 1e-4 relative band the
+    FP32-kept backends hold (test_backend_parity.py)."""
+    x = jax.random.normal(KEY, (2, 8, 64))
+    gam, bet = jnp.ones((64,)), jnp.zeros((64,))
+    pairs = {}
+    for backend in ("sim", "pallas"):
+        c = _cfg(backend, "integer")
+        pairs[backend] = (
+            np.asarray(int_ops.int_layernorm(x, gam, bet, None, c)),
+            np.asarray(int_ops.int_rmsnorm(x, gam, None, c)))
+    for a, b in zip(pairs["sim"], pairs["pallas"]):
+        assert np.abs(a - b).max() / (np.abs(a).max() + 1e-12) < 1e-4
+
+    q = jax.random.normal(jax.random.fold_in(KEY, 1), (2, 16, 2, 2, 16))
+    k = jax.random.normal(jax.random.fold_in(KEY, 2), (2, 16, 2, 16))
+    v = jax.random.normal(jax.random.fold_in(KEY, 3), (2, 16, 2, 16))
+    outs = []
+    for backend in ("sim", "pallas"):
+        c = _cfg(backend, "integer")
+        outs.append(np.asarray(
+            int_ops.int_attention(q, k, v, 0, None, c, c, True, None)))
+    assert np.abs(outs[0] - outs[1]).max() \
+        / (np.abs(outs[0]).max() + 1e-12) < 1e-4
+
+
+def test_integer_kept_ops_close_to_fp32_kept_per_op():
+    """The swapped layers track their FP32-kept form within the iapprox
+    bounds — the approximation changes values by ~1e-4·scale, not by a
+    quantization step."""
+    x = jax.random.normal(KEY, (2, 8, 64))
+    gam, bet = jnp.ones((64,)), jnp.zeros((64,))
+    ci, cf = _cfg("sim", "integer"), _cfg("sim", "fp32")
+    for fn in (lambda c: int_ops.int_layernorm(x, gam, bet, None, c),
+               lambda c: int_ops.int_rmsnorm(x, gam, None, c)):
+        a, b = np.asarray(fn(ci)), np.asarray(fn(cf))
+        assert np.abs(a - b).max() < 2e-3, np.abs(a - b).max()
+
+
+# =========================================================================
+# e2e gradient quality: bits-monotone error vs FP32
+# =========================================================================
+
+def _grad_err(q, cfg, params, batch, g_fp32):
+    g = jax.grad(lambda p: pm.bert_cls_loss(p, batch, cfg, q, None)[0])(
+        params)
+    num = den = 0.0
+    for a, b in zip(jax.tree_util.tree_leaves(g),
+                    jax.tree_util.tree_leaves(g_fp32)):
+        num += float(jnp.sum((a - b) ** 2))
+        den += float(jnp.sum(b ** 2))
+    return (num / max(den, 1e-30)) ** 0.5
+
+
+def test_e2e_grad_vs_fp32_bits_monotone_under_integer_kept_ops():
+    cfg, params, toks = _bert()
+    batch = {"tokens": toks, "labels": np.zeros((2,), np.int64)}
+    g_fp32 = jax.grad(lambda p: pm.bert_cls_loss(
+        p, batch, cfg, QuantConfig.fp32(), None)[0])(params)
+    errs = {}
+    for bits in (8, 16):
+        q = QuantConfig(weight_bits=bits, act_bits=max(bits, 12),
+                        grad_bits=bits, stochastic_grad=False,
+                        backend="sim", kept_ops="integer")
+        errs[bits] = _grad_err(q, cfg, params, batch, g_fp32)
+    # integer kept ops still train: grads point the same way as FP32...
+    assert errs[16] < 0.5 and errs[8] < 1.0, errs
+    # ...and more mantissa bits mean closer-to-FP32 gradients (10% slack —
+    # the iapprox error floor is bits-independent)
+    assert errs[16] <= errs[8] * 1.10, errs
+
+
+# =========================================================================
+# config plumbing
+# =========================================================================
+
+def test_repro_kept_ops_env_default(monkeypatch):
+    monkeypatch.setenv("REPRO_KEPT_OPS", "integer")
+    assert QuantConfig.int8().kept_ops == "integer"
+    monkeypatch.delenv("REPRO_KEPT_OPS")
+    assert QuantConfig.int8().kept_ops == "fp32"
+    with pytest.raises(ValueError):
+        QuantConfig(kept_ops="int")
+
+
+def test_kept_ops_resolves_per_scope_through_policy():
+    from repro.core.qpolicy import QuantPolicy, ScopeRule
+    base = dataclasses.replace(QuantConfig.int8(), kept_ops="fp32")
+    pol = QuantPolicy(base=base, rules=(
+        ScopeRule("blocks.*.mlp.act", (("kept_ops", "integer"),)),))
+    assert pol.resolve(("blocks.0.mlp.act",)).kept_ops == "integer"
+    assert pol.resolve(("blocks.0.mlp.wd",)).kept_ops == "fp32"
+
+
+def test_disabled_config_keeps_stock_float_ops():
+    """kept_ops is only meaningful with enabled=True: the FP32 baseline
+    keeps the stock primitives even if the field says integer."""
+    cfg = dataclasses.replace(QuantConfig.fp32(), kept_ops="integer")
+    x = jax.random.normal(KEY, (4, 16))
+    np.testing.assert_array_equal(
+        np.asarray(int_ops.int_activation(x, cfg, "gelu")),
+        np.asarray(jax.nn.gelu(x)))
+    jx = jax.make_jaxpr(lambda t: int_ops.int_activation(t, cfg, "tanh"))(x)
+    assert any(f.message.startswith("tanh")
+               for f in rules.check_kept_ops(jx))

@@ -359,6 +359,65 @@ def test_ql007_plain_f32_gather_without_qtensor_form_is_clean():
 
 
 # =========================================================================
+# QL008 — kept-op escape
+# =========================================================================
+
+def test_ql008_flags_every_kept_prim_escape():
+    """Golden broken fixture: all five kept transcendentals on real data
+    outside any kernel — exactly QL008, one finding per primitive."""
+    def broken(x):
+        return (jnp.exp(x) + jax.lax.erf(x) + jax.nn.sigmoid(x)
+                + jnp.tanh(x) + jax.lax.rsqrt(jnp.abs(x) + 1.0))
+    f = rules.check_kept_ops(jax.make_jaxpr(broken)(jnp.ones((8,))))
+    assert _codes(f) == ["QL008"]
+    prims = sorted(x.message.split(" ")[0] for x in f)
+    assert prims == ["erf", "exp", "logistic", "rsqrt", "tanh"]
+
+
+def test_ql008_exempts_iota_constant_tables():
+    """Rope builds its frequency table as ``exp`` over scaled iota — a
+    data-independent constant, not an escaped kept op."""
+    def rope_table(x):
+        freqs = jnp.exp(jnp.arange(8, dtype=jnp.float32) * -0.3)
+        return x * jnp.cos(freqs)[None, :]
+    assert not rules.check_kept_ops(
+        jax.make_jaxpr(rope_table)(jnp.ones((4, 8))))
+
+
+def test_ql008_integer_kept_ops_graph_is_clean():
+    """The iapprox forms trace to shifts/multiplies/exact exp2 scalings —
+    no kept primitive appears, so the swapped graph is silent."""
+    from repro.core import iapprox
+    def swapped(x):
+        return (iapprox.i_exp(x) + iapprox.i_gelu(x) + iapprox.i_silu(x)
+                + iapprox.i_tanh(x) + iapprox.i_rsqrt(jnp.abs(x) + 1.0)
+                + iapprox.i_softmax(x))
+    assert not rules.check_kept_ops(jax.make_jaxpr(swapped)(jnp.ones((8,))))
+
+
+def test_ql008_gated_on_policy_kept_ops():
+    """run_rules only activates QL008 when the policy carries
+    ``kept_ops="integer"`` somewhere — an FP32-kept trace legitimately
+    keeps its float transcendentals."""
+    jx = jax.make_jaxpr(lambda x: jnp.tanh(x))(jnp.ones((4,)))
+    fp32_base = dataclasses.replace(QuantConfig.int8(), kept_ops="fp32")
+    fp32_pol = QuantPolicy(base=fp32_base)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        int_base = QuantPolicy(base=dataclasses.replace(
+            fp32_base, kept_ops="integer"))
+        int_rule = QuantPolicy(base=fp32_base, rules=(
+            ScopeRule("blocks.*", (("kept_ops", "integer"),)),))
+    assert "QL008" not in _codes(rules.run_rules(jx, policy=fp32_pol))
+    assert "QL008" in _codes(rules.run_rules(jx, policy=int_base))
+    assert "QL008" in _codes(rules.run_rules(
+        jx, policy=int_rule, resolutions=[("blocks.0.mlp.act",)]))
+    # explicit override beats the policy-derived gate
+    assert "QL008" not in _codes(rules.run_rules(
+        jx, policy=int_base, kept_ops=False))
+
+
+# =========================================================================
 # clean-graph acceptance (the full config × preset sweep runs in CI via
 # ``python -m repro.analysis.lint --config all --preset all``)
 # =========================================================================

@@ -1,4 +1,5 @@
 """Serving engine: generation correctness and continuous batching."""
+import dataclasses
 import time
 
 import jax
@@ -8,6 +9,7 @@ import pytest
 
 from repro.configs import registry
 from repro.core.qconfig import QuantConfig
+from repro.core.qpolicy import QuantPolicy, ScopeRule
 from repro.models import lm
 from repro.serve.engine import (ContinuousBatcher, Engine, QueueFull,
                                ServeConfig)
@@ -269,3 +271,53 @@ def test_poisoned_slot_cache_row_reset():
     solo = ContinuousBatcher(_engine(slots=1)[0])
     rs = solo.submit(np.array([3, 4, 5]), 4)
     np.testing.assert_array_equal(results[r2], solo.run_until_drained()[rs])
+
+
+# =========================================================================
+# kept-ops at serve time (DESIGN.md §10)
+# =========================================================================
+
+def _kept_engines(kept_qcfg):
+    """Two engines over the SAME weights: int8 with FP32 kept ops vs the
+    given kept-ops qcfg (config or policy)."""
+    cfg = registry.get_config("smollm-135m").reduced()
+    params = lm.lm_init(KEY, cfg)
+    scfg = ServeConfig(max_seq=64, batch_slots=2)
+    base = dataclasses.replace(QuantConfig.int8(), stochastic_grad=False)
+    return (Engine(params, cfg, base, scfg),
+            Engine(params, cfg, kept_qcfg, scfg), cfg)
+
+
+def test_decode_parity_integer_kept_ops():
+    """Serving with kept_ops="integer" swaps softmax-exp / SiLU / rsqrt for
+    their iapprox forms inside the jitted decode step.  Greedy decode must
+    stay within a token-divergence budget of the FP32-kept engine: the
+    approximations move logits by ~1e-3, not by a quantization step, so at
+    most a near-tie argmax may flip."""
+    q_int = dataclasses.replace(QuantConfig.int8(), stochastic_grad=False,
+                                kept_ops="integer")
+    eng_fp, eng_int, cfg = _kept_engines(q_int)
+    prompts = np.asarray(jax.random.randint(KEY, (2, 8), 0, cfg.vocab))
+    out_fp = eng_fp.generate(prompts, 6)
+    out_int = eng_int.generate(prompts, 6)
+    assert out_fp.shape == out_int.shape == (2, 6)
+    match = float(np.mean(out_fp == out_int))
+    assert match >= 0.75, (match, out_fp, out_int)
+    # and the integer-kept engine is itself deterministic
+    np.testing.assert_array_equal(out_int, eng_int.generate(prompts, 6))
+
+
+def test_decode_kept_ops_policy_flows_through_serve_jits():
+    """A path-scoped QuantPolicy carrying kept_ops="integer" works through
+    the jitted prefill/decode entry points identically to the bare config —
+    the rules below cover every kept-op scope the decode trace touches."""
+    base = dataclasses.replace(QuantConfig.int8(), stochastic_grad=False)
+    pol = QuantPolicy(base=base, rules=(
+        ScopeRule("*", (("kept_ops", "integer"),)),))
+    q_int = dataclasses.replace(base, kept_ops="integer")
+    eng_fp, eng_pol, cfg = _kept_engines(pol)
+    eng_int = Engine(eng_fp.params, cfg, q_int,
+                     ServeConfig(max_seq=64, batch_slots=2))
+    prompts = np.asarray(jax.random.randint(KEY, (2, 8), 0, cfg.vocab))
+    np.testing.assert_array_equal(eng_pol.generate(prompts, 6),
+                                  eng_int.generate(prompts, 6))
